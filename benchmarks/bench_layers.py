@@ -1,0 +1,106 @@
+"""P2 — frequency-based layer reduction (paper §3).
+
+Claims measured:
+  (a) average layer number: frequency-weighted Σ f_i·L_i / Σ f_i for the
+      conventional stack (all functions at L2) vs the tiered stack.
+  (b) per-tier cost is real: wrapper python-dispatch µs and the extra HLO
+      ops the checked/full tiers insert (sanitize guard, fences).
+  (c) invocation-frequency table from tracing a real train step — the
+      statistic the paper says should drive placement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, hlo_op_counts, time_python
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        layers, registry, scan_step, topology_from_mesh_shape)
+
+
+def run() -> list:
+    tables = []
+    topo = topology_from_mesh_shape(("data",), (16,))
+
+    # (c) measured frequencies from a real (reduced) composed train step,
+    # traced over an ABSTRACT (4, 2) mesh — nothing is allocated, but the
+    # shard_map collectives appear as jaxpr primitives the scanner counts.
+    from jax.sharding import AbstractMesh, AxisType
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+    from repro.train import TrainCfg, make_train_state, make_train_step
+    cfg = get_config("qwen3-moe-30b-a3b", reduced=True)
+    model = build_model(cfg)
+    opt = make_optimizer("adamw")
+    tcfg = TrainCfg(sync_mode="composed", data_axes=("data",))
+    state = make_train_state(model, opt, abstract=True, cfg=tcfg)
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+    amesh = AbstractMesh((4, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    probe_eng = CollectiveEngine(
+        topology_from_mesh_shape(("data", "model"), (4, 2)),
+        library=compose_library(registry.ALL_FUNCTIONS),
+        config=EngineConfig(mode="composed"))
+    with jax.sharding.use_abstract_mesh(amesh):
+        report = scan_step(
+            make_train_step(model, opt, tcfg, mesh=amesh, engine=probe_eng),
+            state, batch)
+    freqs = {fn: c * 1e4 for fn, c in report.frequencies().items()}
+    tf = Table("bench_layers: traced invocation frequencies "
+               "(composed train step, x1e4 steps/run)",
+               ["function", "calls/step", "bytes/step", "assigned tier"])
+    tiers = layers.assign_tiers({**registry.DEFAULT_FREQUENCIES, **freqs})
+    per_step = report.frequencies()
+    for fn, f in sorted(per_step.items(), key=lambda kv: -kv[1]):
+        tf.add(fn, int(f), report.bytes_by_function().get(fn, 0),
+               layers.TIER_NAMES[tiers.get(fn, 2)])
+    tables.append(tf)
+
+    # (a) average layer numbers
+    t = Table("bench_layers (paper §3: avg layer number)",
+              ["stack", "avg layer", "hot fn tier", "cold fn tier"])
+    eng = CollectiveEngine(topo, library=compose_library(
+        registry.ALL_FUNCTIONS), frequencies=freqs or None,
+        config=EngineConfig())
+    mono = CollectiveEngine.monolithic(topo)
+    t.add("conventional (Fig 1-A)", f"{mono.average_layer_number():.3f}",
+          f"L{mono.tier('all_reduce')}", f"L{mono.tier('init')}")
+    t.add("frequency-tiered (Fig 1-B)", f"{eng.average_layer_number():.3f}",
+          f"L{eng.tier('all_reduce')}", f"L{eng.tier('init')}")
+    tables.append(t)
+
+    # (b) per-tier real cost
+    tb = Table("bench_layers: per-tier wrapper cost",
+               ["tier", "python us/call (trace)", "extra HLO ops"])
+    stats = layers.CommStats()
+    base = lambda x, ax: jax.lax.psum(x, ax)
+    x = np.zeros((8, 1024), np.float32)
+    for tier in range(4):
+        wrapped = layers.wrap_tier("all_reduce", tier, base, stats,
+                                   sanitize=True)
+        us = time_python(
+            lambda w=wrapped: jax.eval_shape(
+                lambda a: jax.vmap(lambda b: w(b, "x"), axis_name="x")(a),
+                jax.ShapeDtypeStruct((8, 1024), jnp.float32)),
+            repeat=30)
+        ops = hlo_op_counts(
+            lambda a, w=wrapped: jax.vmap(lambda b: w(b, "x"),
+                                          axis_name="x")(a), x)
+        extra = sum(v for k, v in ops.items() if k != "all-reduce")
+        tb.add(layers.TIER_NAMES[tier], f"{us:.0f}", extra)
+    tables.append(tb)
+    return tables
+
+
+def main():
+    for t in run():
+        t.print()
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Shared benchmark helpers (single CPU host; timings are trace/dispatch
+and HLO-structure measurements, roofline terms come from the dry-run)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+
+def time_python(fn: Callable, repeat: int = 200, warmup: int = 5) -> float:
+    """Median wall µs of a Python-level call (dispatch/trace cost)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter_ns()
+        fn()
+        ts.append((time.perf_counter_ns() - t0) / 1e3)
+    return float(np.median(ts))
+
+
+def time_jitted(fn: Callable, *args, repeat: int = 20) -> float:
+    """Median wall µs of an already-compiled jitted call."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter_ns()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter_ns() - t0) / 1e3)
+    return float(np.median(ts))
+
+
+def hlo_op_counts(fn: Callable, *args) -> Dict[str, int]:
+    """Count op kinds in the optimized HLO of ``fn`` (+ 'total')."""
+    import re
+    from collections import Counter
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    ops = Counter(re.findall(r"= \S+ ([\w\-]+)\(", txt))
+    out = dict(ops)
+    out["total"] = sum(ops.values())
+    return out
+
+
+class Table:
+    def __init__(self, title: str, columns: List[str]):
+        self.title = title
+        self.columns = columns
+        self.rows: List[List] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def render(self) -> str:
+        widths = [max(len(str(c)), *(len(str(r[i])) for r in self.rows))
+                  if self.rows else len(str(c))
+                  for i, c in enumerate(self.columns)]
+        def fmt(row):
+            return "  ".join(str(v).ljust(w) for v, w in zip(row, widths))
+        lines = [f"== {self.title} ==", fmt(self.columns),
+                 fmt(["-" * w for w in widths])]
+        lines += [fmt(r) for r in self.rows]
+        return "\n".join(lines)
+
+    def print(self):
+        print(self.render(), flush=True)
+        return self

@@ -1,0 +1,90 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.experiments_md > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+
+from benchmarks.roofline_report import load_records, roofline_terms
+
+
+def gb(x) -> str:
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | devs | kind | mem/dev CPU-meas (GiB) | "
+        "mem/dev TPU-est (GiB) | fits 16GB | FLOPs/dev | HBM B/dev | "
+        "wire B/dev | collectives | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        an = r["analysis"]
+        mem = r["memory"]
+        at = mem.get("analytic_tpu")
+        colls = ", ".join(f"{k}:{int(v['count'])}"
+                          for k, v in sorted(an["collectives"].items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['devices']} "
+            f"| {r['meta']['kind']} "
+            f"| {gb(mem['peak_per_device_cpu_measured'])} "
+            f"| {gb(at['total']) if at else '—'} "
+            f"| {'✓' if mem['fits_16gb'] else '✗'} "
+            f"| {an['flops']:.2e} | {an['hbm_bytes']:.2e} "
+            f"| {an['wire_bytes']:.2e} | {colls} "
+            f"| {r['seconds_compile']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        t = roofline_terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} "
+            f"| {t['memory_s']:.3e} | {t['collective_s']:.3e} "
+            f"| **{t['dominant']}** | {t['useful_ratio']:.2f} "
+            f"| {100 * t['roofline_fraction']:.1f}% |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs) -> str:
+    singles = [r for r in recs if r["mesh"] == "single"]
+    worst = min(singles, key=lambda r: roofline_terms(r)["roofline_fraction"])
+    coll = max(singles, key=lambda r: roofline_terms(r)["collective_s"]
+               / max(roofline_terms(r)["bound_s"], 1e-12)
+               if roofline_terms(r)["dominant"] == "collective" else
+               roofline_terms(r)["collective_s"])
+    return (f"- worst roofline fraction: **{worst['arch']} "
+            f"{worst['shape']}** "
+            f"({100 * roofline_terms(worst)['roofline_fraction']:.1f}%)\n"
+            f"- most collective-bound: **{coll['arch']} {coll['shape']}**\n"
+            f"- technique-representative: **deepseek-v3-671b train_4k** "
+            f"(EP MoE + DP grad sync)")
+
+
+def main():
+    recs = load_records()
+    print("## §Dry-run matrix\n")
+    print(dryrun_table(recs))
+    print(f"\ncells OK: {len(recs)}\n")
+    for mesh in ("single", "multi"):
+        print(f"\n## §Roofline ({mesh})\n")
+        print(roofline_table(recs, mesh))
+    print("\n## hillclimb candidates\n")
+    print(pick_hillclimb(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark entry point: one bench per paper claim + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-subprocess]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-subprocess", action="store_true",
+                    help="skip the 8-device subprocess benches")
+    ap.add_argument("--only", default="",
+                    help="comma list: composable,layers,protocols,e2e,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = 0
+
+    def section(name, fn):
+        nonlocal failures
+        key = name.split(" ")[0]
+        if only and key not in only:
+            return
+        print(f"\n{'=' * 72}\n# {name}\n{'=' * 72}", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+
+    from benchmarks import (bench_composable, bench_e2e, bench_layers,
+                            bench_protocols, roofline_report)
+
+    section("composable (P1, paper §2)", bench_composable.main)
+    section("layers (P2, paper §3)", bench_layers.main)
+    if args.skip_subprocess:
+        section("protocols (P3, paper §4)", lambda: [
+            t.print() or print() for t in bench_protocols.run()[:-1]])
+    else:
+        section("protocols (P3, paper §4)", bench_protocols.main)
+        section("e2e (P1+P2+P3, paper §5)", bench_e2e.main)
+    section("roofline (from dry-run artifacts)", roofline_report.main)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Beyond-paper: pipeline parallelism over the (slow) cross-pod axis.
+
+The engine's p2p protocol (`core/protocols/pipeline.py`) schedules a
+GPipe-style microbatch pipeline with one `ppermute` hop per tick — on the
+production mesh the "pod" axis would carry only stage boundaries
+((B_micro, S, D) per tick) over DCN instead of data-parallel gradient
+all-reduces (2x params per step), trading DCN bandwidth for bubble time.
+
+This example runs the pipeline on emulated devices and prints the
+bubble/traffic arithmetic for the production mesh.
+
+    PYTHONPATH=src python examples/pipeline_parallel.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+
+from repro.core.protocols import pipeline
+
+
+def main():
+    p = 4                    # pipeline stages (one per device here)
+    n_micro = 8
+    d = 64
+
+    mesh = jax.make_mesh((p,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.RandomState(0)
+    stage_w = jnp.asarray(rng.randn(p, d, d).astype(np.float32) * 0.1)
+    micro = jnp.asarray(rng.randn(n_micro, 16, d).astype(np.float32))
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(P("stage"), P()),
+             out_specs=P(), check_vma=False)
+    def run(w, mb):
+        out = pipeline.gpipe_forward(stage_fn, w[0], mb, "stage")
+        # only the last stage's buffer is meaningful; broadcast it
+        last = jax.lax.psum(
+            jnp.where(jax.lax.axis_index("stage") == p - 1, out, 0.0),
+            "stage")
+        return last
+
+    out = jax.jit(run)(stage_w, micro)
+
+    # reference: sequential through all stages
+    ref = micro
+    for s in range(p):
+        ref = stage_fn(stage_w[s], ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    print(f"pipeline({p} stages, {n_micro} microbatches) == sequential  OK")
+
+    bubble = (p - 1) / (n_micro + p - 1)
+    print(f"bubble fraction: {bubble:.1%}")
+
+    # production-mesh arithmetic: 2 pods as 2 pipeline stages over DCN
+    params_b = 340e9 * 2                   # nemotron-class, bf16
+    act_b = 2 * 4096 * 18432 * 2           # one microbatch boundary
+    dp_bytes = 2 * params_b / 2            # grad all-reduce over 2 pods
+    pp_bytes = 2 * 8 * act_b               # fwd+bwd boundaries, 8 micro
+    print(f"cross-pod DCN traffic/step: data-parallel {dp_bytes/1e9:.0f} GB "
+          f"vs pipeline {pp_bytes/1e9:.2f} GB "
+          f"({dp_bytes/pp_bytes:,.0f}x less) at {bubble:.0%} bubble cost")
+
+
+if __name__ == "__main__":
+    main()

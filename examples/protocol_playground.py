@@ -1,0 +1,52 @@
+"""Protocol playground: inspect the paper's per-function protocol
+selection on your mesh topology, and force alternatives.
+
+    PYTHONPATH=src python examples/protocol_playground.py
+"""
+
+import numpy as np
+
+from repro.core import costmodel, topology_from_mesh_shape
+from repro.core.costmodel import crossover_bytes
+
+
+def main():
+    topo = topology_from_mesh_shape(("pod", "data", "model"), (2, 16, 16))
+    print("topology:", topo.describe(), "\n")
+
+    print("protocol crossovers for all_reduce over the ICI 'data' axis:")
+    for proto, (lo, hi) in sorted(
+            crossover_bytes("all_reduce", topo, "data").items(),
+            key=lambda kv: kv[1][0]):
+        print(f"  {proto:<22s} wins [{lo:>14,.0f} B .. {hi:>14,.0f} B]")
+
+    print("\nper-size winners across functions (data axis, p=16):")
+    header = f"{'bytes':>12s} | " + " | ".join(
+        f"{c:^18s}" for c in ("all_reduce", "all_gather", "all_to_all"))
+    print(header)
+    print("-" * len(header))
+    for nbytes in (1 << 10, 1 << 16, 1 << 22, 1 << 28):
+        row = [f"{nbytes:>12,d}"]
+        for coll in ("all_reduce", "all_gather", "all_to_all"):
+            c = costmodel.choose_protocol(coll, nbytes, topo, "data")
+            row.append(f"{c.protocol:^18s}")
+        print(" | ".join(row))
+
+    print("\nsame message on the DCN 'pod' axis (p=2, 10us alpha):")
+    for nbytes in (1 << 10, 1 << 22, 1 << 30):
+        c = costmodel.choose_protocol("all_reduce", nbytes, topo, "pod")
+        print(f"  {nbytes:>14,d} B -> {c.protocol:<20s} "
+              f"(~{c.est_seconds * 1e6:,.1f} us)")
+
+    print("\nhierarchical cross-pod all-reduce vs flat ring (1 GiB):")
+    n = 1 << 30
+    flat = costmodel.cost_allreduce_ring(n, topo, "pod")
+    hier = costmodel.cost_allreduce_hierarchical(n, topo,
+                                                 ("data", "model"), "pod")
+    print(f"  flat DCN ring:   {flat * 1e3:8.2f} ms")
+    print(f"  hierarchical:    {hier * 1e3:8.2f} ms  "
+          f"({flat / hier:.1f}x faster, DCN bytes /256)")
+
+
+if __name__ == "__main__":
+    main()

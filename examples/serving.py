@@ -1,0 +1,57 @@
+"""Serving example: continuous batching over a reduced MoE model, with a
+deepseek-style MLA model to show the compressed-cache decode path.
+
+    PYTHONPATH=src python examples/serving.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import BatchScheduler, Request, ServeCfg, generate
+
+
+def main():
+    rng = np.random.RandomState(0)
+
+    # --- continuous batching on a GQA decoder --------------------------
+    cfg = get_config("qwen2-72b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = BatchScheduler(model, params,
+                           ServeCfg(max_len=96, batch=4,
+                                    cache_dtype=jnp.float32))
+    t0 = time.time()
+    for rid in range(10):
+        prompt = rng.randint(0, cfg.vocab_size,
+                             size=rng.randint(4, 20)).tolist()
+        sched.submit(Request(rid=rid, prompt=prompt, max_new=16))
+    done = sched.run()
+    dt = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"[continuous batching] {len(done)} requests, {toks} tokens "
+          f"in {dt:.2f}s ({toks / dt:.1f} tok/s, 4 slots)")
+
+    # --- MLA absorbed-decode (compressed KV cache) ----------------------
+    cfg = get_config("deepseek-v3-671b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 12)), jnp.int32)
+    out = generate(model, params, prompts, max_new=8,
+                   cfg=ServeCfg(max_len=64, batch=2,
+                                cache_dtype=jnp.float32))
+    # cache footprint comparison: latent (kv_lora + dh_rope) vs dense H*Dh
+    mla = cfg.mla
+    latent = mla.kv_lora + mla.dh_rope
+    dense = 2 * mla.num_heads * mla.dh_v
+    print(f"[MLA decode] generated {out.shape[1] - prompts.shape[1]} tokens"
+          f"/seq; cache = {latent} floats/token/layer vs {dense} for dense "
+          f"MHA ({dense / latent:.0f}x smaller)")
+
+
+if __name__ == "__main__":
+    main()

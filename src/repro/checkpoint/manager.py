@@ -1,0 +1,178 @@
+"""Sharded, atomic, async checkpointing with restore-time resharding.
+
+Layout:  <dir>/step_00000042/  leaf_00000.bin ... manifest.json
+Writes go to ``step_X.tmp`` and are renamed only after fsync — a killed
+run never leaves a half checkpoint visible, so restore always finds a
+consistent latest step (fault-tolerance contract).
+
+Async mode snapshots to host (``jax.device_get`` — a consistent cut, the
+device buffers are immutable) and writes on a background thread, so the
+training loop only blocks for the D2H copy, not the filesystem.
+
+Restore reshards: leaves are placed with the *target* mesh's
+NamedShardings, so a checkpoint from a 256-chip run restores onto any
+other healthy mesh (elastic re-mesh after failures).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_DTYPE_ALIASES = {"bfloat16": "bfloat16"}
+
+
+def _to_numpy_bytes(arr) -> tuple:
+    np_arr = np.asarray(arr)
+    return np_arr.tobytes(), str(np_arr.dtype), list(np_arr.shape)
+
+
+def _from_bytes(buf: bytes, dtype: str, shape) -> np.ndarray:
+    if dtype == "bfloat16":
+        import ml_dtypes
+        dt = ml_dtypes.bfloat16
+    else:
+        dt = np.dtype(dtype)
+    return np.frombuffer(buf, dtype=dt).reshape(shape)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    async_: bool = False) -> "Optional[threading.Thread]":
+    """Write ``tree`` as checkpoint ``step``.  With ``async_=True`` the
+    filesystem work happens on a returned daemon thread (already started);
+    join it to guarantee durability."""
+    os.makedirs(directory, exist_ok=True)
+    host_tree = jax.device_get(tree)        # consistent snapshot
+
+    def write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree_util.tree_flatten(host_tree)
+        manifest = {"step": step, "num_leaves": len(leaves),
+                    "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            buf, dtype, shape = _to_numpy_bytes(leaf)
+            fname = f"leaf_{i:05d}.bin"
+            with open(os.path.join(tmp, fname), "wb") as f:
+                f.write(buf)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"].append(
+                {"file": fname, "dtype": dtype, "shape": shape})
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)               # atomic publish
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name[5:]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, abstract_tree: Any,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    """Load a checkpoint into the structure of ``abstract_tree``.
+
+    ``shardings``: optional matching tree of NamedShardings — leaves are
+    device_put with them (resharding onto a different mesh is free here).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_meta = manifest["leaves"]
+    abs_leaves, treedef = jax.tree_util.tree_flatten(abstract_tree)
+    if len(abs_leaves) != len(leaves_meta):
+        raise ValueError(
+            f"checkpoint has {len(leaves_meta)} leaves, expected "
+            f"{len(abs_leaves)} — structure changed since save")
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(abs_leaves))
+    out = []
+    for meta, ref, sh in zip(leaves_meta, abs_leaves, shard_leaves):
+        with open(os.path.join(path, meta["file"]), "rb") as f:
+            arr = _from_bytes(f.read(), meta["dtype"], meta["shape"])
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{meta['file']}: shape {arr.shape} != "
+                             f"expected {ref.shape}")
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Every-N-steps async checkpointing with retention."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3,
+                 async_: bool = True):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+        self.async_ = async_
+        self._pending: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree: Any, force: bool = False) -> bool:
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return False
+        self.wait()                          # one outstanding save max
+        self._pending = save_checkpoint(self.directory, step, tree,
+                                        async_=self.async_)
+        if not self.async_:
+            self._gc()
+        return True
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+            self._gc()
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, abstract_tree: Any, shardings: Any = None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return restore_checkpoint(self.directory, abstract_tree,
+                                  step=step, shardings=shardings), step

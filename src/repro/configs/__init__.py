@@ -1,0 +1,74 @@
+"""Config registry: the 10 assigned architectures × 4 input shapes.
+
+``get_config(arch_id)`` returns the full published config;
+``get_config(arch_id, reduced=True)`` the smoke-test-sized variant of the
+same family (same mixers/FFN kinds/flags, tiny dims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs import (deepseek_v3_671b, granite_34b,
+                           jamba_1_5_large_398b, mamba2_1_3b,
+                           mistral_large_123b, nemotron_4_340b,
+                           qwen2_72b, qwen2_vl_7b, qwen3_moe_30b_a3b,
+                           seamless_m4t_large_v2)
+from repro.configs.shapes import SHAPE_NAMES, SHAPES, Shape, get_shape
+
+_MODULES = (
+    qwen2_vl_7b, mistral_large_123b, nemotron_4_340b, qwen2_72b,
+    granite_34b, jamba_1_5_large_398b, mamba2_1_3b, seamless_m4t_large_v2,
+    deepseek_v3_671b, qwen3_moe_30b_a3b,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchInfo:
+    arch_id: str
+    family: str
+    skip_shapes: Tuple[str, ...]
+    uses_embeds: bool
+    config: Callable
+    reduced: Callable
+
+
+ARCHS: Dict[str, ArchInfo] = {
+    m.ARCH_ID: ArchInfo(
+        arch_id=m.ARCH_ID, family=m.FAMILY, skip_shapes=m.SKIP_SHAPES,
+        uses_embeds=m.USES_EMBEDS, config=m.config, reduced=m.reduced)
+    for m in _MODULES
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(ARCHS)
+
+
+def get_arch(arch_id: str) -> ArchInfo:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def get_config(arch_id: str, reduced: bool = False, param_dtype=None):
+    info = get_arch(arch_id)
+    if reduced:
+        return info.reduced() if param_dtype is None \
+            else info.reduced(param_dtype)
+    return info.config() if param_dtype is None else info.config(param_dtype)
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; 40 total, minus per-arch skips."""
+    for arch_id, info in ARCHS.items():
+        for shape_name in SHAPE_NAMES:
+            skipped = shape_name in info.skip_shapes
+            if skipped and not include_skipped:
+                continue
+            yield arch_id, shape_name, skipped
+
+
+__all__ = ["ARCHS", "ARCH_IDS", "ArchInfo", "SHAPES", "SHAPE_NAMES",
+           "Shape", "cells", "get_arch", "get_config", "get_shape"]

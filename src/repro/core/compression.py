@@ -1,0 +1,160 @@
+"""Protocol-injected features (paper §4): compressed gradient all-reduce.
+
+The paper argues cross-cutting functionality (fault tolerance, efficiency)
+should live *inside* the per-function protocols, not in the application.
+``compressed_all_reduce`` is our flagship example: an int8-on-the-wire ring
+all-reduce with error-feedback, cutting the beta term 2x vs bf16 (4x vs
+fp32) on the DP gradient sync.  The quantize/dequantize hot loop has a
+Pallas TPU kernel (``repro.kernels.quantize``); this module holds the
+protocol schedule and the pure-jnp path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.protocols import common as c
+
+QBLOCK = 256  # quantization block: one scale per QBLOCK values
+
+
+# ---------------------------------------------------------------------------
+# Blockwise symmetric int8 quantization (jnp path; kernel in repro.kernels)
+# ---------------------------------------------------------------------------
+
+def quantize_blockwise(x: jax.Array, block: int = QBLOCK
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """x: flat (n,) with n % block == 0 -> (int8 (n,), scales (n/block,) f32)."""
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array,
+                         block: int = QBLOCK,
+                         dtype=jnp.float32) -> jax.Array:
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scale[:, None]).astype(dtype).reshape(-1)
+
+
+def _maybe_kernel_quantize(x, block, use_kernel: bool):
+    if use_kernel:
+        from repro.kernels.quantize import ops as qops
+        return qops.quantize(x, block=block)
+    return quantize_blockwise(x, block)
+
+
+def _maybe_kernel_dequantize(q, scale, block, dtype, use_kernel: bool):
+    if use_kernel:
+        from repro.kernels.quantize import ops as qops
+        return qops.dequantize(q, scale, block=block, dtype=dtype)
+    return dequantize_blockwise(q, scale, block, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EFState:
+    """Error-feedback residual carried across steps (same pytree as grads)."""
+
+    residual: jax.Array
+
+    @staticmethod
+    def zeros_like(x: jax.Array) -> "EFState":
+        return EFState(residual=jnp.zeros(x.shape, jnp.float32))
+
+
+jax.tree_util.register_dataclass(EFState, data_fields=["residual"],
+                                 meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# The protocol: int8-on-the-wire ring all-reduce
+# ---------------------------------------------------------------------------
+
+def compressed_ring_all_reduce_flat(x2d: jax.Array, axis_name: str,
+                                    block: int = QBLOCK,
+                                    use_kernel: bool = False) -> jax.Array:
+    """Ring RS+AG where every hop carries int8 payload + f32 block scales.
+
+    x2d: (p, chunk) float; chunk % block == 0.  Wire bytes per hop:
+    chunk * 1 + (chunk/block) * 4  ≈ chunk bytes — 2x less than bf16.
+    Accumulation happens in f32 after dequantize (no int overflow); each
+    hop requantizes, which is the standard lossy-compressed-ring trade
+    (bounded by error feedback at the caller).
+    """
+    p = x2d.shape[0]
+    if p == 1:
+        return x2d[0]
+    chunk = x2d.shape[1]
+    assert chunk % block == 0, (chunk, block)
+    i = c.axis_index(axis_name)
+    fwd = c.fwd_perm(p)
+
+    # --- reduce-scatter phase: pass quantized partial sums around the ring.
+    acc = c.dyn_chunk(x2d, i - 1).astype(jnp.float32)
+    for s in range(1, p):
+        q, scale = _maybe_kernel_quantize(acc, block, use_kernel)
+        q = lax.ppermute(q, axis_name, fwd)
+        scale = lax.ppermute(scale, axis_name, fwd)
+        recv = _maybe_kernel_dequantize(q, scale, block, jnp.float32, use_kernel)
+        acc = recv + c.dyn_chunk(x2d, i - s - 1).astype(jnp.float32)
+
+    # --- all-gather phase: circulate the reduced chunks, still int8 wire.
+    q, scale = _maybe_kernel_quantize(acc, block, use_kernel)
+    buf = jnp.zeros((p, chunk), jnp.float32)
+    buf = c.dyn_put(buf, _maybe_kernel_dequantize(q, scale, block, jnp.float32,
+                                                  use_kernel), i)
+    for s in range(1, p):
+        q = lax.ppermute(q, axis_name, fwd)
+        scale = lax.ppermute(scale, axis_name, fwd)
+        buf = c.dyn_put(
+            buf,
+            _maybe_kernel_dequantize(q, scale, block, jnp.float32, use_kernel),
+            i - s,
+        )
+    return buf.astype(x2d.dtype)
+
+
+def compressed_all_reduce(x: jax.Array, axis_name: str,
+                          state: EFState | None = None,
+                          block: int = QBLOCK,
+                          use_kernel: bool = False
+                          ) -> Tuple[jax.Array, EFState | None]:
+    """Error-feedback compressed all-reduce over one manual mesh axis.
+
+    Returns (summed x, updated EF state).  With ``state=None`` runs without
+    error feedback (stateless mode, e.g. for loss scalars).
+    """
+    p = c.axis_size(axis_name)
+    orig_shape, orig_dtype = x.shape, x.dtype
+    xf = x.astype(jnp.float32).reshape(-1)
+    if state is not None:
+        xf = xf + state.residual.reshape(-1)
+
+    flat, n = c.pad_flat(xf, p * block)
+    x2d = flat.reshape(p, -1)
+    reduced = compressed_ring_all_reduce_flat(x2d, axis_name, block,
+                                              use_kernel)
+    y = c.unpad(reduced.reshape(-1), n, xf.shape)
+
+    new_state = None
+    if state is not None:
+        # Residual: what quantization dropped from OUR contribution.  The
+        # sum's error is bounded by p * per-device residuals; feeding back
+        # the local one recovers it over steps (Karimireddy et al. 2019).
+        q, scale = _maybe_kernel_quantize(
+            c.pad_flat(xf, block)[0], block, use_kernel)
+        deq = _maybe_kernel_dequantize(q, scale, block, jnp.float32,
+                                       use_kernel)[: xf.shape[0]]
+        new_state = EFState(residual=(xf - deq).reshape(orig_shape))
+    return y.reshape(orig_shape).astype(orig_dtype), new_state

@@ -1,0 +1,473 @@
+"""The CollectiveEngine: a dynamically composed, tiered, per-function-
+protocol communication library (paper §2+§3+§4 as one object).
+
+Construction mirrors the paper's pipeline exactly:
+
+  1. scan the application          -> ``trace.scan_step``       (§2.2)
+  2. compose the thin library      -> ``compose.compose``        (§2)
+  3. assign per-function tiers     -> ``layers.assign_tiers``    (§3)
+  4. bind per-function protocols   -> ``costmodel.choose_protocol`` (§4)
+
+``mode="monolithic"`` is the conventional baseline: every function present
+(no composition), every function at the conventional tier, every call
+lowered through the one generic XLA path — the "TCP/IP stack" of Fig 2.
+
+All collective methods must be called inside a ``jax.shard_map`` region
+whose manual axes include the named axis.  Protocol schedules compile to
+explicit ``ppermute`` chains — the TPU analogue of a NIC-offloaded
+MPI-protocol (no host on the critical path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compose as compose_mod
+from repro.core import compression, costmodel, layers, registry, trace
+from repro.core.compose import ComposedLibrary, NotComposedError
+from repro.core.protocols import bruck, recursive, ring, tree, twophase, xla
+from repro.core.protocols import common as c
+from repro.core.topology import Topology, topology_from_mesh
+
+
+def _nbytes_of(x) -> int:
+    return int(x.size) * jnp.dtype(x.dtype).itemsize
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "composed"               # "composed" | "monolithic"
+    tier_policy: layers.TierPolicy = dataclasses.field(
+        default_factory=layers.TierPolicy)
+    sanitize_checked: bool = False       # L2+: runtime finite-guard op
+    use_quantize_kernel: bool = False    # Pallas path for compression
+    force_protocol: Mapping[str, str] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.mode not in ("composed", "monolithic"):
+            raise ValueError(f"unknown engine mode: {self.mode!r}")
+
+
+class CollectiveEngine:
+    """One application ↔ one engine (paper §2.1)."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        library: Optional[ComposedLibrary] = None,
+        frequencies: Optional[Mapping[str, float]] = None,
+        config: Optional[EngineConfig] = None,
+    ) -> None:
+        self.topology = topology
+        self.config = config or EngineConfig()
+        self.stats = layers.CommStats()
+        self._initialized = False
+        self._finalized = False
+
+        if self.config.mode == "monolithic":
+            # Conventional library: everything present, uniform depth.
+            self.library = compose_mod.compose(registry.ALL_FUNCTIONS)
+            self.frequencies = dict(registry.DEFAULT_FREQUENCIES)
+            self.tiers = layers.conventional_tiers(registry.ALL_FUNCTIONS)
+        else:
+            if library is None:
+                raise ValueError("composed engine needs a ComposedLibrary "
+                                 "(use CollectiveEngine.from_application)")
+            self.library = library
+            self.frequencies = dict(frequencies or registry.DEFAULT_FREQUENCIES)
+            self.tiers = layers.assign_tiers(
+                {fn: self.frequencies.get(
+                    fn, registry.DEFAULT_FREQUENCIES.get(fn, 1.0))
+                 for fn in library.provided},
+                self.config.tier_policy,
+            )
+
+    # ------------------------------------------------------------------
+    # Construction from an application (the paper's §2.2 flow)
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_application(
+        cls,
+        step_fn: Callable,
+        *abstract_args,
+        topology: Topology,
+        config: Optional[EngineConfig] = None,
+        extra_functions: Sequence[str] = (),
+        steps_hint: float = 1e4,
+        **abstract_kwargs,
+    ) -> "CollectiveEngine":
+        """Scan ``step_fn`` (traced with abstract inputs), compose the thin
+        library covering exactly what it invokes, and build the engine.
+
+        ``steps_hint``: traced counts are per *step*; the paper's layer
+        placement (§3) weighs per-application frequency, so counts are
+        scaled by the expected number of step executions."""
+        report = trace.scan_step(step_fn, *abstract_args, **abstract_kwargs)
+        library = compose_mod.compose_from_trace(report, extra=extra_functions)
+        freqs = dict(registry.DEFAULT_FREQUENCIES)
+        freqs.update({fn: c * steps_hint
+                      for fn, c in report.frequencies().items()})
+        return cls(topology, library=library, frequencies=freqs, config=config)
+
+    @classmethod
+    def monolithic(cls, topology: Topology,
+                   config: Optional[EngineConfig] = None) -> "CollectiveEngine":
+        cfg = config or EngineConfig()
+        cfg = dataclasses.replace(cfg, mode="monolithic")
+        return cls(topology, config=cfg)
+
+    @classmethod
+    def for_mesh(cls, mesh, **kwargs) -> "CollectiveEngine":
+        return cls(topology_from_mesh(mesh), **kwargs)
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def composed(self) -> bool:
+        return self.config.mode == "composed"
+
+    def tier(self, fn: str) -> int:
+        return self.tiers.get(fn, layers.CONVENTIONAL_TIER)
+
+    def average_layer_number(self) -> float:
+        freqs = {fn: self.frequencies.get(
+            fn, registry.DEFAULT_FREQUENCIES.get(fn, 1.0))
+            for fn in self.tiers}
+        return layers.average_layer_number(self.tiers, freqs)
+
+    def protocol_for(self, fn: str, nbytes: float, axis: str) -> str:
+        if not self.composed:
+            return costmodel.XLA_DEFAULT
+        forced = self.config.force_protocol.get(fn)
+        if forced:
+            return forced
+        return costmodel.choose_protocol(fn, nbytes, self.topology, axis).protocol
+
+    def describe(self) -> str:
+        rows = [f"CollectiveEngine(mode={self.config.mode}, "
+                f"avg_layer={self.average_layer_number():.3f})",
+                f"  library: {self.library.describe()}"]
+        for fn in sorted(self.library.provided):
+            rows.append(f"  {fn:<22s} tier={layers.TIER_NAMES[self.tier(fn)]}")
+        return "\n".join(rows)
+
+    # ------------------------------------------------------------------
+    # Internal plumbing
+    # ------------------------------------------------------------------
+
+    def _check(self, fn: str) -> None:
+        self.library.require(fn)
+
+    def _wrap(self, fn: str, impl: Callable) -> Callable:
+        return layers.wrap_tier(fn, self.tier(fn), impl, self.stats,
+                                sanitize=self.config.sanitize_checked)
+
+    def _axis_size(self, axis: str) -> int:
+        if axis in self.topology.axis_sizes:
+            return self.topology.axis_sizes[axis]
+        return c.axis_size(axis)
+
+    @staticmethod
+    def _chunked(x: jax.Array, p: int) -> Tuple[jax.Array, int, tuple]:
+        flat, n = c.pad_flat(x, p)
+        return flat.reshape(p, -1), n, x.shape
+
+    # ------------------------------------------------------------------
+    # The function set (paper's "MPI functions")
+    # ------------------------------------------------------------------
+
+    # ---- all_reduce ---------------------------------------------------
+
+    def all_reduce(self, x: jax.Array, axis_name) -> jax.Array:
+        fn = registry.ALL_REDUCE
+        self._check(fn)
+        axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+        if not self.composed:
+            def impl(v, a, _axes=axes):
+                out = v
+                for ax in _axes:
+                    out = xla.all_reduce(out, ax)
+                return out
+            return self._wrap(fn, impl)(x, axes[0])
+
+        if len(axes) > 1:
+            return self._wrap(fn, self._allreduce_multiaxis)(x, axes)
+        return self._wrap(fn, self._allreduce_1d)(x, axes[0])
+
+    def _allreduce_1d(self, x: jax.Array, axis: str) -> jax.Array:
+        p = self._axis_size(axis)
+        if p == 1:
+            return x
+        proto = self.protocol_for(registry.ALL_REDUCE, _nbytes_of(x), axis)
+        if proto == costmodel.XLA_DEFAULT:
+            return xla.all_reduce(x, axis)
+        if proto == costmodel.RECURSIVE_DOUBLING:
+            return recursive.recursive_doubling_all_reduce(x, axis)
+        x2d, n, shape = self._chunked(x, p)
+        if proto == costmodel.RING:
+            flat = ring.ring_all_reduce_flat(x2d, axis)
+        elif proto == costmodel.BIDIR_RING:
+            flat = ring.bidir_ring_all_reduce_flat(x2d, axis)
+        elif proto == costmodel.RECURSIVE_HALVING:
+            flat = recursive.rabenseifner_all_reduce_flat(x2d, axis)
+        else:
+            raise ValueError(f"no all_reduce impl for protocol {proto!r}")
+        return c.unpad(flat.reshape(-1), n, shape)
+
+    def _allreduce_multiaxis(self, x: jax.Array, axes: Tuple[str, ...]
+                             ) -> jax.Array:
+        if "pod" in axes:
+            intra = tuple(a for a in axes if a != "pod")
+            if intra:
+                return twophase.hierarchical_all_reduce(x, intra, "pod")
+            return self._allreduce_1d(x, "pod")
+        if len(axes) == 2:
+            p0 = self._axis_size(axes[0])
+            x2d, n, shape = self._chunked(x, p0)
+            flat = twophase.two_phase_all_reduce_2d(x2d, axes[0], axes[1])
+            return c.unpad(flat, n, shape)
+        out = x
+        for ax in axes:
+            out = self._allreduce_1d(out, ax)
+        return out
+
+    # ---- reduce_scatter / all_gather ---------------------------------
+
+    def reduce_scatter(self, x: jax.Array, axis_name: str, dim: int = 0
+                       ) -> jax.Array:
+        """Tiled semantics: output = input with ``dim`` shrunk by p."""
+        fn = registry.REDUCE_SCATTER
+        self._check(fn)
+        if not self.composed:
+            return self._wrap(fn, lambda v, a: xla.reduce_scatter(v, a, dim))(
+                x, axis_name)
+        return self._wrap(fn, self._reduce_scatter_composed)(
+            x, axis_name, dim=dim)
+
+    def _reduce_scatter_composed(self, x, axis: str, dim: int = 0):
+        p = self._axis_size(axis)
+        if p == 1:
+            return x
+        if x.shape[dim] % p:
+            return xla.reduce_scatter(x, axis, dim)  # generic fallback
+        proto = self.protocol_for(registry.REDUCE_SCATTER, _nbytes_of(x), axis)
+        xm = jnp.moveaxis(x, dim, 0)
+        x2d = xm.reshape(p, -1)
+        if proto == costmodel.RECURSIVE_HALVING:
+            shard = recursive.halving_reduce_scatter_flat(x2d, axis)
+        elif proto == costmodel.BIDIR_RING:
+            shard = ring.bidir_ring_reduce_scatter_flat(x2d, axis)
+        else:
+            shard = ring.ring_reduce_scatter_flat(x2d, axis)
+        out = shard.reshape((xm.shape[0] // p,) + xm.shape[1:])
+        return jnp.moveaxis(out, 0, dim)
+
+    def all_gather(self, x: jax.Array, axis_name: str, dim: int = 0
+                   ) -> jax.Array:
+        """Tiled semantics: output = input with ``dim`` grown by p."""
+        fn = registry.ALL_GATHER
+        self._check(fn)
+        if not self.composed:
+            return self._wrap(fn, lambda v, a: xla.all_gather(v, a, dim))(
+                x, axis_name)
+        return self._wrap(fn, self._all_gather_composed)(x, axis_name, dim=dim)
+
+    def _all_gather_composed(self, x, axis: str, dim: int = 0):
+        p = self._axis_size(axis)
+        if p == 1:
+            return x
+        proto = self.protocol_for(registry.ALL_GATHER, _nbytes_of(x) * p, axis)
+        xm = jnp.moveaxis(x, dim, 0)
+        shard = xm.reshape(-1)
+        if proto == costmodel.BRUCK:
+            flat = recursive.doubling_all_gather_flat(shard, axis)
+            buf = flat.reshape((p,) + shard.shape)
+        elif proto == costmodel.BIDIR_RING:
+            buf = ring.bidir_ring_all_gather_flat(shard, axis)
+        else:
+            buf = ring.ring_all_gather_flat(shard, axis)
+        out = buf.reshape((p * xm.shape[0],) + xm.shape[1:])
+        return jnp.moveaxis(out, 0, dim)
+
+    # ---- all_to_all ----------------------------------------------------
+
+    def all_to_all(self, x: jax.Array, axis_name: str,
+                   split_dim: int = 0, concat_dim: int = 0) -> jax.Array:
+        """Tiled semantics of ``lax.all_to_all``."""
+        fn = registry.ALL_TO_ALL
+        self._check(fn)
+        if not self.composed:
+            return self._wrap(
+                fn, lambda v, a: xla.all_to_all(v, a, split_dim, concat_dim)
+            )(x, axis_name)
+        return self._wrap(fn, self._all_to_all_composed)(
+            x, axis_name, split_dim=split_dim, concat_dim=concat_dim)
+
+    def _all_to_all_composed(self, x, axis: str, split_dim: int = 0,
+                             concat_dim: int = 0):
+        p = self._axis_size(axis)
+        if p == 1:
+            return x
+        if x.shape[split_dim] % p:
+            return xla.all_to_all(x, axis, split_dim, concat_dim)
+        proto = self.protocol_for(registry.ALL_TO_ALL, _nbytes_of(x), axis)
+        xm = jnp.moveaxis(x, split_dim, 0)
+        blocks = xm.reshape((p, xm.shape[0] // p) + xm.shape[1:])
+        if proto == costmodel.BRUCK:
+            out_blocks = bruck.bruck_all_to_all(blocks, axis)
+        else:
+            out_blocks = bruck.pairwise_all_to_all(blocks, axis)
+        # out_blocks[j] = block received from device j; lax.all_to_all tiled
+        # semantics concatenates received blocks (block-major) at concat_dim.
+        ob = jnp.moveaxis(out_blocks, 1, split_dim + 1)  # restore split pos
+        ob = jnp.moveaxis(ob, 0, concat_dim)             # p next to concat
+        shape = list(ob.shape)
+        shape[concat_dim:concat_dim + 2] = [shape[concat_dim]
+                                            * shape[concat_dim + 1]]
+        return ob.reshape(shape)
+
+    # ---- broadcast / permute / send_recv -------------------------------
+
+    def broadcast(self, x: jax.Array, axis_name: str, root: int = 0
+                  ) -> jax.Array:
+        fn = registry.BROADCAST
+        self._check(fn)
+        if not self.composed:
+            return self._wrap(fn, lambda v, a: xla.broadcast(v, a, root))(
+                x, axis_name)
+
+        def impl(v, a):
+            proto = self.protocol_for(fn, _nbytes_of(v), a)
+            if proto == costmodel.RING:  # scatter+allgather for big payloads
+                p = self._axis_size(a)
+                v2d, n, shape = self._chunked(v, p)
+                mine = tree.binomial_broadcast(v2d, a, root)  # fallback path
+                return c.unpad(mine.reshape(-1), n, shape)
+            return tree.binomial_broadcast(v, a, root)
+        return self._wrap(fn, impl)(x, axis_name)
+
+    def permute(self, x: jax.Array, axis_name: str, shift: int = 1
+                ) -> jax.Array:
+        fn = registry.PERMUTE
+        self._check(fn)
+        return self._wrap(fn, lambda v, a: xla.permute(v, a, shift))(
+            x, axis_name)
+
+    def send_recv(self, x: jax.Array, axis_name: str,
+                  pairs: Sequence[Tuple[int, int]]) -> jax.Array:
+        """Explicit (src, dst) exchange — MPI_Send/MPI_Recv analogue."""
+        fn = registry.SEND_RECV
+        self._check(fn)
+        return self._wrap(
+            fn, lambda v, a: lax.ppermute(v, a, list(pairs)))(x, axis_name)
+
+    # ---- feature / sync / setup ----------------------------------------
+
+    def compressed_all_reduce(self, x: jax.Array, axis_name: str,
+                              state: Optional[compression.EFState] = None):
+        fn = registry.COMPRESSED_ALL_REDUCE
+        self._check(fn)
+        out_state = [state]
+
+        def impl(v, a):
+            y, s = compression.compressed_all_reduce(
+                v, a, state, use_kernel=self.config.use_quantize_kernel)
+            out_state[0] = s
+            return y
+        y = self._wrap(fn, impl)(x, axis_name)
+        return y, out_state[0]
+
+    def barrier(self, axis_name, token: jax.Array | None = None) -> jax.Array:
+        fn = registry.BARRIER
+        self._check(fn)
+        axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+        def impl(t, a):
+            for ax in axes:
+                t = lax.psum(t, ax) * 0.0
+            return lax.optimization_barrier(t)
+        t = token if token is not None else jnp.zeros((), jnp.float32)
+        return self._wrap(fn, impl)(t, axes[0])
+
+    def checkpoint_fence(self, tree_: Any) -> Any:
+        fn = registry.CHECKPOINT_FENCE
+        self._check(fn)
+        self.stats.event("checkpoint_fence")
+        return jax.tree_util.tree_map(lax.optimization_barrier, tree_)
+
+    def axis_index(self, axis_name: str):
+        self._check(registry.AXIS_INDEX)
+        return lax.axis_index(axis_name)
+
+    def axis_size(self, axis_name: str) -> int:
+        self._check(registry.AXIS_SIZE)
+        return self._axis_size(axis_name)
+
+    def init(self, mesh=None) -> "CollectiveEngine":
+        """MPI_Init analogue: bind the runtime, reset stats."""
+        self._check(registry.INIT)
+        if mesh is not None:
+            self.topology = topology_from_mesh(mesh)
+        self.stats = layers.CommStats()
+        self._initialized = True
+        return self
+
+    def finalize(self) -> str:
+        """MPI_Finalize analogue: flush stats, mark the engine dead."""
+        self._check(registry.FINALIZE)
+        self._finalized = True
+        return self.stats.summary()
+
+    # ------------------------------------------------------------------
+    # Gradient synchronisation (the application-facing convenience API)
+    # ------------------------------------------------------------------
+
+    def sync_gradients(self, grads: Any, axis_name, *, mean: bool = True,
+                       compress: bool = False, ef_state: Any = None):
+        """Sum (or mean) a gradient pytree over the data-parallel axes.
+
+        Call inside the shard_map training region.  With ``compress=True``
+        uses the int8 error-feedback protocol and threads ``ef_state``
+        (a pytree of EFState matching ``grads``; pass None to init).
+        Returns (synced_grads, new_ef_state).
+        """
+        axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        scale = 1.0
+        if mean:
+            for ax in axes:
+                scale /= self._axis_size(ax)
+
+        if not compress:
+            synced = jax.tree_util.tree_map(
+                lambda g: self.all_reduce(g, axes if len(axes) > 1 else axes[0])
+                * jnp.asarray(scale, g.dtype),
+                grads)
+            return synced, ef_state
+
+        if ef_state is None:
+            ef_state = jax.tree_util.tree_map(
+                compression.EFState.zeros_like, grads)
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        states = treedef.flatten_up_to(ef_state)
+        out_leaves, out_states = [], []
+        for g, s in zip(leaves, states):
+            # compressed protocol runs on the first axis; remaining axes
+            # (e.g. cross-pod) use the hierarchical uncompressed path.
+            y, s2 = self.compressed_all_reduce(g, axes[0], s)
+            for ax in axes[1:]:
+                y = self.all_reduce(y, ax)
+            out_leaves.append(y * jnp.asarray(scale, g.dtype))
+            out_states.append(s2)
+        return (jax.tree_util.tree_unflatten(treedef, out_leaves),
+                jax.tree_util.tree_unflatten(treedef, out_states))
+
+

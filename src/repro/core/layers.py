@@ -1,0 +1,144 @@
+"""Tiered dispatch stack (paper §3): per-function layer assignment.
+
+Conventional MPI stacks put every function at the same depth (Fig 1-A).
+The paper's proposal: place each function at a layer inversely related to
+its invocation frequency, minimizing the frequency-weighted *average layer
+number* (Fig 1-B).  Our tiers:
+
+  L0  direct      — hot path: the selected protocol schedule, nothing else.
+  L1  selected    — cost-model protocol selection indirection (trace-time
+                    Python only; zero HLO).
+  L2  checked     — + argument validation, trace-time stats, optional
+                    runtime finite-sanitizing op (HLO-visible cost).
+  L3  full        — + logging and optimization-barrier fencing (HLO-visible;
+                    correct for init/finalize/barrier/checkpoint fences).
+
+Python wrapper depth = trace-time dispatch cost (the MPI software-stack
+analogue); the L2/L3 extra ops = runtime cost hot functions avoid.  Both
+are measured by ``benchmarks/bench_layers.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from collections import Counter
+from typing import Callable, Dict, Mapping
+
+import jax.numpy as jnp
+from jax import lax
+
+logger = logging.getLogger("repro.engine")
+
+#: the conventional stack puts every function at this depth (Fig 1-A:
+#: app -> MPI API -> protocol layer -> transport).
+CONVENTIONAL_TIER = 2
+
+TIER_NAMES = ("L0:direct", "L1:selected", "L2:checked", "L3:full")
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPolicy:
+    """Frequency thresholds for tier assignment: freq >= thresholds[i]
+    places the function at tier i; below all thresholds -> deepest tier."""
+
+    thresholds: tuple = (1e6, 1e4, 1e2)
+
+    def tier_of(self, freq: float) -> int:
+        for i, t in enumerate(self.thresholds):
+            if freq >= t:
+                return i
+        return len(self.thresholds)
+
+
+def assign_tiers(frequencies: Mapping[str, float],
+                 policy: TierPolicy | None = None) -> Dict[str, int]:
+    policy = policy or TierPolicy()
+    return {fn: policy.tier_of(f) for fn, f in frequencies.items()}
+
+
+def conventional_tiers(functions) -> Dict[str, int]:
+    return {fn: CONVENTIONAL_TIER for fn in functions}
+
+
+def average_layer_number(tiers: Mapping[str, int],
+                         frequencies: Mapping[str, float]) -> float:
+    """Paper §3 objective: Σ f_i · L_i / Σ f_i over invoked functions."""
+    num = sum(frequencies[fn] * tiers[fn] for fn in frequencies if fn in tiers)
+    den = sum(frequencies[fn] for fn in frequencies if fn in tiers)
+    return num / den if den else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Wrapper machinery.  Stats are Python-side (trace-time) — free at runtime.
+# ---------------------------------------------------------------------------
+
+
+class CommStats:
+    """Trace-time statistics the checked tiers record."""
+
+    def __init__(self) -> None:
+        self.calls: Counter = Counter()
+        self.bytes: Counter = Counter()
+        self.events: list = []
+
+    def record(self, fn: str, nbytes: int) -> None:
+        self.calls[fn] += 1
+        self.bytes[fn] += nbytes
+
+    def event(self, what: str) -> None:
+        self.events.append(what)
+
+    def summary(self) -> str:
+        rows = [f"{fn:<22s} calls={self.calls[fn]:<6d} "
+                f"bytes={self.bytes[fn]:,d}" for fn in sorted(self.calls)]
+        return "\n".join(rows) if rows else "(no traffic recorded)"
+
+
+def _nbytes(x) -> int:
+    try:
+        return int(x.size) * jnp.dtype(x.dtype).itemsize
+    except Exception:
+        return 0
+
+
+def _validate(fn_name: str, x, axis_name) -> None:
+    if not hasattr(x, "dtype"):
+        raise TypeError(f"{fn_name}: expected an array, got {type(x)}")
+    if axis_name is None:
+        raise ValueError(f"{fn_name}: axis_name is required")
+
+
+def wrap_tier(fn_name: str, tier: int, impl: Callable,
+              stats: CommStats | None, sanitize: bool = False) -> Callable:
+    """Stack wrapper layers under ``impl`` according to the tier.
+
+    ``impl(x, axis_name, **kw)`` is the already-protocol-selected schedule.
+    Returns a callable with the same signature but ``tier`` extra layers.
+    """
+    if tier <= 1:
+        # L0/L1: protocol selection (done by the engine before this point)
+        # is the only indirection; nothing wraps the schedule.
+        return impl
+
+    def checked(x, axis_name, **kw):
+        _validate(fn_name, x, axis_name)
+        if stats is not None:
+            stats.record(fn_name, _nbytes(x))
+        if sanitize:
+            x = jnp.where(jnp.isfinite(x), x, jnp.zeros_like(x))
+        return impl(x, axis_name, **kw)
+
+    if tier == 2:
+        return checked
+
+    def full(x, axis_name, **kw):
+        logger.debug("collective %s over axis %r: %d bytes",
+                     fn_name, axis_name, _nbytes(x))
+        if stats is not None:
+            stats.event(f"{fn_name}@{axis_name}")
+        x = lax.optimization_barrier(x)
+        y = checked(x, axis_name, **kw)
+        return lax.optimization_barrier(y)
+
+    return full

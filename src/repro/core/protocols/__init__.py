@@ -1,0 +1,20 @@
+"""MPI-protocol blocks: one module per protocol family (paper §4).
+
+Registry mapping (collective, protocol_name) -> implementation.  All
+implementations are pure JAX, valid inside shard_map over manual axes, and
+differentiable (AD derives the transpose schedule, e.g. the transpose of a
+ring all-gather is a ring reduce-scatter with the same hop structure).
+"""
+
+from repro.core.protocols import bruck, common, pipeline, recursive, ring, tree, twophase, xla
+
+__all__ = [
+    "bruck",
+    "common",
+    "pipeline",
+    "recursive",
+    "ring",
+    "tree",
+    "twophase",
+    "xla",
+]

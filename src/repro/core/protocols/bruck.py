@@ -1,0 +1,56 @@
+"""All-to-all protocols: Bruck (latency-optimal) and pairwise exchange.
+
+All-to-all is the dominant collective of expert-parallel MoE dispatch —
+the paper's "per-function protocol" pays off most here (bench_protocols).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.protocols import common as c
+
+
+def bruck_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """x: (p, ...) where block j is destined to device j.
+
+    Returns (p, ...) where block j came from device j.  log2(p) rounds,
+    each moving ~n/2 bytes: latency-optimal, bandwidth-suboptimal.
+    """
+    p = x.shape[0]
+    if p == 1:
+        return x
+    i = c.axis_index(axis_name)
+    # Phase 1: local upward rotation; block destined to d sits at (d - i) % p.
+    x = jnp.roll(x, -i, axis=0)
+    # Phase 2: block at position q must advance exactly q hops forward.
+    # Route bit-by-bit: positions with bit k set hop forward by k.
+    k = 1
+    while k < p:
+        idxs = [q for q in range(p) if q & k]
+        send = x[jnp.array(idxs)]
+        recv = lax.ppermute(send, axis_name, c.fwd_perm(p, shift=k))
+        x = x.at[jnp.array(idxs)].set(recv)
+        k *= 2
+    # On device d, position q now holds the block from source (d - q) % p.
+    # Phase 3: out[j] = block from source j = x[(d - j) % p].
+    return jnp.roll(jnp.flip(x, axis=0), i + 1, axis=0)
+
+
+def pairwise_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """x: (p, ...) block j destined to device j.  p-1 rounds; at round s,
+    send block (i+s) to device i+s and receive block from device i-s.
+    Bandwidth-optimal ((p-1)/p * n), latency O(p)."""
+    p = x.shape[0]
+    if p == 1:
+        return x
+    i = c.axis_index(axis_name)
+    out = jnp.zeros_like(x)
+    out = c.dyn_put(out, c.dyn_chunk(x, i), i)  # own block stays
+    for s in range(1, p):
+        send = c.dyn_chunk(x, i + s)
+        recv = lax.ppermute(send, axis_name, c.fwd_perm(p, shift=s))
+        out = c.dyn_put(out, recv, i - s)
+    return out

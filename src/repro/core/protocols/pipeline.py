@@ -1,0 +1,74 @@
+"""Point-to-point schedules: pipeline-parallel send/recv (MPI_Send/Recv).
+
+A GPipe-style microbatch pipeline over a manual mesh axis.  The per-tick
+stage-to-stage transfer is a single ``ppermute`` hop — the p2p protocol of
+the engine.  Used for the cross-pod beyond-paper experiment (pipeline over
+the DCN axis instead of data-parallel all-reduce over DCN) and by tests.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.protocols import common as c
+
+
+def send_next(x: jax.Array, axis_name: str) -> jax.Array:
+    """One pipeline hop: stage s -> stage s+1.  The wraparound edge
+    (last -> first) is a filler for vmap compatibility; stage 0 always
+    masks its recv, so the value never matters."""
+    p = c.axis_size(axis_name)
+    return lax.ppermute(x, axis_name,
+                        c.complete_perm([(j, j + 1) for j in range(p - 1)], p))
+
+
+def send_prev(x: jax.Array, axis_name: str) -> jax.Array:
+    p = c.axis_size(axis_name)
+    return lax.ppermute(x, axis_name,
+                        c.complete_perm([(j + 1, j) for j in range(p - 1)], p))
+
+
+def gpipe_forward(
+    stage_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    stage_params: jax.Array,
+    microbatches: jax.Array,  # (n_micro, mb, ...) meaningful on stage 0
+    axis_name: str,
+):
+    """Run ``n_micro`` microbatches through ``p`` pipeline stages.
+
+    Each device holds one stage's params.  Returns (n_micro, mb, ...) of
+    final-stage outputs (meaningful on the last stage; zeros elsewhere).
+    Bubble fraction (p-1)/(n_micro+p-1) as usual for GPipe.
+    """
+    p = c.axis_size(axis_name)
+    stage = c.axis_index(axis_name)
+    n_micro = microbatches.shape[0]
+    ticks = n_micro + p - 1
+    act_shape = microbatches.shape[1:]
+
+    out_buf = jnp.zeros((n_micro,) + act_shape, microbatches.dtype)
+    recv = jnp.zeros(act_shape, microbatches.dtype)
+
+    def tick(carry, t):
+        recv, out_buf = carry
+        # Stage 0 injects microbatch t (while t < n_micro); others consume recv.
+        mb_idx = jnp.clip(t, 0, n_micro - 1)
+        inject = lax.dynamic_index_in_dim(microbatches, mb_idx, 0, keepdims=False)
+        x_in = jnp.where(stage == 0, inject, recv)
+        y = stage_fn(stage_params, x_in)
+        # Last stage stores its result at slot t - (p - 1) once the pipe fills.
+        slot = jnp.clip(t - (p - 1), 0, n_micro - 1)
+        store = (stage == p - 1) & (t >= p - 1)
+        cur = lax.dynamic_index_in_dim(out_buf, slot, 0, keepdims=False)
+        out_buf = lax.dynamic_update_index_in_dim(
+            out_buf, jnp.where(store, y, cur), slot, 0
+        )
+        recv = send_next(y, axis_name)
+        return (recv, out_buf), None
+
+    (recv, out_buf), _ = lax.scan(tick, (recv, out_buf), jnp.arange(ticks))
+    return out_buf

@@ -1,0 +1,79 @@
+"""Recursive doubling / halving protocols (power-of-two axes).
+
+- recursive_doubling_all_reduce: log p rounds of full-message XOR exchange —
+  latency-optimal, for small messages.
+- recursive halving reduce-scatter + recursive doubling all-gather
+  (Rabenseifner): log p latency with ring-class bandwidth, for mid sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.protocols import common as c
+
+
+def recursive_doubling_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """Full-message exchange with partner i^k for k = 1,2,4,...  Requires
+    power-of-two axis size.  Works on any array shape (no chunking)."""
+    p = c.axis_size(axis_name)
+    if p == 1:
+        return x
+    assert c.is_pow2(p), f"recursive doubling needs power-of-two axis, got {p}"
+    k = 1
+    while k < p:
+        other = lax.ppermute(x, axis_name, c.xor_perm(p, k))
+        x = x + other
+        k *= 2
+    return x
+
+
+def halving_reduce_scatter_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
+    """Recursive-halving reduce-scatter.  x2d: (p, chunk).  Device i ends
+    with reduced chunk i.  log p steps, (p-1)/p * n bytes."""
+    p = x2d.shape[0]
+    if p == 1:
+        return x2d[0]
+    assert c.is_pow2(p), f"recursive halving needs power-of-two axis, got {p}"
+    i = c.axis_index(axis_name)
+    cur = x2d.reshape(-1)  # contiguous [chunk_0, ..., chunk_{p-1}]
+    k = p // 2
+    while k >= 1:
+        half = cur.shape[0] // 2
+        lower, upper = cur[:half], cur[half:]
+        bit = (i & k) != 0  # if set: we own the upper half, send the lower
+        send = jnp.where(bit, lower, upper)
+        recv = lax.ppermute(send, axis_name, c.xor_perm(p, k))
+        keep = jnp.where(bit, upper, lower)
+        cur = keep + recv
+        k //= 2
+    return cur  # reduced chunk i (bit path == bits of i)
+
+
+def doubling_all_gather_flat(shard: jax.Array, axis_name: str) -> jax.Array:
+    """Recursive-doubling all-gather: inverse of halving RS. shard: (chunk,)
+    -> flat (p*chunk,) in device order."""
+    p = c.axis_size(axis_name)
+    if p == 1:
+        return shard
+    assert c.is_pow2(p), f"recursive doubling needs power-of-two axis, got {p}"
+    i = c.axis_index(axis_name)
+    cur = shard
+    k = 1
+    while k < p:
+        recv = lax.ppermute(cur, axis_name, c.xor_perm(p, k))
+        bit = (i & k) != 0  # if set: our block is the upper half of the pair
+        cur = jnp.where(
+            bit,
+            jnp.concatenate([recv, cur]),
+            jnp.concatenate([cur, recv]),
+        )
+        k *= 2
+    return cur
+
+
+def rabenseifner_all_reduce_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
+    shard = halving_reduce_scatter_flat(x2d, axis_name)
+    return doubling_all_gather_flat(shard, axis_name)

@@ -1,0 +1,59 @@
+"""Binomial-tree broadcast / reduce (cold-path collectives).
+
+Broadcast is a cold function in training (weight init, config fan-out),
+so the tree protocol optimizes latency at log p rounds.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.protocols import common as c
+
+
+def binomial_broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
+    """After the call every device holds root's value.  log2(p) rounds:
+    round k, effective ranks r < 2^k send to r + 2^k."""
+    p = c.axis_size(axis_name)
+    if p == 1:
+        return x
+    i = c.axis_index(axis_name)
+    r = jnp.mod(i - root, p)  # effective rank; root -> 0
+    k = 1
+    while k < p:
+        perm = c.complete_perm(
+            [((j + root) % p, (j + k + root) % p)
+             for j in range(min(k, p - k))], p)
+        recv = lax.ppermute(x, axis_name, perm)
+        receiving = (r >= k) & (r < 2 * k)
+        x = jnp.where(receiving, recv, x)
+        k *= 2
+    return x
+
+
+def binomial_reduce_to_root(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
+    """Reduce (sum) to root; non-root devices end with garbage partial sums
+    (callers broadcast or discard).  log2(p) rounds mirrored from broadcast."""
+    p = c.axis_size(axis_name)
+    if p == 1:
+        return x
+    i = c.axis_index(axis_name)
+    r = jnp.mod(i - root, p)
+    k = 1
+    # children send up: round k: ranks with bit k-1 set and lower bits clear
+    # send to r - k.  Unrolled in reverse of broadcast.
+    ks = []
+    kk = 1
+    while kk < p:
+        ks.append(kk)
+        kk *= 2
+    for k in reversed(ks):  # transpose of broadcast: leaves reduce first
+        perm = c.complete_perm(
+            [((j + k + root) % p, (j + root) % p)
+             for j in range(min(k, p - k))], p)
+        recv = lax.ppermute(x, axis_name, perm)
+        receiving = r < k
+        x = jnp.where(receiving, x + recv, x)
+    return x

@@ -1,0 +1,46 @@
+"""The generic path: XLA built-in collectives ("TCP/IP stack" analogue).
+
+The paper's conventional baseline is one generic protocol for everything.
+In JAX that is ``lax.psum``/``psum_scatter``/``all_gather``/``all_to_all``,
+whose lowering XLA chooses without per-function specialization.  The
+monolithic engine routes every call here; the composed engine uses it only
+where the cost model says specialization doesn't pay (e.g. p == 1).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    return lax.psum(x, axis_name)
+
+
+def reduce_scatter(x: jax.Array, axis_name: str, dim: int = 0) -> jax.Array:
+    return lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)
+
+
+def all_gather(x: jax.Array, axis_name: str, dim: int = 0) -> jax.Array:
+    return lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def all_to_all(
+    x: jax.Array, axis_name: str, split_dim: int = 0, concat_dim: int = 0
+) -> jax.Array:
+    return lax.all_to_all(
+        x, axis_name, split_axis=split_dim, concat_axis=concat_dim, tiled=True
+    )
+
+
+def broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
+    # Generic emulation: select root's value via masked psum.
+    import jax.numpy as jnp
+
+    i = lax.axis_index(axis_name)
+    return lax.psum(jnp.where(i == root, x, jnp.zeros_like(x)), axis_name)
+
+
+def permute(x: jax.Array, axis_name: str, shift: int = 1) -> jax.Array:
+    p = lax.psum(1, axis_name)
+    return lax.ppermute(x, axis_name, [(j, (j + shift) % p) for j in range(p)])

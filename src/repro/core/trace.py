@@ -1,0 +1,172 @@
+"""Application scan (paper §2.2): find the collective functions an
+application actually invokes, before building its library.
+
+The paper scans source code "similar to lexical analysis of compilers".
+Our analogue is strictly stronger: we trace the application's step function
+to a jaxpr with abstract inputs (no FLOP is executed, no byte allocated)
+and walk it — including every sub-jaxpr of ``scan``/``while``/``cond``/
+``pjit``/``remat``/``shard_map``/``custom_vjp`` — recording every
+collective primitive with its static invocation count (scan trip counts
+multiply) and message bytes.  The result is the function set 𝓕 plus the
+frequency table that drives tier assignment (paper §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Mapping, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from repro.core import registry
+
+# jaxpr primitive name -> registry function name
+PRIMITIVE_MAP: Mapping[str, str] = {
+    "psum": registry.ALL_REDUCE,
+    "psum_invariant": registry.ALL_REDUCE,
+    "psum2": registry.ALL_REDUCE,
+    "all_reduce": registry.ALL_REDUCE,
+    "psum_scatter": registry.REDUCE_SCATTER,
+    "reduce_scatter": registry.REDUCE_SCATTER,
+    "all_gather": registry.ALL_GATHER,
+    "all_gather_invariant": registry.ALL_GATHER,
+    "all_to_all": registry.ALL_TO_ALL,
+    "ppermute": registry.PERMUTE,
+    "pbroadcast": registry.BROADCAST,
+    "axis_index": registry.AXIS_INDEX,
+}
+
+#: primitives that hold sub-jaxprs whose execution count is multiplied
+_LOOP_PRIMS = ("scan", "while")
+
+
+@dataclasses.dataclass
+class CallSite:
+    """One static collective call site in the traced program."""
+
+    function: str            # registry function name
+    primitive: str           # raw jaxpr primitive
+    count: int               # static executions per step (scan trips folded in)
+    nbytes: int              # message payload bytes per execution (per device)
+    axes: Tuple[str, ...]    # mesh axes the collective runs over
+    path: Tuple[str, ...]    # enclosing higher-order primitives, outermost first
+
+    @property
+    def total_bytes(self) -> int:
+        return self.count * self.nbytes
+
+
+@dataclasses.dataclass
+class TraceReport:
+    """The application's collective profile: 𝓕, frequencies, bytes."""
+
+    sites: List[CallSite]
+
+    @property
+    def function_set(self) -> frozenset:
+        return frozenset(s.function for s in self.sites)
+
+    def frequencies(self) -> Dict[str, float]:
+        freq: Dict[str, float] = defaultdict(float)
+        for s in self.sites:
+            freq[s.function] += float(s.count)
+        return dict(freq)
+
+    def bytes_by_function(self) -> Dict[str, int]:
+        total: Dict[str, int] = defaultdict(int)
+        for s in self.sites:
+            total[s.function] += s.total_bytes
+        return dict(total)
+
+    def count(self, function: str) -> int:
+        return sum(s.count for s in self.sites if s.function == function)
+
+    def summary(self) -> str:
+        lines = ["function            calls        bytes/step"]
+        freq = self.frequencies()
+        byt = self.bytes_by_function()
+        for fn in sorted(freq, key=lambda f: -freq[f]):
+            lines.append(f"{fn:<18s} {int(freq[fn]):>8d} {byt[fn]:>16,d}")
+        return "\n".join(lines)
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * np.dtype(aval.dtype).itemsize
+    except Exception:
+        return 0
+
+
+def _axes_of(params: Mapping[str, Any]) -> Tuple[str, ...]:
+    for key in ("axes", "axis_name", "axis_names"):
+        if key in params:
+            v = params[key]
+            if isinstance(v, (tuple, list)):
+                return tuple(str(a) for a in v)
+            return (str(v),)
+    return ()
+
+
+def _sub_jaxprs(params: Mapping[str, Any]):
+    """Yield every (closed) sub-jaxpr stored in an eqn's params."""
+    for v in params.values():
+        if isinstance(v, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                if isinstance(item, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+                    yield item
+
+
+def _walk(jaxpr: jcore.Jaxpr, mult: int, path: Tuple[str, ...],
+          out: List[CallSite]) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        fn = PRIMITIVE_MAP.get(name)
+        if fn is not None:
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.invars
+                         if hasattr(v, "aval"))
+            out.append(CallSite(
+                function=fn, primitive=name, count=mult, nbytes=nbytes,
+                axes=_axes_of(eqn.params), path=path,
+            ))
+        # Recurse into sub-jaxprs; scan multiplies by trip count.
+        sub_mult = mult
+        if name == "scan":
+            sub_mult = mult * int(eqn.params.get("length", 1))
+        elif name == "while":
+            sub_mult = mult  # unknown trip count: count >= 1 statically
+        for sub in _sub_jaxprs(eqn.params):
+            inner = sub.jaxpr if isinstance(sub, jcore.ClosedJaxpr) else sub
+            _walk(inner, sub_mult, path + (name,), out)
+
+
+def scan_jaxpr(closed: jcore.ClosedJaxpr) -> TraceReport:
+    sites: List[CallSite] = []
+    _walk(closed.jaxpr, 1, (), sites)
+    return TraceReport(sites=sites)
+
+
+def scan_step(fn: Callable, *args, **kwargs) -> TraceReport:
+    """Trace ``fn`` with abstract inputs and scan it for collectives.
+
+    ``args``/``kwargs`` may be ShapeDtypeStructs or concrete arrays; nothing
+    is executed.  This is the paper's pre-execution application scan.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return scan_jaxpr(closed)
+
+
+def scan_lowered_hlo(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Fallback scanner over StableHLO/HLO text (used by the dry-run to
+    count collective bytes in the *compiled* program, where XLA may have
+    inserted collectives that never existed in the jaxpr).
+
+    Returns {collective_kind: {"count": n, "bytes": b}}.
+    """
+    from repro.launch import hloanalysis  # local import; heavy-ish
+
+    return hloanalysis.collective_summary(hlo_text)

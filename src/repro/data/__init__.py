@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, Prefetcher
+
+__all__ = ["SyntheticLMDataset", "Prefetcher"]

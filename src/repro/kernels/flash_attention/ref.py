@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: exact softmax attention with optional causal mask.
+
+Shapes follow the kernel's flattened convention:
+  q: (BH, Sq, D)   k, v: (BHkv, Skv, D)   with BH % BHkv == 0 (GQA groups).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, sm_scale: float | None = None,
+              q_offset: int = 0) -> jax.Array:
+    """Exact attention.  ``q_offset`` places the query block at absolute
+    position ``q_offset + i`` for causal masking (decode: q_offset = cache
+    length so the single new token sees the whole prefix)."""
+    bh, sq, d = q.shape
+    bhkv = k.shape[0]
+    group = bh // bhkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    kx = jnp.repeat(k, group, axis=0)
+    vx = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * sm_scale
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(qi >= ki, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.local_reduce import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: tiled k-way chunk reduction (ring/two-phase inner op).
+
+Reduce-scatter phases materialize k received contributions that must be
+summed into one chunk.  Summing k large HBM-resident chunks is pure
+memory-bandwidth work; the kernel streams (TILE_ROWS, 128) VMEM tiles and
+accumulates across the k grid dimension in the revisited output block, so
+each output byte is written once (vs k-1 times for a naive jnp.sum chain
+of adds when XLA fails to fuse across collective boundaries).
+
+Grid: (row_tiles, k) with k innermost ("arbitrary") so the output block
+stays resident in VMEM across the whole accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+TILE_ROWS = 8  # (8, 128) f32 native tile
+
+
+def _sum_kernel(x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sum_chunks_3d(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """x: (k, rows, LANES) -> (rows, LANES) f32 sum."""
+    k, rows, lanes = x.shape
+    assert lanes == LANES and rows % TILE_ROWS == 0, x.shape
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(rows // TILE_ROWS, k),
+        in_specs=[pl.BlockSpec((1, TILE_ROWS, LANES), lambda i, j: (j, i, 0))],
+        out_specs=pl.BlockSpec((TILE_ROWS, LANES), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the tiled chunk reduction."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sum_chunks(x: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """x: (k, n) stacked contributions -> (n,) sum, accumulated in f32."""
+    return jnp.sum(x.astype(jnp.float32), axis=0).astype(dtype)

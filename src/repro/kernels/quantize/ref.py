@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for blockwise int8 quantization (compression protocol)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """x: (n,) with n % block == 0 -> (q int8 (n,), scales f32 (n/block,))."""
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def dequantize(q: jax.Array, scale: jax.Array, block: int = 256,
+               dtype=jnp.float32) -> jax.Array:
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scale[:, None]).astype(dtype).reshape(-1)
+
+
+def dequant_add(acc: jax.Array, q: jax.Array, scale: jax.Array,
+                block: int = 256) -> jax.Array:
+    """Fused receive-side op of the compressed ring: acc + dequant(q)."""
+    return acc + dequantize(q, scale, block, acc.dtype)

@@ -1,0 +1,759 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower+compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent: for the
+production meshes (16,16) and (2,16,16) every assigned architecture ×
+input shape must lower, SPMD-partition, and compile, fitting 16 GB/chip.
+Nothing is allocated — inputs are ShapeDtypeStructs; the compiled
+artifact yields the roofline terms (repro.launch.hloanalysis).
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+          --shape train_4k --mesh single
+      PYTHONPATH=src python -m repro.launch.dryrun --all   (subprocess per
+      cell; keeps one compile's RSS per process)
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, cells, get_arch, get_config, get_shape
+from repro.launch import hloanalysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.encdec import EncDecCfg
+from repro.optim import make_optimizer
+from repro.parallel.sharding import filter_spec, named_shardings
+from repro.train import trainer
+
+HBM_PER_CHIP = 16 * 1024 ** 3          # v5e-class
+
+# Per-arch dry-run training settings (fit 16 GB/chip on the single pod).
+# optimizer: adafactor for the 123B–671B models (factored V), adamw below.
+_TRAIN_SETTINGS: Dict[str, Dict[str, Any]] = {
+    "qwen2-vl-7b": dict(optimizer="adamw", microbatches=2),
+    "mistral-large-123b": dict(optimizer="adafactor", microbatches=8),
+    "nemotron-4-340b": dict(optimizer="adafactor", microbatches=8,
+                            grad_dtype=jnp.bfloat16),
+    "qwen2-72b": dict(optimizer="adamw", microbatches=8,
+                      opt_kwargs=dict(state_dtype=jnp.bfloat16)),
+    "granite-34b": dict(optimizer="adamw", microbatches=8,
+                        opt_kwargs=dict(state_dtype=jnp.bfloat16)),
+    "jamba-1.5-large-398b": dict(optimizer="adafactor", microbatches=8,
+                                 grad_dtype=jnp.bfloat16),
+    "mamba2-1.3b": dict(optimizer="adamw", microbatches=4),
+    "seamless-m4t-large-v2": dict(optimizer="adamw", microbatches=1),
+    "deepseek-v3-671b": dict(optimizer="adafactor", microbatches=8,
+                             grad_dtype=jnp.bfloat16),
+    "qwen3-moe-30b-a3b": dict(optimizer="adamw", microbatches=2,
+                              opt_kwargs=dict(state_dtype=jnp.bfloat16)),
+}
+
+
+def train_settings(arch_id: str) -> Dict[str, Any]:
+    return dict(_TRAIN_SETTINGS.get(arch_id, {}))
+
+
+# Perf-iteration variants (§Perf hillclimbs).  Each is a set of knobs on
+# top of the baseline cell; results land in artifacts as
+# <arch>__<shape>__<mesh>@<variant>.json.
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    # gradient-sync family (paper system + beyond-paper)
+    "composed": dict(sync="composed"),
+    "bucketed": dict(sync="composed", bucket=True),
+    "compressed": dict(sync="compressed", bucket=True),
+    # sharding-scheme family
+    "puredp": dict(puredp=True),          # fold "model" into data parallel
+    "zero1": dict(zero1=True),            # params TP-only, opt states FSDP
+    "seqflash": dict(seqflash=True),      # sequence-parallel flash tiles
+    "mb2_seqflash": dict(microbatches=2, seqflash=True),
+    "mb4_seqflash": dict(microbatches=4, seqflash=True),
+    "zero1_seqflash": dict(zero1=True, seqflash=True),
+    "zero1_seqflash_mb1": dict(zero1=True, seqflash=True, microbatches=1),
+    "mb1_seqflash": dict(microbatches=1, seqflash=True),
+    # microbatch family (FSDP re-gather traffic ∝ microbatches)
+    "mb4": dict(microbatches=4),
+    "mb2": dict(microbatches=2),
+    "mb1": dict(microbatches=1),
+    # compute/memory family
+    "remat_dots": dict(remat_policy="dots"),
+    "capacity_1x": dict(capacity_factor=1.0),
+    "block_k_1024": dict(block_k=1024),
+    "block_k_256": dict(block_k=256),
+}
+
+
+def _apply_variant_cfg(cfg, variant: Dict[str, Any]):
+    import dataclasses as dc
+    from repro.models.transformer import TransformerCfg
+    if not isinstance(cfg, TransformerCfg):
+        return cfg
+    if variant.get("capacity_factor") and cfg.moe is not None:
+        cfg = dc.replace(cfg, moe=dc.replace(
+            cfg.moe, capacity_factor=variant["capacity_factor"]))
+    if variant.get("block_k"):
+        cfg = dc.replace(cfg, block_k=variant["block_k"])
+    if variant.get("remat_policy"):
+        cfg = dc.replace(cfg, remat_policy=variant["remat_policy"])
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch_id: str, shape_name: str) -> Dict[str, Any]:
+    """Batch stand-ins for one cell (the step's data inputs)."""
+    info = get_arch(arch_id)
+    cfg = get_config(arch_id)
+    shape = get_shape(shape_name)
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if isinstance(cfg, EncDecCfg):
+        batch = {
+            "frame_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                 jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif info.uses_embeds:   # vlm backbone: precomputed patch embeddings
+        batch = {
+            "inputs_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                  jnp.bfloat16),
+            "positions": jax.ShapeDtypeStruct((3, b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+
+    if shape.kind == "prefill":
+        batch.pop("labels", None)
+    if shape.kind == "decode":
+        # one new token against a seq_len cache
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if isinstance(cfg, EncDecCfg):
+            pass                       # memory lives in the cache pytree
+        elif info.uses_embeds:
+            batch = {"inputs_embeds": jax.ShapeDtypeStruct(
+                (b, 1, cfg.d_model), jnp.bfloat16),
+                "positions": jax.ShapeDtypeStruct((3, b, 1), i32)}
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Sharding fitting
+# ---------------------------------------------------------------------------
+
+def _axes_size(mesh, entry) -> int:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return n
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Filter to mesh axes and drop entries that cannot shard their dim
+    (dim < shards).  Uneven-but-larger dims keep their sharding (GSPMD
+    pads)."""
+    fs = filter_spec(spec, mesh.axis_names)
+    out = []
+    for i, entry in enumerate(fs):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        if shape[i] % _axes_size(mesh, entry) != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def fit_shardings(spec_tree, shaped_tree, mesh):
+    def one(spec, leaf):
+        return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map(
+        one, spec_tree, shaped_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def serve_cache_shardings(model, mesh, batch: int, max_len: int,
+                          enc_len: int = 0):
+    """Cache placement for decode/prefill cells.  Template specs put the
+    batch over ("pod","data") and heads over "model"; when those don't
+    divide (batch=1 long-context, kv_heads < model), the sequence dim is
+    sharded instead (context-parallel cache)."""
+    specs = model.cache_specs()
+    abstract = jax.eval_shape(
+        lambda: model.init_caches(batch, max_len, enc_len=enc_len,
+                                  dtype=jnp.bfloat16)) \
+        if model.kind == "encdec" else \
+        jax.eval_shape(lambda: model.init_caches(batch, max_len,
+                                                 dtype=jnp.bfloat16))
+
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(spec, leaf):
+        fitted = list(fit_spec(spec, leaf.shape, mesh))
+        while len(fitted) < len(leaf.shape):
+            fitted.append(None)
+        used = set()
+        for e in fitted:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a:
+                    used.add(a)
+        # Shard the longest unsharded dim (the sequence) over free axes.
+        free = [a for a in ("model", "data", "pod") if a in mesh_sizes
+                and a not in used]
+        if free and len(leaf.shape) >= 2:
+            dims = [(d, i) for i, d in enumerate(leaf.shape)
+                    if fitted[i] is None]
+            if dims:
+                dmax, imax = max(dims)
+                axes = []
+                for a in free:
+                    n = mesh_sizes[a]
+                    cur = 1
+                    for x in axes:
+                        cur *= mesh_sizes[x]
+                    if dmax % (cur * n) == 0 and dmax >= 2 * cur * n:
+                        axes.append(a)
+                if axes and dmax >= 1024:   # only worth it for seq dims
+                    fitted[imax] = tuple(axes) if len(axes) > 1 else axes[0]
+        return NamedSharding(mesh, P(*fitted))
+
+    return jax.tree_util.tree_map(
+        one, specs, abstract, is_leaf=lambda s: isinstance(s, P)), abstract
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    fn: Any
+    args: Tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def build_train_cell(arch_id: str, shape_name: str, mesh,
+                     variant: Optional[Dict[str, Any]] = None) -> Cell:
+    variant = variant or {}
+    cfg = _apply_variant_cfg(get_config(arch_id), variant)
+    model = build_model(cfg)
+    st = train_settings(arch_id)
+    opt = make_optimizer(st.get("optimizer", "adamw"),
+                         **st.get("opt_kwargs", {}))
+    sync = variant.get("sync", "auto")
+    tcfg = trainer.TrainCfg(
+        microbatches=variant.get("microbatches",
+                                 st.get("microbatches", 1)),
+        sync_mode=sync,
+        data_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+        bucket_grads=bool(variant.get("bucket")),
+        grad_dtype=st.get("grad_dtype", jnp.float32))
+    state = trainer.make_train_state(model, opt, abstract=True, cfg=tcfg)
+    sspecs = trainer.state_specs(model, opt, tcfg)
+    if variant.get("zero1"):
+        # ZeRO-1: params and grads sharded over "model" only (no per-
+        # microbatch FSDP re-gather); optimizer states keep the full
+        # (data, model) sharding; GSPMD inserts RS(grads)+AG(params)
+        # exactly once per step around the update.
+        def drop_data(spec):
+            return P(*[
+                (tuple(a for a in e if a != "data") or None)
+                if isinstance(e, tuple)
+                else (None if e == "data" else e)
+                for e in spec])
+        sspecs = dict(sspecs)
+        sspecs["params"] = jax.tree_util.tree_map(
+            drop_data, sspecs["params"],
+            is_leaf=lambda s: isinstance(s, P))
+    if variant.get("puredp"):
+        # fold the model axis into data parallelism: params/opt fully
+        # FSDP-sharded over all axes, no TP — right call for small models
+        # whose TP collectives dwarf their compute.
+        all_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = 1
+        for a in all_axes:
+            total *= sizes[a]
+
+        def puredp_spec(_, leaf):
+            dims = list(leaf.shape)
+            entries = [None] * len(dims)
+            for want in (total, sizes.get("data", 1)):
+                cands = [(d, i) for i, d in enumerate(dims) if d % want == 0
+                         and d >= want]
+                if cands:
+                    _, i = max(cands)
+                    entries[i] = all_axes if want == total else "data"
+                    break
+            return P(*entries)
+
+        sspecs = jax.tree_util.tree_map(
+            puredp_spec, sspecs, state,
+            is_leaf=lambda s: isinstance(s, P))
+    state_sh = fit_shardings(sspecs, state, mesh)
+    batch = input_specs(arch_id, shape_name)
+    if variant.get("puredp"):
+        bspecs = trainer.batch_specs(
+            batch, data_axes=tuple(a for a in ("pod", "data", "model")
+                                   if a in mesh.axis_names))
+    else:
+        bspecs = trainer.batch_specs(batch)
+    batch_sh = fit_shardings(bspecs, batch, mesh)
+    engine = None
+    if sync != "auto":
+        from repro.core import (CollectiveEngine, EngineConfig,
+                                compose_library, registry)
+        from repro.core.topology import topology_from_mesh
+        engine = CollectiveEngine(
+            topology_from_mesh(mesh),
+            library=compose_library(registry.ALL_FUNCTIONS),
+            config=EngineConfig(mode="composed"))
+    step = trainer.make_train_step(model, opt, tcfg, mesh=mesh,
+                                   engine=engine)
+    return Cell(fn=step, args=(state, batch),
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate=(0,),
+                meta={"kind": "train", "microbatches": tcfg.microbatches,
+                      "optimizer": opt.name,
+                      "variant": {k: str(v) for k, v in variant.items()}})
+
+
+def build_prefill_cell(arch_id: str, shape_name: str, mesh) -> Cell:
+    cfg = get_config(arch_id)
+    model = build_model(cfg)
+    shape = get_shape(shape_name)
+    b, s = shape.global_batch, shape.seq_len
+    params = model.abstract_params()
+    params_sh = fit_shardings(model.param_specs(), params, mesh)
+    batch = input_specs(arch_id, shape_name)
+    bspecs = trainer.batch_specs(batch)
+    batch_sh = fit_shardings(bspecs, batch, mesh)
+    cache_sh, _ = serve_cache_shardings(model, mesh, b, s,
+                                        enc_len=s)
+    logits_sh = NamedSharding(
+        mesh, fit_spec(P(("pod", "data"), "model"),
+                       (b, cfg.vocab_size), mesh))
+
+    if model.kind == "encdec":
+        def fn(p, bt):
+            caches = model.init_caches(b, s, enc_len=s, dtype=jnp.bfloat16)
+            return model.prefill(p, bt, caches)
+    else:
+        def fn(p, bt):
+            caches = model.init_caches(b, s, dtype=jnp.bfloat16)
+            return model.prefill(p, bt, caches)
+
+    return Cell(fn=fn, args=(params, batch),
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(logits_sh, cache_sh),
+                donate=(),
+                meta={"kind": "prefill"})
+
+
+def build_decode_cell(arch_id: str, shape_name: str, mesh) -> Cell:
+    cfg = get_config(arch_id)
+    model = build_model(cfg)
+    shape = get_shape(shape_name)
+    b, s = shape.global_batch, shape.seq_len
+    params = model.abstract_params()
+    params_sh = fit_shardings(model.param_specs(), params, mesh)
+    batch = input_specs(arch_id, shape_name)
+    bspecs = trainer.batch_specs(batch)
+    batch_sh = fit_shardings(bspecs, batch, mesh)
+    # +512 generation headroom keeps the cache seq dim divisible by every
+    # mesh-axis product (16, 256) for context-parallel cache sharding.
+    cache_len = s + 512
+    cache_sh, caches = serve_cache_shardings(model, mesh, b, cache_len,
+                                             enc_len=s)
+    logits_sh = NamedSharding(
+        mesh, fit_spec(P(("pod", "data"), "model"),
+                       (b, cfg.vocab_size), mesh))
+
+    def fn(p, bt, caches_in):
+        return model.decode_step(p, bt, caches_in)
+
+    return Cell(fn=fn, args=(params, batch, caches),
+                in_shardings=(params_sh, batch_sh, cache_sh),
+                out_shardings=(logits_sh, cache_sh),
+                donate=(2,),
+                meta={"kind": "decode", "cache_len": cache_len})
+
+
+def build_cell(arch_id: str, shape_name: str, mesh,
+               variant: Optional[Dict[str, Any]] = None) -> Cell:
+    kind = get_shape(shape_name).kind
+    if kind == "train":
+        return build_train_cell(arch_id, shape_name, mesh, variant)
+    if kind == "prefill":
+        return build_prefill_cell(arch_id, shape_name, mesh)
+    return build_decode_cell(arch_id, shape_name, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Analytic TPU memory model (train cells).
+#
+# XLA:CPU has no native bf16: its float-normalization pass materializes f32
+# copies of bf16 while-loop state (saved activation stacks, stacked grad
+# accumulators), inflating memory_analysis 2-3x vs a native-bf16 TPU
+# compile (minimal repro in EXPERIMENTS.md §Dry-run).  The fit verdict
+# therefore uses this analytic model; the measured number is reported as
+# the CPU upper bound.
+# ---------------------------------------------------------------------------
+
+def _dt_bytes(dt) -> int:
+    return jnp.dtype(dt).itemsize
+
+
+def sharded_tree_bytes(tree, shardings, mesh) -> float:
+    """Per-device bytes of a pytree under NamedShardings."""
+    import math
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0.0
+    leaves = jax.tree_util.tree_leaves(tree)
+    shs = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda s: isinstance(s, NamedSharding))
+    for leaf, sh in zip(leaves, shs):
+        n = math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+        shards = 1
+        for entry in sh.spec:
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                if a:
+                    shards *= sizes.get(a, 1)
+        total += n / shards
+    return total
+
+
+def analytic_memory_serve(arch_id: str, shape_name: str, mesh
+                          ) -> Dict[str, float]:
+    """TPU-expected footprint for prefill/decode cells: sharded params +
+    sharded cache (donated in decode) + a per-layer transient estimate.
+    The CPU-measured temp is inflated by bf16->f32 legalization copies of
+    the cache and un-aliased while-loop double buffering."""
+    cfg = get_config(arch_id)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    devices = mesh.devices.size
+    data_shards = sizes.get("data", 1) * sizes.get("pod", 1)
+    params_b = 2.0 * model.param_count() / devices
+    cache_len = shape.seq_len + 512 if shape.kind == "decode" \
+        else shape.seq_len
+    cache_sh, caches = serve_cache_shardings(
+        model, mesh, shape.global_batch, cache_len, enc_len=shape.seq_len)
+    cache_b = sharded_tree_bytes(caches, cache_sh, mesh)
+    d = cfg.d_model
+    b_loc = max(shape.global_batch // data_shards, 1)
+    if shape.kind == "prefill":
+        transient = (6.0 * b_loc * shape.seq_len * d * 2.0
+                     / min(sizes.get("model", 1), 16) + 2**30)
+    else:
+        transient = max(2**30, 0.05 * cache_b)
+    total = params_b + cache_b + transient
+    return {"params": params_b, "cache": cache_b, "transient": transient,
+            "total": total, "fits_16gb": bool(total < HBM_PER_CHIP)}
+
+
+def analytic_memory_train(arch_id: str, shape_name: str, mesh
+                          ) -> Dict[str, float]:
+    from repro.models.encdec import EncDecCfg
+    cfg = get_config(arch_id)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    st = train_settings(arch_id)
+    n = model.param_count()
+    devices = mesh.devices.size
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_shards = sizes.get("data", 1) * sizes.get("pod", 1)
+    model_shards = sizes.get("model", 1)
+    mb = st.get("microbatches", 1)
+    grad_b = _dt_bytes(st.get("grad_dtype", jnp.float32))
+    opt_name = st.get("optimizer", "adamw")
+    state_b = _dt_bytes(st.get("opt_kwargs", {}).get("state_dtype",
+                                                     jnp.float32))
+
+    params = 2.0 * n / devices
+    grads = grad_b * n / devices
+    opt = (2.0 * state_b * n / devices if opt_name == "adamw"
+           else 0.02 * 4.0 * n / devices)
+
+    d = cfg.d_model
+    s = shape.seq_len
+    b_loc = max(shape.global_batch // data_shards // mb, 1)
+    n_layers = cfg.num_layers
+    # saved layer boundaries are sequence-sharded over the TP axis
+    sp = model_shards if s % model_shards == 0 else 1
+    boundaries = n_layers * b_loc * s * d * 2.0 / sp
+    logits = 6.0 * b_loc * s * cfg.vocab_size / model_shards  # bf16+f32 oh
+    transient = 6.0 * b_loc * s * d * 4.0
+    if not isinstance(cfg, EncDecCfg) and cfg.moe is not None:
+        from repro.models.moe import capacity_of
+        t_loc = b_loc * s
+        c_cap = capacity_of(t_loc, cfg.moe)
+        e_loc = max(cfg.moe.num_experts // model_shards, 1)
+        transient += 3.0 * e_loc * c_cap * d * 2.0 \
+            + 2.0 * e_loc * c_cap * cfg.moe.d_ff * 2.0
+    total = params + grads + opt + boundaries + logits + transient
+    return {"params": params, "grads": grads, "opt_state": opt,
+            "activation_boundaries": boundaries, "logits": logits,
+            "transient": transient, "total": total,
+            "fits_16gb": bool(total < HBM_PER_CHIP)}
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (6·N·D) for the roofline's usefulness ratio
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg) -> int:
+    """Params touched per token (MoE: shared + top_k/E of routed)."""
+    import math
+    from repro.models.transformer import TransformerCfg
+    model = build_model(cfg)
+    total = model.param_count()
+    if not isinstance(cfg, TransformerCfg) or cfg.moe is None:
+        return total
+    moe = cfg.moe
+    n_moe_layers = sum(
+        sum(1 for l in st.layers if l.ffn == "moe") * st.repeat
+        for st in cfg.stages)
+    per_expert = 3 * moe.d_model * moe.d_ff if moe.activation == "swiglu" \
+        else 2 * moe.d_model * moe.d_ff
+    routed = n_moe_layers * moe.num_experts * per_expert
+    active_routed = n_moe_layers * moe.top_k * per_expert
+    return total - routed + active_routed
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    cfg = get_config(arch_id)
+    shape = get_shape(shape_name)
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch   # decode: 1 token/seq
+
+
+# ---------------------------------------------------------------------------
+# Running one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             out_dir: Optional[str] = None, save_hlo: bool = False,
+             variant_name: str = "baseline") -> Dict[str, Any]:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.devices.size
+    record: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "devices": int(n_dev), "ok": False, "variant": variant_name,
+    }
+    t0 = time.time()
+    try:
+        if VARIANTS[variant_name].get("zero1"):
+            os.environ["REPRO_MOE_FSDP"] = "0"
+        if VARIANTS[variant_name].get("seqflash"):
+            os.environ["REPRO_SEQ_FLASH"] = "1"
+        with jax.set_mesh(mesh):
+            cell = build_cell(arch_id, shape_name, mesh,
+                              VARIANTS[variant_name])
+            jitted = jax.jit(cell.fn,
+                             in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        cost = hloanalysis.analyze_module(hlo, total_devices=n_dev)
+        per_dev_bytes = (mem.argument_size_in_bytes
+                         + mem.output_size_in_bytes
+                         + mem.temp_size_in_bytes
+                         - mem.alias_size_in_bytes)
+        kind = get_shape(shape_name).kind
+        # Fit verdicts come from the analytic TPU model: the CPU backend
+        # legalizes bf16 loop state to f32 copies and does not alias
+        # donated while-loop buffers, inflating measured temp 2-3x (see
+        # EXPERIMENTS.md §Dry-run for the minimal repro).  Measured bytes
+        # are reported alongside as the CPU upper bound.
+        analytic = (analytic_memory_train(arch_id, shape_name, mesh)
+                    if kind == "train"
+                    else analytic_memory_serve(arch_id, shape_name, mesh))
+        fits = analytic["fits_16gb"]
+        record.update({
+            "ok": True,
+            "meta": cell.meta,
+            "seconds_lower": round(t_lower, 2),
+            "seconds_compile": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_per_device_cpu_measured": per_dev_bytes,
+                "analytic_tpu": analytic,
+                "fits_16gb": fits,
+            },
+            "xla_cost_analysis": {
+                "flops_per_device_unrolled_once": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+            },
+            "analysis": cost.as_dict(),
+            "model_flops_global": model_flops(arch_id, shape_name),
+        })
+        if save_hlo and out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            suffix = "" if variant_name == "baseline" else f"@{variant_name}"
+            with open(os.path.join(
+                    out_dir,
+                    f"{arch_id}__{shape_name}__{mesh_kind}{suffix}.hlo.txt"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:  # record the failure; the driver reports it
+        record["error"] = f"{type(e).__name__}: {e}"[:2000]
+    record["seconds_total"] = round(time.time() - t0, 2)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if variant_name == "baseline" else f"@{variant_name}"
+        path = os.path.join(
+            out_dir, f"{arch_id}__{shape_name}__{mesh_kind}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def _print_record(r: Dict[str, Any]) -> None:
+    if r.get("ok"):
+        mem = r["memory"].get(
+            "peak_per_device_cpu_measured",
+            r["memory"].get("peak_per_device", 0)) / 1e9
+        an = r["analysis"]
+        at = r["memory"].get("analytic_tpu")
+        extra = f" tpu-est={at['total']/1e9:5.2f}GB" if at else ""
+        print(f"[OK ] {r['arch']:<24s} {r['shape']:<12s} {r['mesh']:<6s} "
+              f"mem/dev={mem:6.2f}GB{extra} fits={r['memory']['fits_16gb']} "
+              f"flops/dev={an['flops']:.3e} wire/dev={an['wire_bytes']:.3e} "
+              f"lower={r['seconds_lower']}s compile={r['seconds_compile']}s")
+    else:
+        print(f"[FAIL] {r['arch']:<24s} {r['shape']:<12s} {r['mesh']:<6s} "
+              f"{r.get('error', '?')[:200]}")
+
+
+def reanalyze(out_dir: str) -> int:
+    """Re-run the HLO analyzer over saved .hlo.txt artifacts (analyzer
+    iteration without recompiling)."""
+    import glob
+    n = 0
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        hlo_path = path[:-5] + ".hlo.txt"
+        if not rec.get("ok") or not os.path.exists(hlo_path):
+            continue
+        with open(hlo_path) as f:
+            cost = hloanalysis.analyze_module(f.read(),
+                                              total_devices=rec["devices"])
+        rec["analysis"] = cost.as_dict()
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        n += 1
+    print(f"reanalyzed {n} records")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=["train_4k", "prefill_32k",
+                                        "decode_32k", "long_500k"])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--variant", choices=list(VARIANTS), default="baseline")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell in a subprocess each")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        return reanalyze(args.out)
+
+    if args.list:
+        for a, s, skip in cells(include_skipped=True):
+            print(f"{a:<24s} {s:<12s} {'SKIP' if skip else ''}")
+        return 0
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        failures = 0
+        for a, s, _ in cells():
+            for mk in meshes:
+                path = os.path.join(args.out, f"{a}__{s}__{mk}.json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        r = json.load(f)
+                    if r.get("ok"):
+                        _print_record(r)
+                        continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--mesh", mk,
+                       "--out", args.out]
+                if args.save_hlo:
+                    cmd.append("--save-hlo")
+                proc = subprocess.run(cmd, capture_output=True, text=True)
+                try:
+                    with open(path) as f:
+                        r = json.load(f)
+                except FileNotFoundError:
+                    r = {"arch": a, "shape": s, "mesh": mk, "ok": False,
+                         "error": proc.stderr[-1500:]}
+                _print_record(r)
+                failures += 0 if r.get("ok") else 1
+        return 1 if failures else 0
+
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --all/--list)")
+    info = get_arch(args.arch)
+    if args.shape in info.skip_shapes:
+        print(f"[SKIP] {args.arch} {args.shape}: inapplicable "
+              f"(see DESIGN.md §Arch-applicability)")
+        return 0
+    rc = 0
+    for mk in meshes:
+        r = run_cell(args.arch, args.shape, mk, out_dir=args.out,
+                     save_hlo=args.save_hlo, variant_name=args.variant)
+        _print_record(r)
+        rc |= 0 if r.get("ok") else 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+"""Model zoo substrate: pure-JAX (pytree params, functional apply)."""
+
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

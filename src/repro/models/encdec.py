@@ -1,0 +1,232 @@
+"""Encoder-decoder backbone (SeamlessM4T-v2 text/speech translator).
+
+The modality frontend is a stub (precomputed frame embeddings —
+``repro.models.frontends``); this module is the transformer backbone:
+a non-causal encoder over frames and a causal decoder with cross-attention.
+Both stacks scan stacked layer params like ``transformer.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import shard_hint, stack_specs
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecCfg:
+    name: str
+    d_model: int
+    vocab_size: int
+    enc_layers: int
+    dec_layers: int
+    attn: L.AttentionCfg = None          # self-attention (enc: non-causal)
+    cross: L.AttentionCfg = None         # decoder cross-attention
+    mlp: L.MLPCfg = None
+    norm: str = "layernorm"
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    block_k: int = 512
+
+    @property
+    def num_layers(self) -> int:
+        return self.enc_layers + self.dec_layers
+
+
+def _init_norm(cfg, dtype):
+    if cfg.norm == "layernorm":
+        return L.init_layernorm(cfg.d_model, dtype)
+    return L.init_rmsnorm(cfg.d_model, dtype)
+
+
+def _norm(cfg, p, x):
+    return L.layernorm(p, x) if cfg.norm == "layernorm" else L.rmsnorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(key, cfg: EncDecCfg):
+    ka, km = jax.random.split(key)
+    dt = cfg.param_dtype
+    enc_attn = dataclasses.replace(cfg.attn, causal=False)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = _init_norm(cfg, dt)
+    p["attn"], s["attn"] = L.init_attention(ka, enc_attn, dt)
+    p["norm2"], s["norm2"] = _init_norm(cfg, dt)
+    p["mlp"], s["mlp"] = L.init_mlp(km, cfg.mlp, dt)
+    return p, s
+
+
+def _apply_enc_layer(params, cfg: EncDecCfg, x):
+    enc_attn = dataclasses.replace(cfg.attn, causal=False)
+    h = _norm(cfg, params["norm1"], x)
+    h = shard_hint(h, P(("pod", "data"), None, None))
+    out, _ = L.attention_forward(params["attn"], enc_attn, h,
+                                 block_k=cfg.block_k)
+    x = x + out
+    h = _norm(cfg, params["norm2"], x)
+    return x + L.mlp_forward(params["mlp"], cfg.mlp, h)
+
+
+def _init_dec_layer(key, cfg: EncDecCfg):
+    ka, kc, km = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = _init_norm(cfg, dt)
+    p["self_attn"], s["self_attn"] = L.init_attention(ka, cfg.attn, dt)
+    p["norm_x"], s["norm_x"] = _init_norm(cfg, dt)
+    p["cross"], s["cross"] = L.init_cross_attention(kc, cfg.cross, dt)
+    p["norm2"], s["norm2"] = _init_norm(cfg, dt)
+    p["mlp"], s["mlp"] = L.init_mlp(km, cfg.mlp, dt)
+    return p, s
+
+
+def _apply_dec_layer(params, cfg: EncDecCfg, x, memory, *, q_offset=0,
+                     cache=None, decode=False):
+    h = _norm(cfg, params["norm1"], x)
+    h = shard_hint(h, P(("pod", "data"), None, None))
+    if decode:
+        out, new_cache = L.attention_decode(params["self_attn"], cfg.attn,
+                                            h, cache)
+    else:
+        out, new_cache = L.attention_forward(
+            params["self_attn"], cfg.attn, h, q_offset=q_offset,
+            kv_cache=cache, block_k=cfg.block_k)
+    x = x + out
+    h = _norm(cfg, params["norm_x"], x)
+    x = x + L.cross_attention_forward(params["cross"], cfg.cross, h, memory,
+                                      block_k=cfg.block_k)
+    h = _norm(cfg, params["norm2"], x)
+    return x + L.mlp_forward(params["mlp"], cfg.mlp, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: EncDecCfg):
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p: Params = {"embed": L.embed_init(kt, (cfg.vocab_size, cfg.d_model), dt)}
+    s: Params = {"embed": P("model", "data")}
+
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    p["encoder"] = jax.vmap(lambda k: _init_enc_layer(k, cfg)[0])(enc_keys)
+    s["encoder"] = stack_specs(_init_enc_layer(ke, cfg)[1])
+    dec_keys = jax.random.split(kd, cfg.dec_layers)
+    p["decoder"] = jax.vmap(lambda k: _init_dec_layer(k, cfg)[0])(dec_keys)
+    s["decoder"] = stack_specs(_init_dec_layer(kd, cfg)[1])
+
+    p["enc_norm"], s["enc_norm"] = _init_norm(cfg, dt)
+    p["dec_norm"], s["dec_norm"] = _init_norm(cfg, dt)
+    p["lm_head"] = L.dense_init(kp, (cfg.d_model, cfg.vocab_size), dt)
+    s["lm_head"] = P("data", "model")
+    return p, s
+
+
+def encode(params, cfg: EncDecCfg, frame_embeds: jax.Array) -> jax.Array:
+    """frame_embeds: (B, S_enc, D) from the stub frontend."""
+    x = frame_embeds.astype(cfg.param_dtype)
+    x = shard_hint(x, P(("pod", "data"), None, None))
+
+    def body(carry, layer_params):
+        fn = lambda c, lp: _apply_enc_layer(lp, cfg, c)
+        if cfg.remat:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(carry, layer_params), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def decode_train(params, cfg: EncDecCfg, tokens: jax.Array,
+                 memory: jax.Array) -> jax.Array:
+    """Teacher-forced decoder pass -> logits (B, S_dec, V)."""
+    x = params["embed"][tokens]
+    x = shard_hint(x, P(("pod", "data"), None, None))
+
+    def body(carry, layer_params):
+        def fn(c, lp):
+            y, _ = _apply_dec_layer(lp, cfg, c, memory)
+            return y
+        if cfg.remat:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(carry, layer_params), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = _norm(cfg, params["dec_norm"], x)
+    logits = x @ params["lm_head"]
+    return shard_hint(logits, P(("pod", "data"), None, "model"))
+
+
+def loss_fn(params, cfg: EncDecCfg, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict]:
+    memory = encode(params, cfg, batch["frame_embeds"])
+    logits = decode_train(params, cfg, batch["tokens"], memory)
+    loss = T.cross_entropy(logits, batch["labels"])
+    return loss, {"nll": loss, "loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with self-attn KV cache (+ stored memory)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: EncDecCfg, batch: int, max_len: int, enc_len: int,
+                dtype=jnp.bfloat16) -> Params:
+    def one(_):
+        return L.init_kv_cache(batch, max_len, cfg.attn, dtype)
+    layer_caches = jax.vmap(one)(jnp.arange(cfg.dec_layers))
+    return {"self": layer_caches,
+            "memory": jnp.zeros((batch, enc_len, cfg.d_model), dtype)}
+
+
+def cache_specs(cfg: EncDecCfg) -> Params:
+    return {"self": stack_specs(L.kv_cache_specs(cfg.attn)),
+            "memory": P(("pod", "data"), None, None)}
+
+
+def _decoder_pass(params, cfg: EncDecCfg, x, memory, caches, *,
+                  q_offset=0, decode: bool):
+    def body(carry, xs):
+        layer_params, layer_cache = xs
+        y, nc = _apply_dec_layer(layer_params, cfg, carry, memory,
+                                 q_offset=q_offset, cache=layer_cache,
+                                 decode=decode)
+        return y, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["decoder"], caches))
+    x = _norm(cfg, params["dec_norm"], x)
+    return x @ params["lm_head"], new_caches
+
+
+def prefill(params, cfg: EncDecCfg, batch: Dict[str, jax.Array],
+            caches: Params) -> Tuple[jax.Array, Params]:
+    memory = encode(params, cfg, batch["frame_embeds"])
+    memory = memory.astype(caches["memory"].dtype)
+    x = params["embed"][batch["tokens"]]
+    logits, new_self = _decoder_pass(params, cfg, x, memory, caches["self"],
+                                     q_offset=0, decode=False)
+    return logits[:, -1], {"self": new_self, "memory": memory}
+
+
+def decode_step(params, cfg: EncDecCfg, tokens: jax.Array, caches: Params
+                ) -> Tuple[jax.Array, Params]:
+    """tokens: (B, 1) -> (logits (B, V), caches)."""
+    x = params["embed"][tokens]
+    logits, new_self = _decoder_pass(
+        params, cfg, x, caches["memory"].astype(cfg.param_dtype),
+        caches["self"], decode=True)
+    return logits[:, 0], {"self": new_self, "memory": caches["memory"]}

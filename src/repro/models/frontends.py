@@ -1,0 +1,57 @@
+"""Stub modality frontends (per assignment: precomputed embeddings).
+
+``[vlm]``/``[audio]`` architectures get their patch/frame embeddings from
+here — deterministic pseudo-embeddings for smoke tests and examples, and
+ShapeDtypeStructs for the dry-run.  The transformer backbone is the real
+system under test; these stubs define its input contract.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def vision_patch_embeds(rng, batch: int, seq: int, d_model: int,
+                        dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Qwen2-VL stub: patch embeddings + 3D M-RoPE positions (t, h, w).
+
+    Emulates dynamic-resolution output: a prefix of image patches laid out
+    on a (t=1, h, w) grid followed by text positions continuing from the
+    image span — the shape contract of Qwen2-VL's vision merger.
+    """
+    embeds = jax.random.normal(rng, (batch, seq, d_model), jnp.float32)
+    embeds = (embeds * 0.02).astype(dtype)
+    n_img = seq // 4                       # leading quarter is "image"
+    side = max(int(n_img ** 0.5), 1)
+    idx = jnp.arange(seq)
+    in_img = idx < n_img
+    t_pos = jnp.where(in_img, 0, idx - n_img + side)
+    h_pos = jnp.where(in_img, jnp.minimum(idx // side, side - 1),
+                      idx - n_img + side)
+    w_pos = jnp.where(in_img, idx % side, idx - n_img + side)
+    pos = jnp.stack([t_pos, h_pos, w_pos])             # (3, S)
+    positions = jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+    return {"inputs_embeds": embeds, "positions": positions}
+
+
+def vision_input_specs(batch: int, seq: int, d_model: int, dtype=jnp.bfloat16
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "inputs_embeds": jax.ShapeDtypeStruct((batch, seq, d_model), dtype),
+        "positions": jax.ShapeDtypeStruct((3, batch, seq), jnp.int32),
+    }
+
+
+def audio_frame_embeds(rng, batch: int, frames: int, d_model: int,
+                       dtype=jnp.float32) -> jax.Array:
+    """Seamless stub: w2v-BERT-style frame embeddings (already downsampled)."""
+    x = jax.random.normal(rng, (batch, frames, d_model), jnp.float32)
+    return (x * 0.05).astype(dtype)
+
+
+def audio_input_specs(batch: int, frames: int, d_model: int,
+                      dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, frames, d_model), dtype)

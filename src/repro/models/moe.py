@@ -1,0 +1,344 @@
+"""Mixture-of-Experts: token-choice top-k routing with static capacity.
+
+Dispatch is scatter-based (GShard semantics without the (T, E, C) one-hot
+einsum tensor): positions-within-expert come from a cumsum over the (T·k, E)
+assignment matrix, tokens beyond capacity are dropped, and the (E, C, D)
+expert buffers are built with a scatter-add.  All shapes are static.
+
+Two execution paths:
+  - auto (pjit/GSPMD): the (E, C, D) buffers carry a sharding constraint
+    P("model", ...) so XLA inserts the expert-parallel all_to_all — the
+    conventional generic lowering (the paper's baseline).
+  - composed (shard_map): ``moe_forward_ep`` runs per-device with the
+    engine's per-function all_to_all protocol (Bruck vs pairwise chosen by
+    the cost model) — the paper's per-function protocol applied to the
+    MoE's dominant collective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff: int                     # per-expert (routed) intermediate size
+    num_experts: int
+    top_k: int
+    num_shared: int = 0           # deepseek-v3: 1 shared expert
+    shared_d_ff: int = 0          # 0 -> d_ff
+    capacity_factor: float = 1.25
+    activation: str = "swiglu"
+    scoring: str = "softmax"      # softmax | sigmoid (deepseek-v3)
+    norm_topk: bool = True        # renormalize weights over the chosen k
+    aux_loss_coef: float = 0.001
+
+
+def init_moe(key, cfg: MoECfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    std = 1.0 / math.sqrt(D)
+    stdf = 1.0 / math.sqrt(F)
+    p: Dict[str, Any] = {
+        "router": L.dense_init(ks[0], (D, E), jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   * std).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 * std).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   * stdf).astype(dtype),
+    }
+    s: Dict[str, Any] = {
+        "router": P("data", None),
+        "w_gate": P("model", "data", None),
+        "w_up": P("model", "data", None),
+        "w_down": P("model", None, "data"),
+    }
+    if cfg.num_shared:
+        sf = cfg.shared_d_ff or cfg.d_ff
+        mcfg = L.MLPCfg(D, sf * cfg.num_shared, cfg.activation)
+        p["shared"], s["shared"] = L.init_mlp(ks[4], mcfg, dtype)
+    return p, s
+
+
+def capacity_of(tokens: int, cfg: MoECfg) -> int:
+    c = int(math.ceil(tokens * cfg.top_k / cfg.num_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly tiles
+
+
+def _router_probs(logits: jax.Array, cfg: MoECfg) -> jax.Array:
+    if cfg.scoring == "sigmoid":
+        return jax.nn.sigmoid(logits)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def route(x2d: jax.Array, router_w: jax.Array, cfg: MoECfg, capacity: int):
+    """x2d: (T, D) -> dispatch plan + aux loss.
+
+    Returns (expert_idx (T,k), weights (T,k), pos (T,k), keep (T,k), aux).
+    """
+    T = x2d.shape[0]
+    logits = (x2d.astype(jnp.float32) @ router_w).astype(jnp.float32)
+    probs = _router_probs(logits, cfg)
+    top_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)      # (T, k)
+    if cfg.norm_topk:
+        top_vals = top_vals / jnp.maximum(
+            jnp.sum(top_vals, -1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert: token-major order.
+    onehot = jax.nn.one_hot(top_idx.reshape(-1), cfg.num_experts,
+                            dtype=jnp.int32)                 # (T*k, E)
+    pos1 = jnp.cumsum(onehot, axis=0) * onehot               # 1-based
+    pos = jnp.sum(pos1, axis=-1) - 1                         # (T*k,)
+    keep = pos < capacity
+    pos = pos.reshape(T, cfg.top_k)
+    keep = keep.reshape(T, cfg.top_k)
+
+    # Switch-style load-balance auxiliary loss.
+    me = jnp.mean(jax.nn.softmax(logits, -1), axis=0)        # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_idx[:, 0], cfg.num_experts, dtype=jnp.float32),
+        axis=0)
+    aux = cfg.aux_loss_coef * cfg.num_experts * jnp.sum(me * ce)
+    return top_idx, top_vals, pos, keep, aux
+
+
+def _expert_ffn(params, cfg: MoECfg, buf: jax.Array) -> jax.Array:
+    """buf: (E, C, D) -> (E, C, D), batched over experts."""
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        h = jax.nn.silu(g) * u
+    elif cfg.activation == "squared_relu":
+        h = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        h = jax.nn.relu(h)
+        h = h * h
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, params["w_up"]))
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def moe_forward(params, cfg: MoECfg, x: jax.Array,
+                constraint: Optional[Callable] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Auto-parallel path.  x: (B, S, D) -> (out, aux_loss).
+
+    ``constraint(tensor, spec)`` applies with_sharding_constraint under
+    pjit (None = no constraint, e.g. in single-device smoke tests).
+    """
+    b, s, d = x.shape
+    x2d = x.reshape(-1, d)
+    T = x2d.shape[0]
+    C = capacity_of(T, cfg)
+    top_idx, top_vals, pos, keep, aux = route(x2d, params["router"], cfg, C)
+
+    # Scatter tokens into per-expert buffers — one scatter per choice j, so
+    # the (T·k, D) repeat of every token embedding is never materialized.
+    posc = jnp.clip(pos, 0, C - 1)
+    buf = jnp.zeros((cfg.num_experts, C, d), x.dtype)
+    for j in range(cfg.top_k):
+        contrib = x2d * keep[:, j:j + 1].astype(x.dtype)
+        buf = buf.at[top_idx[:, j], posc[:, j]].add(contrib)
+    if constraint is not None:
+        buf = constraint(buf, P("model", None, None))
+
+    out_buf = _expert_ffn(params, cfg, buf)
+    if constraint is not None:
+        out_buf = constraint(out_buf, P("model", None, None))
+
+    # Gather back with routing weights, again per choice.
+    y = jnp.zeros((T, d), x.dtype)
+    for j in range(cfg.top_k):
+        g = out_buf[top_idx[:, j], posc[:, j]] \
+            * keep[:, j:j + 1].astype(x.dtype)
+        y = y + g * top_vals[:, j:j + 1].astype(x.dtype)
+
+    if cfg.num_shared:
+        sf = cfg.shared_d_ff or cfg.d_ff
+        y = y + L.mlp_forward(params["shared"],
+                              L.MLPCfg(d, sf * cfg.num_shared,
+                                       cfg.activation), x2d)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply(params, cfg: MoECfg, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Entry point used by the transformer layer.
+
+    Under an active mesh with a 'model' axis (and E % ep == 0) this runs
+    the expert-parallel shard_map path — GSPMD's generic gather
+    partitioning replicates the (E, C, D) combine across expert shards
+    (a ~19 GB/device bomb at deepseek scale), so the EP path keeps the
+    gather local to each expert shard and psums partial token outputs
+    over the model axis instead.  Elsewhere (single device / vmap tests)
+    it is the plain local computation."""
+    from repro.parallel.sharding import active_mesh, auto_axis_names
+    mesh = active_mesh()
+    if mesh is not None and "model" in auto_axis_names(mesh):
+        ep = dict(mesh.shape)["model"]
+        if ep > 1 and cfg.num_experts % ep == 0:
+            return moe_forward_shardmap(mesh, params, cfg, x)
+    return moe_forward(params, cfg, x, constraint=None)
+
+
+def moe_forward_shardmap(mesh, params, cfg: MoECfg, x: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Expert parallelism with replicated-over-TP activations.
+
+    Device (d, m) holds tokens of data-shard d (replicated across the
+    model axis) and experts [m·E/ep, (m+1)·E/ep).  Routing is computed
+    redundantly per model shard (deterministic), each shard scatters only
+    the tokens destined to ITS experts into a local (E/ep, C, D) buffer,
+    runs its experts, gathers locally, and the partial per-token outputs
+    are summed over the model axis — one psum per MoE layer, no
+    all_to_all, no cross-shard gather.
+    """
+    import functools
+    import os
+    from repro.parallel.sharding import auto_axis_names
+    auto = set(auto_axis_names(mesh))
+    data_axes = tuple(a for a in ("pod", "data") if a in auto)
+    ep = dict(mesh.shape)["model"]
+    e_loc = cfg.num_experts // ep
+
+    # Experts over "model"; the D dim stays FSDP-sharded over "data" in
+    # the specs and is all-gathered INSIDE the block, so weight grads
+    # leave the shard_map reduce-scattered back to (model, data) shards.
+    # REPRO_MOE_FSDP=0 (ZeRO-1 layouts) keeps expert weights whole per
+    # model shard: no per-call gather, grads psum over data via the
+    # shard_map transpose.
+    fsdp = "data" if ("data" in auto
+                      and os.environ.get("REPRO_MOE_FSDP", "1") == "1") \
+        else None
+    pspecs: Dict[str, Any] = {
+        "router": P(None, None),
+        "w_gate": P("model", fsdp, None),
+        "w_up": P("model", fsdp, None),
+        "w_down": P("model", None, fsdp),
+    }
+    if cfg.num_shared:
+        pspecs["shared"] = jax.tree_util.tree_map(
+            lambda _: P(), params["shared"])
+    bsz = 1
+    for a in data_axes:
+        bsz *= dict(mesh.shape)[a]
+    if data_axes and x.shape[0] % bsz == 0:
+        x_spec = P(data_axes if len(data_axes) > 1 else data_axes[0],
+                   None, None)
+    else:                    # batch=1 long-context decode: replicate tokens
+        x_spec = P(None, None, None)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(pspecs, x_spec),
+        out_specs=(x_spec, P()),
+        axis_names=set(data_axes) | {"model"}, check_vma=False)
+    def block(p, x_loc):
+        b_loc, s, d = x_loc.shape
+        x2d = x_loc.reshape(-1, d)
+        T = x2d.shape[0]
+        C = capacity_of(T, cfg)
+        top_idx, top_vals, pos, keep, aux = route(x2d, p["router"], cfg, C)
+
+        m_idx = jax.lax.axis_index("model")
+        e_lo = m_idx * e_loc
+        posc = jnp.clip(pos, 0, C - 1)
+
+        # FSDP: gather the experts' D dim (grads reduce-scatter back).
+        pw = dict(p)
+        if fsdp is not None:
+            pw["w_gate"] = jax.lax.all_gather(p["w_gate"], fsdp, axis=1,
+                                              tiled=True)
+            pw["w_up"] = jax.lax.all_gather(p["w_up"], fsdp, axis=1,
+                                            tiled=True)
+            pw["w_down"] = jax.lax.all_gather(p["w_down"], fsdp, axis=2,
+                                              tiled=True)
+
+        buf = jnp.zeros((e_loc, C, d), x_loc.dtype)
+        for j in range(cfg.top_k):
+            in_shard = ((top_idx[:, j] >= e_lo)
+                        & (top_idx[:, j] < e_lo + e_loc) & keep[:, j])
+            le = jnp.clip(top_idx[:, j] - e_lo, 0, e_loc - 1)
+            contrib = x2d * in_shard[:, None].astype(x_loc.dtype)
+            buf = buf.at[le, posc[:, j]].add(contrib)
+
+        local_cfg = dataclasses.replace(cfg, num_experts=e_loc,
+                                        num_shared=0)
+        out_buf = _expert_ffn(pw, local_cfg, buf)
+
+        y = jnp.zeros((T, d), x_loc.dtype)
+        for j in range(cfg.top_k):
+            in_shard = ((top_idx[:, j] >= e_lo)
+                        & (top_idx[:, j] < e_lo + e_loc) & keep[:, j])
+            le = jnp.clip(top_idx[:, j] - e_lo, 0, e_loc - 1)
+            g = out_buf[le, posc[:, j]] \
+                * in_shard[:, None].astype(x_loc.dtype)
+            y = y + g * top_vals[:, j:j + 1].astype(x_loc.dtype)
+        y = jax.lax.psum(y, "model")
+
+        if cfg.num_shared:
+            sf = cfg.shared_d_ff or cfg.d_ff
+            y = y + L.mlp_forward(p["shared"],
+                                  L.MLPCfg(d, sf * cfg.num_shared,
+                                           cfg.activation), x2d)
+        for ax in data_axes:
+            aux = jax.lax.psum(aux, ax) / jax.lax.psum(1, ax)
+        return y.reshape(b_loc, s, d), aux
+
+    needed = {k: params[k] for k in pspecs}
+    return block(needed, x)
+
+
+def moe_forward_ep(params_local, cfg: MoECfg, x: jax.Array, *,
+                   all_to_all: Callable, axis: str, ep_size: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel shard_map path (composed engine).
+
+    Called per device: ``x`` is the local token shard (B_loc, S, D);
+    ``params_local`` holds E/ep_size local experts.  ``all_to_all`` is the
+    engine-bound protocol (tiled lax.all_to_all semantics).
+    """
+    b, s, d = x.shape
+    x2d = x.reshape(-1, d)
+    T = x2d.shape[0]
+    C = capacity_of(T, cfg)
+    assert cfg.num_experts % ep_size == 0
+    e_loc = cfg.num_experts // ep_size
+    top_idx, top_vals, pos, keep, aux = route(
+        x2d, params_local["router"], cfg, C)
+
+    flat_e = top_idx.reshape(-1)
+    flat_p = jnp.clip(pos.reshape(-1), 0, C - 1)
+    flat_keep = keep.reshape(-1)
+    contrib = jnp.repeat(x2d, cfg.top_k, axis=0) * flat_keep[:, None]
+    buf = jnp.zeros((cfg.num_experts, C, d), x.dtype)
+    buf = buf.at[flat_e, flat_p].add(contrib.astype(x.dtype))
+
+    # Dispatch: split experts across devices, gather each expert's tokens
+    # from every device: (E, C, D) -> (E/p, p*C, D).
+    buf = all_to_all(buf, axis, 0, 1)
+    local_cfg = dataclasses.replace(cfg, num_experts=e_loc, num_shared=0)
+    out_buf = _expert_ffn(params_local, local_cfg, buf)
+    # Combine: inverse exchange.
+    out_buf = all_to_all(out_buf, axis, 1, 0)
+
+    gathered = out_buf[flat_e, flat_p] * flat_keep[:, None]
+    weighted = gathered.reshape(T, cfg.top_k, d) \
+        * top_vals[..., None].astype(x.dtype)
+    y = jnp.sum(weighted, axis=1)
+    if cfg.num_shared:
+        sf = cfg.shared_d_ff or cfg.d_ff
+        y = y + L.mlp_forward(params_local["shared"],
+                              L.MLPCfg(d, sf * cfg.num_shared,
+                                       cfg.activation), x2d)
+    return y.reshape(b, s, d), aux

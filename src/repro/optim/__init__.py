@@ -1,0 +1,5 @@
+from repro.optim.optimizer import (AdafactorCfg, AdamWCfg, Optimizer,
+                                   cosine_schedule, make_optimizer)
+
+__all__ = ["AdafactorCfg", "AdamWCfg", "Optimizer", "cosine_schedule",
+           "make_optimizer"]

@@ -1,0 +1,1 @@
+"""Distribution utilities: sharding specs, mesh helpers."""

@@ -1,0 +1,4 @@
+from repro.runtime.elastic import plan_mesh_shape, remesh
+from repro.runtime.watchdog import StepWatchdog
+
+__all__ = ["StepWatchdog", "plan_mesh_shape", "remesh"]

@@ -1,0 +1,67 @@
+"""Elastic re-meshing: keep training on whatever devices survive.
+
+``plan_mesh_shape`` picks the largest usable (pod, data, model) grid not
+exceeding the healthy-device count, holding the model axis fixed (param
+shardings stay valid) and shrinking the data axis — lost throughput, not
+lost progress.  ``remesh`` rebuilds the mesh and device_puts a state
+pytree onto it with the (re-filtered) spec tree; together with the atomic
+checkpoint store this is the crash-recovery path:
+
+    devices die -> restore latest checkpoint -> plan_mesh_shape ->
+    remesh(state) -> continue at the recorded step (data pipeline is a
+    pure function of step, so the token stream is unchanged).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+
+from repro.parallel.sharding import fitted_shardings
+
+
+def plan_mesh_shape(n_devices: int, model_parallel: int,
+                    pods: int = 1) -> Tuple[int, ...]:
+    """Largest (pod, data, model) grid with <= n_devices devices.
+
+    Keeps ``model_parallel`` fixed (changing it would re-layout params);
+    drops to fewer pods before shrinking data parallelism within a pod.
+    Falls back to shrinking model parallelism only when a single
+    model-parallel group no longer fits.
+    """
+    if n_devices < 1:
+        raise ValueError("no healthy devices")
+    mp = model_parallel
+    while mp > 1 and n_devices < mp:
+        mp //= 2                         # degraded: shrink TP as last resort
+    best = None
+    for p in range(pods, 0, -1):
+        per_pod = n_devices // p
+        data = per_pod // mp
+        if data >= 1:
+            plan = (p, data, mp) if pods > 1 else (data, mp)
+            used = p * data * mp
+            if best is None or used > best[0]:
+                best = (used, plan)
+    if best is None:
+        return (1, mp)
+    return best[1]
+
+
+def make_mesh_from_shape(shape: Sequence[int],
+                         axis_names: Optional[Sequence[str]] = None):
+    if axis_names is None:
+        axis_names = (("pod", "data", "model") if len(shape) == 3
+                      else ("data", "model"))
+    return jax.make_mesh(
+        tuple(shape), tuple(axis_names),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def remesh(state: Any, spec_tree: Any, new_mesh) -> Any:
+    """Re-place a state pytree onto ``new_mesh`` (specs re-filtered to its
+    axes and re-fitted to leaf shapes — odd device counts cannot shard
+    every dim).  Used after elastic shrink/grow and on restore."""
+    shardings = fitted_shardings(new_mesh, spec_tree, state)
+    return jax.device_put(state, shardings)

@@ -1,0 +1,5 @@
+from repro.serve.engine import (BatchScheduler, Request, ServeCfg, generate,
+                                make_decode_step, make_prefill_step)
+
+__all__ = ["BatchScheduler", "Request", "ServeCfg", "generate",
+           "make_decode_step", "make_prefill_step"]

@@ -1,0 +1,177 @@
+"""Serving: prefill/decode steps + a slot-based continuous batcher.
+
+``decode_step`` advances EVERY slot one token per call (the decode_32k /
+long_500k dry-run shapes lower exactly this function); the scheduler keeps
+the slot batch full by admitting queued requests into finished slots —
+continuous batching at fixed shapes (no recompilation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCfg:
+    max_len: int
+    batch: int                      # decode slots
+    greedy: bool = True
+    temperature: float = 1.0
+    eos_id: int = -1                # -1: never stops early
+    cache_dtype: Any = jnp.bfloat16
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch, caches):
+        return model.prefill(params, batch, caches)
+    return prefill_step
+
+
+def make_decode_step(model, cfg: ServeCfg) -> Callable:
+    def decode_step(params, tokens, caches, rng):
+        """tokens: (B, 1) -> (next (B,), caches, rng)."""
+        logits, caches = model.decode_step(params, {"tokens": tokens}, caches)
+        if cfg.greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            rng, sub = jax.random.split(rng)
+            nxt = jax.random.categorical(sub, logits / cfg.temperature)
+        return nxt.astype(jnp.int32), caches, rng
+    return decode_step
+
+
+def generate(model, params, prompts: jax.Array, max_new: int,
+             cfg: Optional[ServeCfg] = None) -> jax.Array:
+    """Simple batched greedy generation (examples / tests).
+
+    prompts: (B, S) int32 -> (B, S + max_new).
+    """
+    b, s = prompts.shape
+    cfg = cfg or ServeCfg(max_len=s + max_new, batch=b)
+    caches = model.init_caches(b, cfg.max_len, dtype=cfg.cache_dtype)
+    logits, caches = model.prefill(params, {"tokens": prompts}, caches)
+    decode = jax.jit(make_decode_step(model, cfg))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    rng = jax.random.PRNGKey(0)
+    for _ in range(max_new - 1):
+        tok, caches, rng = decode(params, tok[:, None], caches, rng)
+        out.append(tok)
+    return jnp.concatenate([prompts, jnp.stack(out, axis=1)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+def _batch_axis(spec) -> int:
+    """Locate the batch axis of a cache leaf from its PartitionSpec (the
+    entry sharded over the data axes)."""
+    for i, entry in enumerate(spec):
+        if entry in ("data", ("pod", "data"), ("data",), "pod"):
+            return i
+        if isinstance(entry, tuple) and "data" in entry:
+            return i
+    return 0
+
+
+def splice_cache(full, one, index: int, specs):
+    """Insert a batch-1 cache pytree into slot ``index`` of a full-batch
+    cache, batch axis located per-leaf via the spec tree."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(f, o, s):
+        ax = _batch_axis(s)
+        return jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), index, axis=ax)
+
+    return jax.tree_util.tree_map(
+        leaf, full, one, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+
+class BatchScheduler:
+    """Slot-based continuous batching over a fixed decode batch.
+
+    Each slot holds one in-flight request; finished slots are refilled from
+    the queue.  Prefill runs per-admission on the single-sequence path
+    (production systems chunk it; here it keeps shapes static), decode runs
+    one fused step for all slots.
+    """
+
+    def __init__(self, model, params, cfg: ServeCfg):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: deque = deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.batch
+        self.caches = model.init_caches(cfg.batch, cfg.max_len,
+                                        dtype=cfg.cache_dtype)
+        self._decode = jax.jit(make_decode_step(model, cfg))
+        self._next_tok = jnp.zeros((cfg.batch,), jnp.int32)
+        self._rng = jax.random.PRNGKey(0)
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            # Single-slot prefill: run the prompt through a batch-1 cache,
+            # then splice the slot's cache rows into the live batch cache.
+            c1 = self.model.init_caches(1, self.cfg.max_len,
+                                        dtype=self.cfg.cache_dtype)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, c1 = self.model.prefill(self.params, {"tokens": prompt},
+                                            c1)
+            self.caches = splice_cache(self.caches, c1, i,
+                                       self.model.cache_specs())
+            tok = int(jnp.argmax(logits[0]))
+            req.generated.append(tok)
+            self._next_tok = self._next_tok.at[i].set(tok)
+            self.slots[i] = req
+
+    def step(self) -> int:
+        """Admit + one decode step for all active slots.  Returns number of
+        active requests."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        nxt, self.caches, self._rng = self._decode(
+            self.params, self._next_tok[:, None], self.caches, self._rng)
+        self._next_tok = nxt
+        for i in active:
+            req = self.slots[i]
+            req.generated.append(int(nxt[i]))
+            if req.done or (self.cfg.eos_id >= 0
+                            and req.generated[-1] == self.cfg.eos_id):
+                self.completed.append(req)
+                self.slots[i] = None
+        return len(active)
+
+    def run(self) -> List[Request]:
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+        return self.completed

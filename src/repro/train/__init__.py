@@ -1,0 +1,3 @@
+from repro.train.trainer import TrainCfg, make_train_state, make_train_step
+
+__all__ = ["TrainCfg", "make_train_state", "make_train_step"]

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: device count is NOT forced here — unit tests see
+the real (single-CPU) device; multi-device behaviour is tested via
+vmap-emulated axes and via subprocesses (tests/test_multidev.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
