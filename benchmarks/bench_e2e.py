@@ -26,8 +26,9 @@ from repro.train import TrainCfg, make_train_state, make_train_step, trainer
 from repro.core import CollectiveEngine, EngineConfig, compose_library, registry, topology_from_mesh
 from repro.data import SyntheticLMDataset
 from repro.parallel.sharding import named_shardings
+from repro.runtime import substrate
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = substrate.make_mesh((4, 2), ("data", "model"))
 cfg = get_config("granite-34b", reduced=True)
 model = build_model(cfg)
 opt = make_optimizer("adamw", lr=1e-3)
@@ -39,7 +40,7 @@ for mode, bucket in (("auto", False), ("composed", False),
                      ("composed", True), ("compressed", True)):
     tcfg = TrainCfg(sync_mode=mode, data_axes=("data",), bucket_grads=bucket)
     step = make_train_step(model, opt, tcfg, mesh=mesh, engine=engine)
-    with jax.set_mesh(mesh):
+    with substrate.set_mesh(mesh):
         state = make_train_state(model, opt, jax.random.PRNGKey(0), cfg=tcfg)
         state = jax.device_put(state, named_shardings(mesh, trainer.state_specs(model, opt, tcfg)))
         jstep = jax.jit(step, donate_argnums=0)

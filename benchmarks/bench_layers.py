@@ -27,7 +27,6 @@ def run() -> list:
     # (c) measured frequencies from a real (reduced) composed train step,
     # traced over an ABSTRACT (4, 2) mesh — nothing is allocated, but the
     # shard_map collectives appear as jaxpr primitives the scanner counts.
-    from jax.sharding import AbstractMesh, AxisType
     from repro.configs import get_config
     from repro.models import build_model
     from repro.optim import make_optimizer
@@ -39,13 +38,13 @@ def run() -> list:
     state = make_train_state(model, opt, abstract=True, cfg=tcfg)
     batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
              "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
-    amesh = AbstractMesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.runtime import substrate
+    amesh = substrate.abstract_mesh((4, 2), ("data", "model"))
     probe_eng = CollectiveEngine(
         topology_from_mesh_shape(("data", "model"), (4, 2)),
         library=compose_library(registry.ALL_FUNCTIONS),
         config=EngineConfig(mode="composed"))
-    with jax.sharding.use_abstract_mesh(amesh):
+    with substrate.use_abstract_mesh(amesh):
         report = scan_step(
             make_train_step(model, opt, tcfg, mesh=amesh, engine=probe_eng),
             state, batch)

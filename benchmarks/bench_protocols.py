@@ -73,13 +73,14 @@ import jax, jax.numpy as jnp, numpy as np, time, re
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.core import CollectiveEngine, EngineConfig, compose_library, registry, topology_from_mesh
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.runtime import substrate
+mesh = substrate.make_mesh((8,), ("data",))
 x = jnp.asarray(np.random.RandomState(0).randn(8, 131072).astype(np.float32))
 for proto in ("xla_default", "ring", "bidir_ring", "recursive_doubling", "recursive_halving"):
     eng = CollectiveEngine(topology_from_mesh(mesh),
                            library=compose_library(registry.ALL_FUNCTIONS),
                            config=EngineConfig(force_protocol={"all_reduce": proto}))
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
+    @partial(substrate.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
     def f(v):
         return eng.all_reduce(v[0], "data")[None]
     jf = jax.jit(f)

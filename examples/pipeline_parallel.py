@@ -23,6 +23,7 @@ from functools import partial
 from jax.sharding import PartitionSpec as P
 
 from repro.core.protocols import pipeline
+from repro.runtime import substrate
 
 
 def main():
@@ -30,8 +31,7 @@ def main():
     n_micro = 8
     d = 64
 
-    mesh = jax.make_mesh((p,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = substrate.make_mesh((p,), ("stage",))
     rng = np.random.RandomState(0)
     stage_w = jnp.asarray(rng.randn(p, d, d).astype(np.float32) * 0.1)
     micro = jnp.asarray(rng.randn(n_micro, 16, d).astype(np.float32))
@@ -39,7 +39,7 @@ def main():
     def stage_fn(w, x):
         return jnp.tanh(x @ w)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(P("stage"), P()),
+    @partial(substrate.shard_map, mesh=mesh, in_specs=(P("stage"), P()),
              out_specs=P(), check_vma=False)
     def run(w, mb):
         out = pipeline.gpipe_forward(stage_fn, w[0], mb, "stage")

@@ -30,13 +30,12 @@ def main():
     #    invoked MPI functions") — traced on an abstract (4, 2) mesh so
     #    the composed collectives appear as jaxpr primitives; nothing is
     #    executed or allocated.
-    from jax.sharding import AbstractMesh, AxisType
     from repro.core import EngineConfig, compose_library, registry
     from repro.core.topology import topology_from_mesh_shape
+    from repro.runtime import substrate
     from repro.train import trainer
     mesh = make_host_mesh()
-    amesh = AbstractMesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    amesh = substrate.abstract_mesh((4, 2), ("data", "model"))
     probe_cfg = trainer.TrainCfg(microbatches=2, sync_mode="composed",
                                  data_axes=("data",))
     probe_eng = CollectiveEngine(
@@ -48,13 +47,15 @@ def main():
     state = make_train_state(model, opt, abstract=True, cfg=probe_cfg)
     batch_abs = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
                  "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
-    with jax.sharding.use_abstract_mesh(amesh):
+    with substrate.use_abstract_mesh(amesh):
         report = scan_step(probe, state, batch_abs)
     print("— traced collective profile —")
     print(report.summary())
 
-    # 3. compose the thin library and build the engine
-    library = compose_from_trace(report)
+    # 3. compose the thin library and build the engine (the probe engine
+    #    recorded which engine-level functions the step invoked; the
+    #    jaxpr scan alone sees only their protocol lowering)
+    library = compose_from_trace(report, extra=probe_eng.invoked_functions)
     engine = CollectiveEngine(
         topology_from_mesh(mesh), library=library,
         frequencies={fn: c * 1e4 for fn, c in report.frequencies().items()})
@@ -64,7 +65,7 @@ def main():
     # 4. train with it
     ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=64,
                             global_batch=8)
-    with jax.set_mesh(mesh):
+    with substrate.set_mesh(mesh):
         state = make_train_state(model, opt, jax.random.PRNGKey(0), cfg=tcfg)
         jstep = jax.jit(step, donate_argnums=0)
         for i in range(20):

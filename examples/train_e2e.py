@@ -22,7 +22,7 @@ from repro.models.layers import AttentionCfg, MLPCfg
 from repro.models.transformer import (LayerSpec, StageSpec, TransformerCfg)
 from repro.optim import cosine_schedule, make_optimizer
 from repro.parallel.sharding import named_shardings
-from repro.runtime import StepWatchdog
+from repro.runtime import StepWatchdog, substrate
 from repro.train import TrainCfg, make_train_state, make_train_step, trainer
 
 
@@ -58,7 +58,7 @@ def main():
     step = make_train_step(model, opt, tcfg)
     sspecs = trainer.state_specs(model, opt, tcfg)
 
-    with jax.set_mesh(mesh):
+    with substrate.set_mesh(mesh):
         state = make_train_state(model, opt, jax.random.PRNGKey(0), cfg=tcfg)
         state = jax.device_put(state, named_shardings(mesh, sspecs))
         jstep = jax.jit(step, donate_argnums=0)

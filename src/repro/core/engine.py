@@ -12,8 +12,8 @@ Construction mirrors the paper's pipeline exactly:
 (no composition), every function at the conventional tier, every call
 lowered through the one generic XLA path — the "TCP/IP stack" of Fig 2.
 
-All collective methods must be called inside a ``jax.shard_map`` region
-whose manual axes include the named axis.  Protocol schedules compile to
+All collective methods must be called inside a ``substrate.shard_map``
+region whose manual axes include the named axis.  Protocol schedules compile to
 explicit ``ppermute`` chains — the TPU analogue of a NIC-offloaded
 MPI-protocol (no host on the critical path).
 """
@@ -68,6 +68,7 @@ class CollectiveEngine:
         self.stats = layers.CommStats()
         self._initialized = False
         self._finalized = False
+        self._invoked = set()
 
         if self.config.mode == "monolithic":
             # Conventional library: everything present, uniform depth.
@@ -164,7 +165,17 @@ class CollectiveEngine:
     # ------------------------------------------------------------------
 
     def _check(self, fn: str) -> None:
+        self._invoked.add(fn)
         self.library.require(fn)
+
+    @property
+    def invoked_functions(self) -> frozenset:
+        """Engine-level functions the application has invoked through this
+        engine — the §2.2 scan at the API layer.  Protocol lowering turns
+        e.g. all_reduce into ppermute chains, so the jaxpr scanner alone
+        cannot attribute them; a probe engine traced through the step
+        records them here."""
+        return frozenset(self._invoked)
 
     def _wrap(self, fn: str, impl: Callable) -> Callable:
         return layers.wrap_tier(fn, self.tier(fn), impl, self.stats,
@@ -413,8 +424,12 @@ class CollectiveEngine:
         return self._axis_size(axis_name)
 
     def init(self, mesh=None) -> "CollectiveEngine":
-        """MPI_Init analogue: bind the runtime, reset stats."""
+        """MPI_Init analogue: bind the runtime, reset stats.  With no
+        explicit mesh, binds to the substrate's active mesh (if any)."""
         self._check(registry.INIT)
+        if mesh is None:
+            from repro.runtime import substrate
+            mesh = substrate.active_mesh()
         if mesh is not None:
             self.topology = topology_from_mesh(mesh)
         self.stats = layers.CommStats()

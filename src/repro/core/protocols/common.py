@@ -1,7 +1,7 @@
 """Shared helpers for protocol implementations.
 
 Every protocol in this package is pure JAX and must be called INSIDE a
-``jax.shard_map`` region where ``axis_name`` is a *manual* mesh axis.  The
+``substrate.shard_map`` region where ``axis_name`` is a *manual* mesh axis.  The
 schedules are built from ``lax.ppermute`` so that the exact communication
 pattern we cost-modeled is the one that compiles — this is the TPU analogue
 of the paper's "MPI-protocol offloaded to the MPI-network".

@@ -99,4 +99,7 @@ def topology_from_mesh_shape(
 
 
 def topology_from_mesh(mesh) -> Topology:
-    return topology_from_mesh_shape(mesh.axis_names, mesh.devices.shape)
+    # mesh.shape (name -> size) exists on both Mesh and AbstractMesh;
+    # .devices does not exist on abstract meshes.
+    sizes = dict(mesh.shape)
+    return topology_from_mesh_shape(tuple(sizes), tuple(sizes.values()))

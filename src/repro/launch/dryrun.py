@@ -34,6 +34,7 @@ from repro.models import build_model
 from repro.models.encdec import EncDecCfg
 from repro.optim import make_optimizer
 from repro.parallel.sharding import filter_spec, named_shardings
+from repro.runtime import substrate
 from repro.train import trainer
 
 HBM_PER_CHIP = 16 * 1024 ** 3          # v5e-class
@@ -576,7 +577,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
             os.environ["REPRO_MOE_FSDP"] = "0"
         if VARIANTS[variant_name].get("seqflash"):
             os.environ["REPRO_SEQ_FLASH"] = "1"
-        with jax.set_mesh(mesh):
+        with substrate.set_mesh(mesh):
             cell = build_cell(arch_id, shape_name, mesh,
                               VARIANTS[variant_name])
             jitted = jax.jit(cell.fn,

@@ -7,18 +7,21 @@ the engine's topology model.
 
 Functions, not module constants: importing this module never touches JAX
 device state (the dry-run sets XLA_FLAGS before any JAX import).
+Construction goes through the device substrate so the same definitions
+work on any supported JAX version.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro.runtime import substrate
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return substrate.make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 2, pods: int = 1):
@@ -26,9 +29,6 @@ def make_host_mesh(model_parallel: int = 2, pods: int = 1):
     n = len(jax.devices())
     mp = min(model_parallel, n)
     if pods > 1 and n % (pods * mp) == 0:
-        return jax.make_mesh(
-            (pods, n // (pods * mp), mp), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return substrate.make_mesh((pods, n // (pods * mp), mp),
+                                   ("pod", "data", "model"))
+    return substrate.make_mesh((n // mp, mp), ("data", "model"))

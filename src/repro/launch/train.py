@@ -30,24 +30,28 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import build_model
 from repro.optim import cosine_schedule, make_optimizer
 from repro.parallel.sharding import named_shardings
-from repro.runtime import StepWatchdog
+from repro.runtime import StepWatchdog, substrate
 from repro.train import trainer
 
 logger = logging.getLogger("repro.train")
 
 
 def build_engine(mesh, step_fn, abstract_args, mode: str,
-                 steps_hint: float = 1e4):
+                 steps_hint: float = 1e4, probe_engine=None):
     """Paper §2.2: scan the application, compose the thin library.
 
     The scan traces ``step_fn`` (a composed-mode probe whose shard_map
     collectives appear as jaxpr primitives) over an abstract mesh —
-    nothing executes, nothing allocates."""
+    nothing executes, nothing allocates.  ``probe_engine`` supplies the
+    engine-level function set recorded during the trace (protocol
+    lowering hides e.g. all_reduce behind ppermute chains)."""
     topo = topology_from_mesh(mesh)
     if mode == "monolithic":
         return CollectiveEngine.monolithic(topo)
     report = trace.scan_step(step_fn, *abstract_args)
-    library = compose_from_trace(report)
+    extra = (probe_engine.invoked_functions
+             if probe_engine is not None else ())
+    library = compose_from_trace(report, extra=extra)
     freqs = {fn: c * steps_hint for fn, c in report.frequencies().items()}
     return CollectiveEngine(topo, library=library, frequencies=freqs or None,
                             config=EngineConfig(mode="composed"))
@@ -99,11 +103,9 @@ def main() -> None:
     if args.sync != "auto":
         # Trace a composed-mode probe over an abstract (4,2) mesh to
         # discover the collective set 𝓕 (paper §2.2 application scan).
-        from jax.sharding import AbstractMesh, AxisType
         from repro.core import compose_library, registry
         from repro.core.topology import topology_from_mesh_shape
-        amesh = AbstractMesh((4, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        amesh = substrate.abstract_mesh((4, 2), ("data", "model"))
         probe_cfg = trainer.TrainCfg(microbatches=args.microbatches,
                                      sync_mode="composed",
                                      data_axes=("data",),
@@ -119,8 +121,9 @@ def main() -> None:
         abatch = jax.eval_shape(
             lambda: {k: jnp.zeros(v.shape, v.dtype)
                      for k, v in ds.host_batch(0).items()})
-        with jax.sharding.use_abstract_mesh(amesh):
-            engine = build_engine(mesh, probe, (abstate, abatch), "composed")
+        with substrate.use_abstract_mesh(amesh):
+            engine = build_engine(mesh, probe, (abstate, abatch), "composed",
+                                  probe_engine=probe_eng)
         engine.init(mesh)
         logger.info("composed engine:\n%s", engine.describe())
 
@@ -128,7 +131,7 @@ def main() -> None:
                                       engine=engine)
     sspecs = trainer.state_specs(model, opt, tcfg)
 
-    with jax.set_mesh(mesh):
+    with substrate.set_mesh(mesh):
         state = trainer.make_train_state(model, opt, jax.random.PRNGKey(0),
                                          cfg=tcfg)
         state = jax.device_put(state, named_shardings(mesh, sspecs))

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import layers as L
+from repro.runtime import substrate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,7 +240,7 @@ def moe_forward_shardmap(mesh, params, cfg: MoECfg, x: jax.Array
         x_spec = P(None, None, None)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        substrate.shard_map, mesh=mesh,
         in_specs=(pspecs, x_spec),
         out_specs=(x_spec, P()),
         axis_names=set(data_axes) | {"model"}, check_vma=False)

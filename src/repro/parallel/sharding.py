@@ -2,9 +2,11 @@
 
 Models annotate activations with ``shard_hint(x, spec)`` — a no-op outside
 a mesh context (single-device smoke tests), a
-``with_sharding_constraint`` under ``jax.set_mesh``.  Spec axis names not
-present in the active mesh are dropped, so the same model code runs on
-(data, model), (pod, data, model), or single-device meshes unchanged.
+``with_sharding_constraint`` under ``substrate.set_mesh``.  Spec axis
+names not present in the active mesh are dropped, so the same model code
+runs on (data, model), (pod, data, model), or single-device meshes
+unchanged.  All mesh-context and mode queries go through the single
+device-substrate entity (``repro.runtime.substrate``).
 """
 
 from __future__ import annotations
@@ -13,6 +15,8 @@ from typing import Any, Optional, Sequence
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.runtime import substrate
 
 
 def filter_spec(spec: P, axis_names: Sequence[str]) -> P:
@@ -31,24 +35,23 @@ def filter_spec(spec: P, axis_names: Sequence[str]) -> P:
 
 
 def active_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    return None if m.empty else m
+    """The active mesh, or None outside any mesh context (never raises)."""
+    return substrate.active_mesh()
 
 
 def auto_axis_names(mesh) -> tuple:
     """Mesh axes currently in Auto mode (constrainable).  Inside a
-    shard_map body the manual axes must not appear in constraints."""
-    try:
-        return tuple(n for n, t in zip(mesh.axis_names, mesh.axis_types)
-                     if t == jax.sharding.AxisType.Auto)
-    except Exception:
-        return tuple(mesh.axis_names)
+    shard_map body the manual axes must not appear in constraints.  On
+    JAX without an axis-type concept every axis is Auto."""
+    return substrate.auto_axis_names(mesh)
 
 
 def shard_hint(x: jax.Array, spec: P) -> jax.Array:
-    """Best-effort sharding constraint: identity without a mesh context."""
+    """Best-effort sharding constraint: identity without a mesh context
+    (or where the backend cannot resolve bare specs, e.g. abstract-mesh
+    tracing on legacy JAX)."""
     mesh = active_mesh()
-    if mesh is None:
+    if not substrate.supports_spec_constraint(mesh):
         return x
     fs = filter_spec(spec, auto_axis_names(mesh))
     return jax.lax.with_sharding_constraint(x, fs)
@@ -61,7 +64,7 @@ def activation_hint(x: jax.Array) -> jax.Array:
     cutting their per-device footprint by the TP degree (the difference
     between fitting and OOM for the 123B–671B train cells)."""
     mesh = active_mesh()
-    if mesh is None or x.ndim < 3:
+    if not substrate.supports_spec_constraint(mesh) or x.ndim < 3:
         return x
     auto = set(auto_axis_names(mesh))
     sizes = {k: v for k, v in dict(mesh.shape).items() if k in auto}

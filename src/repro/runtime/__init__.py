@@ -1,4 +1,7 @@
+# substrate first: parallel.sharding imports it through this package, and
+# elastic imports sharding — keep the cycle broken by import order.
+from repro.runtime import substrate
 from repro.runtime.elastic import plan_mesh_shape, remesh
 from repro.runtime.watchdog import StepWatchdog
 
-__all__ = ["StepWatchdog", "plan_mesh_shape", "remesh"]
+__all__ = ["StepWatchdog", "plan_mesh_shape", "remesh", "substrate"]

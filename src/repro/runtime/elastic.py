@@ -18,7 +18,7 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 
-from repro.parallel.sharding import fitted_shardings
+from repro.runtime import substrate
 
 
 def plan_mesh_shape(n_devices: int, model_parallel: int,
@@ -54,14 +54,13 @@ def make_mesh_from_shape(shape: Sequence[int],
     if axis_names is None:
         axis_names = (("pod", "data", "model") if len(shape) == 3
                       else ("data", "model"))
-    return jax.make_mesh(
-        tuple(shape), tuple(axis_names),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return substrate.make_mesh(tuple(shape), tuple(axis_names))
 
 
 def remesh(state: Any, spec_tree: Any, new_mesh) -> Any:
     """Re-place a state pytree onto ``new_mesh`` (specs re-filtered to its
     axes and re-fitted to leaf shapes — odd device counts cannot shard
     every dim).  Used after elastic shrink/grow and on restore."""
+    from repro.parallel.sharding import fitted_shardings  # breaks import cycle
     shardings = fitted_shardings(new_mesh, spec_tree, state)
     return jax.device_put(state, shardings)

@@ -1,0 +1,475 @@
+"""Single-entity device substrate (version-portable mesh layer).
+
+The paper's §2 prescription — MPI-network / MPI-protocol / MPI as *one
+entity* instead of a stack of independently-versioned layers — applied to
+the JAX device layer: every mesh construction, active-mesh context, mode
+query, and ``shard_map`` entry in this repo goes through this one module.
+The backend is selected once at import time from what the installed JAX
+actually provides, so call sites carry no version branching (the same way
+MPI Advance layers portable optimizations over divergent MPI
+implementations instead of sprinkling ``#ifdef`` per call site).
+
+Two backends:
+
+  explicit — JAX >= 0.6: ``jax.sharding.AxisType``, ``jax.set_mesh``,
+             ``jax.sharding.get_abstract_mesh``, ``jax.shard_map`` with
+             ``axis_names``/``check_vma``.
+  legacy   — JAX 0.4.x/0.5.x: no axis-type concept (every axis is Auto),
+             the active mesh is the ``with mesh:`` thread-resources
+             context plus a module thread-local for abstract meshes, and
+             ``shard_map`` lives in ``jax.experimental`` with
+             ``check_rep``/``auto`` spellings.
+
+Supported range: JAX 0.4.35 – current (see ``describe()`` for what the
+running interpreter resolved to).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import AbstractMesh, Mesh
+
+# ---------------------------------------------------------------------------
+# Version probes — evaluated exactly once, at import
+# ---------------------------------------------------------------------------
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_USE_MESH = hasattr(jax.sharding, "use_mesh")
+_HAS_USE_ABSTRACT_MESH = hasattr(jax.sharding, "use_abstract_mesh")
+_HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_MAKE_MESH = hasattr(jax, "make_mesh")
+
+#: Which backend this interpreter resolved to ("explicit" | "legacy").
+BACKEND = ("explicit"
+           if _HAS_AXIS_TYPE and _HAS_GET_ABSTRACT_MESH and _HAS_SET_MESH
+           else "legacy")
+
+if _HAS_AXIS_TYPE:
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        """Emulated axis-type semantics: pre-0.6 JAX has no axis-type
+        concept, so every mesh axis behaves as Auto."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+class _TLS(threading.local):
+    def __init__(self):
+        self.stack = []      # active mesh contexts (legacy backend)
+        self.manual = []     # manual-axes sets of enclosing shard_maps
+
+
+_tls = _TLS()
+
+
+def current_manual_axes() -> frozenset:
+    """Axes manual in the innermost ``shard_map`` (legacy backend only;
+    the explicit backend encodes this in the mesh's axis types)."""
+    return _tls.manual[-1] if _tls.manual else frozenset()
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[Sequence[Any]] = None,
+              devices: Optional[Sequence[Any]] = None) -> Mesh:
+    """Concrete mesh over local devices; ``axis_types`` defaults to
+    all-Auto and is dropped where the installed JAX has no axis types."""
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    if BACKEND == "explicit":
+        types = tuple(axis_types) if axis_types is not None \
+            else (AxisType.Auto,) * len(names)
+        return jax.make_mesh(shapes, names, axis_types=types,
+                             devices=devices)
+    if _HAS_MAKE_MESH:
+        return jax.make_mesh(shapes, names, devices=devices)
+    import numpy as np
+    devs = list(devices) if devices is not None else jax.devices()
+    n = 1
+    for s in shapes:
+        n *= s
+    if len(devs) < n:
+        raise ValueError(f"mesh {shapes} needs {n} devices, "
+                         f"have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(shapes), names)
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+                  axis_types: Optional[Sequence[Any]] = None) -> AbstractMesh:
+    """Device-less mesh for pre-execution tracing (the §2.2 application
+    scan runs over one of these — nothing is allocated)."""
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    if BACKEND == "explicit":
+        types = tuple(axis_types) if axis_types is not None \
+            else (AxisType.Auto,) * len(names)
+        return AbstractMesh(shapes, names, axis_types=types)
+    try:
+        return AbstractMesh(tuple(zip(names, shapes)))
+    except TypeError:
+        return AbstractMesh(shapes, names)
+
+
+# ---------------------------------------------------------------------------
+# Active-mesh context
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """The one mesh-entry point: ``jax.set_mesh`` when the installed JAX
+    has it, ``jax.sharding.use_mesh`` next, else the 0.4.x ``with mesh:``
+    thread-resources context (tracked so ``active_mesh()`` agrees)."""
+    if _HAS_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    if _HAS_USE_MESH:
+        # still track in _tls: on versions with use_mesh but without
+        # get_abstract_mesh, active_mesh() reads the thread-local stack
+        _tls.stack.append(mesh)
+        try:
+            with jax.sharding.use_mesh(mesh):
+                yield mesh
+        finally:
+            _tls.stack.pop()
+        return
+    _tls.stack.append(mesh)
+    try:
+        if isinstance(mesh, Mesh):
+            with mesh:
+                yield mesh
+        else:
+            yield mesh
+    finally:
+        _tls.stack.pop()
+
+
+@contextlib.contextmanager
+def use_abstract_mesh(mesh):
+    """Abstract-mesh tracing context (scan/compose probes)."""
+    if _HAS_USE_ABSTRACT_MESH:
+        with jax.sharding.use_abstract_mesh(mesh):
+            yield mesh
+        return
+    _tls.stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _tls.stack.pop()
+
+
+def active_mesh():
+    """The mesh of the innermost context, or ``None`` outside any —
+    never raises, on any supported JAX."""
+    if _HAS_GET_ABSTRACT_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        return None if m.empty else m
+    if _tls.stack:
+        return _tls.stack[-1]
+    try:
+        from jax._src import mesh as _mesh_lib
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Mode queries
+# ---------------------------------------------------------------------------
+
+def is_abstract(mesh) -> bool:
+    if mesh is None:
+        return False
+    if isinstance(mesh, AbstractMesh):
+        return True
+    try:  # some versions expose .devices as a raising property instead
+        return getattr(mesh, "devices", None) is None
+    except Exception:
+        return True
+
+
+def auto_axis_names(mesh) -> Tuple[str, ...]:
+    """Mesh axes currently in Auto mode (constrainable).  Without an
+    axis-type concept (legacy backend) every axis is Auto."""
+    if mesh is None:
+        return ()
+    if _HAS_AXIS_TYPE:
+        types = getattr(mesh, "axis_types", None)
+        if types is None:
+            return tuple(mesh.axis_names)
+        return tuple(n for n, t in zip(mesh.axis_names, types)
+                     if t == AxisType.Auto)
+    manual = current_manual_axes()
+    return tuple(n for n in mesh.axis_names if n not in manual)
+
+
+def supports_spec_constraint(mesh) -> bool:
+    """Whether ``with_sharding_constraint(x, PartitionSpec)`` is legal for
+    this mesh here: pre-0.6 JAX only resolves bare specs against a
+    *concrete* thread-resources mesh (abstract-mesh tracing must treat
+    constraints as identity), and its SPMD partitioner miscompiles
+    constraints inside (partial-)manual shard_map bodies — constraints
+    are hints, so the legacy backend drops them there."""
+    if mesh is None:
+        return False
+    if BACKEND == "explicit":
+        return True
+    if current_manual_axes():
+        return False
+    return not is_abstract(mesh)
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False, check_rep: Optional[bool] = None):
+    """Version-portable ``shard_map``.
+
+    ``axis_names`` is the modern spelling (the set of *manual* axes; the
+    rest stay auto); on legacy JAX it is translated to the complementary
+    ``auto=`` frozenset.  ``check_vma`` maps to legacy ``check_rep``.
+    Usable exactly like ``jax.shard_map``, including via
+    ``functools.partial(...)`` as a decorator.
+    """
+    if check_rep is not None:
+        check_vma = check_rep
+    if _HAS_TOP_LEVEL_SHARD_MAP:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+    manual = (frozenset(axis_names) if axis_names is not None
+              else frozenset(mesh.axis_names))
+    auto = frozenset(mesh.axis_names) - manual
+    if auto and not is_abstract(mesh):
+        # Partial-manual is not compilable on legacy JAX: its SPMD
+        # partitioner CHECK-fails on any scan/while inside a partial-auto
+        # shard_map body.  Emulate the manual axes with nested
+        # vmap(axis_name=...) over split batch dims instead — collective
+        # semantics over the named axes are preserved, and GSPMD keeps
+        # partitioning the auto axes.  Abstract meshes are tracing-only
+        # (§2.2 scans) and never reach the partitioner, so they take the
+        # real shard_map below — vmap batching would rewrite ppermute
+        # into positional ops and hide collectives from the scanner.
+        return _vmap_shard_map(f, mesh, in_specs, out_specs, manual)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # Track the manual set while the body traces so auto_axis_names()
+    # (and through it shard_hint) never constrains over manual axes —
+    # the explicit backend gets this from the mesh's axis types instead.
+    def wrapped(*args, **kw):
+        _tls.manual.append(manual)
+        try:
+            return f(*args, **kw)
+        finally:
+            _tls.manual.pop()
+
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=bool(check_vma))
+    if auto:
+        kwargs["auto"] = auto
+    return _shard_map(wrapped, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Legacy partial-manual emulation: nested vmap over split batch dims
+# ---------------------------------------------------------------------------
+
+def _entry_axes(entry) -> tuple:
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def _mentions(spec, axis: str) -> bool:
+    return spec is not None and any(axis in _entry_axes(e) for e in spec)
+
+
+def _spec_tree(spec, tree):
+    """Broadcast a bare PartitionSpec over a whole arg subtree; pass
+    through spec trees that already match the arg structure leaf-wise.
+    ``None`` specs become P() so spec trees stay structure-stable."""
+    from jax.sharding import PartitionSpec as P
+    if spec is None:
+        spec = P()
+    if isinstance(spec, P):
+        return jax.tree_util.tree_map(lambda _: spec, tree)
+    return jax.tree_util.tree_map(
+        lambda s, _: P() if s is None else s, spec, tree,
+        is_leaf=lambda s: s is None or isinstance(s, P))
+
+
+def _split_leaf(x, spec, order, sizes):
+    """Factor every spec'd manual-axis dim out of ``x`` and move the
+    factors to the front (in ``order``, major-to-minor within a dim)."""
+    if spec is None or not any(_mentions(spec, a) for a in order):
+        return x
+    shape = x.shape
+    new_shape, positions = [], []          # positions: (axis, idx)
+    for d in range(len(shape)):
+        entry = spec[d] if d < len(spec) else None
+        axes = [a for a in _entry_axes(entry) if a in order]
+        factor = 1
+        for a in axes:
+            factor *= sizes[a]
+        if axes:
+            if shape[d] % factor:
+                raise ValueError(
+                    f"dim {d} of {shape} not divisible by {factor} "
+                    f"(axes {axes})")
+            for a in axes:
+                positions.append((a, len(new_shape)))
+                new_shape.append(sizes[a])
+            new_shape.append(shape[d] // factor)
+        else:
+            new_shape.append(shape[d])
+    y = x.reshape(new_shape)
+    front = [p for a in order for (an, p) in positions if an == a]
+    rest = [i for i in range(len(new_shape)) if i not in front]
+    return y.transpose(front + rest)
+
+
+def _unsplit_leaf(y, spec, order):
+    """Inverse of _split_leaf for outputs of the nested vmap: ``y`` has
+    one leading dim per axis in ``order``; merge the spec'd ones back
+    into their dims and drop the rest (replicated by out_axes=0)."""
+    import jax.numpy as jnp
+    lead = [a for a in order if _mentions(spec, a)]
+    y = y[tuple(slice(None) if a in lead else 0 for a in order)]
+    if spec is None:
+        return y
+    cur = list(lead)
+    for d in range(len(spec)):
+        es = [a for a in _entry_axes(spec[d]) if a in order]
+        if not es:
+            continue
+        target = len(cur) - 1 + d          # just before the local dim
+        for a in es:
+            i = cur.index(a)
+            y = jnp.moveaxis(y, i, target)
+            cur.pop(i)
+        start = len(cur) + d               # es dims at start..end-1, local at end
+        end = start + len(es)
+        shp = y.shape
+        merged = 1
+        for k in range(start, end + 1):
+            merged *= shp[k]
+        y = y.reshape(shp[:start] + (merged,) + shp[end + 1:])
+    return y
+
+
+def _vmap_shard_map(f, mesh, in_specs, out_specs, manual):
+    sizes = dict(mesh.shape)
+    order = tuple(a for a in mesh.axis_names if a in manual)
+
+    def call(*args):
+        from jax.sharding import PartitionSpec as P
+        if in_specs is None or isinstance(in_specs, P):
+            # bare spec: prefix-pytree semantics, applies to every arg
+            # (P is iterable, so zip() would silently pair its entries)
+            per_arg = (in_specs,) * len(args)
+        else:
+            per_arg = tuple(in_specs)
+        specs = tuple(_spec_tree(s, a) for s, a in zip(per_arg, args))
+        split = tuple(
+            jax.tree_util.tree_map(
+                lambda x, s: _split_leaf(x, s, order, sizes), a, st)
+            for a, st in zip(args, specs))
+
+        # No manual-ctx push here: the emulation has no real manual region
+        # (all mesh axes stay auto), so sharding-constraint hints in the
+        # body are legal — and dropping them makes this XLA's unconstrained
+        # sharding propagation miscompile the sharded-params case.
+        g = f
+        for axis in reversed(order):
+            in_axes = tuple(
+                jax.tree_util.tree_map(
+                    lambda s, _axis=axis: 0 if _mentions(s, _axis) else None,
+                    st)
+                for st in specs)
+            g = jax.vmap(g, in_axes=in_axes, out_axes=0, axis_name=axis,
+                         axis_size=sizes[axis])
+        out = g(*split)
+        out_spec_tree = _spec_tree_for_output(out_specs, out)
+        return jax.tree_util.tree_map(
+            lambda y, s: _unsplit_leaf(y, s, order), out, out_spec_tree)
+
+    def _spec_tree_for_output(ospecs, out):
+        from jax.sharding import PartitionSpec as P
+        if isinstance(ospecs, P) or ospecs is None:
+            return jax.tree_util.tree_map(lambda _: ospecs, out)
+        if isinstance(ospecs, tuple) and isinstance(out, tuple) \
+                and len(ospecs) == len(out):
+            return tuple(_spec_tree(s, o) for s, o in zip(ospecs, out))
+        return _spec_tree(ospecs, out)
+
+    return call
+
+
+# ---------------------------------------------------------------------------
+# Backports
+# ---------------------------------------------------------------------------
+
+def _register_optimization_barrier_batcher():
+    """Old JAX lacks a vmap rule for ``lax.optimization_barrier`` (the L3
+    tier wrapper uses it); newer JAX defines it as a pass-through.  Gated
+    registration of that same rule."""
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+        if optimization_barrier_p in batching.primitive_batchers:
+            return
+
+        def _batcher(vals, dims):
+            return optimization_barrier_p.bind(*vals), dims
+
+        batching.primitive_batchers[optimization_barrier_p] = _batcher
+    except Exception:
+        pass
+
+
+if BACKEND == "legacy":
+    _register_optimization_barrier_batcher()
+
+
+# ---------------------------------------------------------------------------
+# Introspection
+# ---------------------------------------------------------------------------
+
+def describe() -> str:
+    """One-screen summary of what this interpreter resolved to (used by
+    ``tools/check_env.py`` and error reports)."""
+    feats = {
+        "jax.sharding.AxisType": _HAS_AXIS_TYPE,
+        "jax.sharding.get_abstract_mesh": _HAS_GET_ABSTRACT_MESH,
+        "jax.set_mesh": _HAS_SET_MESH,
+        "jax.sharding.use_mesh": _HAS_USE_MESH,
+        "jax.sharding.use_abstract_mesh": _HAS_USE_ABSTRACT_MESH,
+        "jax.shard_map": _HAS_TOP_LEVEL_SHARD_MAP,
+        "jax.make_mesh": _HAS_MAKE_MESH,
+    }
+    lines = [f"substrate backend: {BACKEND}",
+             f"jax version:       {jax.__version__}",
+             f"device count:      {len(jax.devices())}",
+             f"platform:          {jax.devices()[0].platform}"]
+    for name, present in feats.items():
+        lines.append(f"  {'+' if present else '-'} {name}")
+    return "\n".join(lines)

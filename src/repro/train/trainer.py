@@ -4,7 +4,7 @@ Three gradient-synchronisation modes (the paper's A/B/C):
 
   auto       — GSPMD end-to-end: batch sharded over ("pod","data"), XLA
                inserts every collective (the conventional generic stack).
-  composed   — the loss/grad computation runs inside ``jax.shard_map``
+  composed   — the loss/grad computation runs inside ``substrate.shard_map``
                manual over the data axes (model axes stay auto); gradients
                are synced by the CollectiveEngine's per-function protocols
                (ring / two-phase / hierarchical — cost-model-selected).
@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.compression import EFState
 from repro.core.engine import CollectiveEngine
+from repro.runtime import substrate
 
 Params = Any
 
@@ -224,7 +225,7 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
         bspecs = batch_specs(batch, data_axes)
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            substrate.shard_map, mesh=mesh,
             in_specs=(P(), bspecs),
             out_specs=(P(), P()),
             axis_names=manual, check_vma=False)

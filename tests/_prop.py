@@ -1,0 +1,105 @@
+"""Offline fallback for ``hypothesis``: a deterministic, example-based
+subset of ``given``/``settings``/``strategies``.
+
+When hypothesis is installed the real library is re-exported unchanged.
+Without it (offline CI image), property tests degrade to fixed-example
+tests: each ``@given`` test runs ``min(max_examples, 25)`` times with a
+seeded ``random.Random`` per example, so runs are reproducible and the
+modules always collect.
+"""
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+except ImportError:
+    import random as _random
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rnd):
+            return self._draw_fn(rnd)
+
+    class _DataObject:
+        """Stand-in for hypothesis's ``st.data()`` draw handle."""
+
+        def __init__(self, rnd):
+            self._rnd = rnd
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rnd)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            # log-uniform when the range spans decades (matches how these
+            # tests use floats: scales and byte counts)
+            if lo > 0 and hi / lo > 1e3:
+                import math
+                return _Strategy(
+                    lambda r: math.exp(r.uniform(math.log(lo), math.log(hi))))
+            return _Strategy(lambda r: r.uniform(lo, hi))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+        @staticmethod
+        def sets(elements, *, min_size=0, max_size=None):
+            def draw(r):
+                hi = max_size if max_size is not None else min_size + 5
+                size = r.randint(min_size, hi)
+                out = set()
+                for _ in range(20 * (size + 1)):
+                    if len(out) >= size:
+                        break
+                    out.add(elements.draw(r))
+                if len(out) < min_size:
+                    raise ValueError("strategy domain smaller than min_size")
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def dictionaries(keys, values, *, min_size=0, max_size=None):
+            key_sets = _strategies.sets(keys, min_size=min_size,
+                                        max_size=max_size)
+            return _Strategy(
+                lambda r: {k: values.draw(r) for k in key_sets.draw(r)})
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda r: _DataObject(r))
+
+    strategies = _strategies
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper():
+                n = min(getattr(wrapper, "_prop_max_examples",
+                                getattr(fn, "_prop_max_examples", 10)), 25)
+                for i in range(n):
+                    rnd = _random.Random(0xC0FFEE + 7919 * i)
+                    pos = tuple(s.draw(rnd) for s in arg_strategies)
+                    kws = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                    fn(*pos, **kws)
+            # no functools.wraps: pytest must see a zero-arg signature, not
+            # the strategy params (it would try to resolve them as fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._prop_max_examples = getattr(fn, "_prop_max_examples", 10)
+            return wrapper
+        return deco

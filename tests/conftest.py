@@ -1,11 +1,56 @@
 """Shared fixtures.  NOTE: device count is NOT forced here — unit tests see
 the real (single-CPU) device; multi-device behaviour is tested via
-vmap-emulated axes and via subprocesses (tests/test_multidev.py)."""
+vmap-emulated axes and via subprocesses (tests/test_multidev.py).
+
+``run_subprocess_script`` is the one entry point for those subprocess
+tests: it skips (with the child's traceback tail as the reason) instead of
+raising a raw AssertionError when the child interpreter dies before
+reaching the test body — e.g. an import-time failure on this JAX version.
+"""
+
+import os
+import subprocess
+import sys
 
 import numpy as np
 import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_IMPORT_DEATH_MARKERS = ("ImportError", "ModuleNotFoundError")
+
+
+def _died_at_import(stderr: str) -> bool:
+    """True only when the child's FINAL exception is an import failure —
+    a marker merely appearing somewhere in a chained traceback must not
+    turn a real mid-test regression into a skip."""
+    for line in reversed(stderr.strip().splitlines()):
+        line = line.strip()
+        if line:
+            return any(line.startswith(m) for m in _IMPORT_DEATH_MARKERS)
+    return False
 
 
 @pytest.fixture
 def rng():
     return np.random.RandomState(0)
+
+
+def run_subprocess_script(code: str, devices: int = 8,
+                          timeout: int = 420) -> str:
+    """Run ``code`` in a fresh interpreter with ``devices`` fake host
+    devices; return its stdout.  Child import-time deaths become skips
+    with a clear reason, anything else a hard failure with stderr."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        tail = proc.stderr[-3000:]
+        if _died_at_import(proc.stderr):
+            pytest.skip("child interpreter died at import on this "
+                        f"environment:\n{tail[-800:]}")
+        raise AssertionError(f"subprocess failed (rc={proc.returncode}):\n"
+                             f"{tail}")
+    return proc.stdout

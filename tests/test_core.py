@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.core import (CollectiveEngine, EngineConfig, compose_library,
                         costmodel, layers, registry, scan_step,
@@ -43,12 +43,12 @@ def test_trace_finds_collectives_and_counts():
 
 
 def test_trace_through_shard_map():
-    mesh = jax.make_mesh((1,), (AX,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.runtime import substrate
+    mesh = substrate.make_mesh((1,), (AX,))
     from functools import partial
     from jax.sharding import PartitionSpec as P
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P(AX),
+    @partial(substrate.shard_map, mesh=mesh, in_specs=P(AX),
              out_specs=(P(), P(AX)), check_vma=False)
     def step(v):
         return jax.lax.psum(v, AX), jax.lax.all_to_all(

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.kernels.flash_attention import ops as fops
 from repro.kernels.flash_attention import ref as fref

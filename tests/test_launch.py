@@ -71,39 +71,24 @@ def test_filter_and_stack_specs():
 
 
 def test_fit_spec_drops_indivisible():
-    import os
-    import subprocess
-    import sys
+    from conftest import run_subprocess_script
     # fit_spec needs a mesh; run under 8 host devices
-    code = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax
+    run_subprocess_script("""
 from jax.sharding import PartitionSpec as P
 from repro.launch.dryrun import fit_spec
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.runtime import substrate
+mesh = substrate.make_mesh((4, 2), ("data", "model"))
 assert fit_spec(P("data", "model"), (8, 6), mesh) == P("data", "model")
 assert fit_spec(P("data", "model"), (1, 6), mesh) == P(None, "model")
 assert fit_spec(P(("data", "model"),), (7,), mesh) == P(None)
 assert fit_spec(P("data"), (), mesh) == P(None)
 print("OK")
-"""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(
-        os.path.dirname(os.path.abspath(__file__))), "src")
-    r = subprocess.run([sys.executable, "-c", code], env=env,
-                       capture_output=True, text=True, timeout=240)
-    assert r.returncode == 0, r.stderr[-2000:]
+""", timeout=240)
 
 
 def test_model_flops_formulas():
-    import os
-    import subprocess
-    import sys
-    code = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from conftest import run_subprocess_script
+    run_subprocess_script("""
 from repro.launch.dryrun import model_flops, active_param_count
 from repro.configs import get_config
 from repro.models import build_model
@@ -117,10 +102,4 @@ total = build_model(cfg).param_count()
 active = active_param_count(cfg)
 assert active < 0.2 * total, (active, total)
 print("OK")
-"""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(
-        os.path.dirname(os.path.abspath(__file__))), "src")
-    r = subprocess.run([sys.executable, "-c", code], env=env,
-                       capture_output=True, text=True, timeout=240)
-    assert r.returncode == 0, r.stderr[-2000:]
+""", timeout=240)

@@ -3,25 +3,15 @@
 The main pytest process keeps the real single-device view; anything that
 needs a mesh forces ``--xla_force_host_platform_device_count=8`` in a
 fresh interpreter — exactly how the dry-run isolates device-count state.
+All mesh construction/context in the child scripts goes through the
+device substrate, so they run on any supported JAX version.
 """
 
-import os
-import subprocess
-import sys
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from conftest import run_subprocess_script
 
 
 def run_script(code: str, devices: int = 8, timeout: int = 420) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    proc = subprocess.run([sys.executable, "-c", code], env=env,
-                          capture_output=True, text=True, timeout=timeout)
-    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
-    return proc.stdout
+    return run_subprocess_script(code, devices=devices, timeout=timeout)
 
 
 def test_engine_protocols_on_real_mesh():
@@ -30,7 +20,8 @@ import jax, numpy as np, jax.numpy as jnp
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.core import CollectiveEngine, EngineConfig, compose_library, registry, topology_from_mesh
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.runtime import substrate
+mesh = substrate.make_mesh((8,), ("data",))
 eng = CollectiveEngine(topology_from_mesh(mesh),
                        library=compose_library(registry.ALL_FUNCTIONS),
                        config=EngineConfig(mode="composed"))
@@ -39,7 +30,7 @@ for proto in ("ring", "bidir_ring", "recursive_doubling", "recursive_halving"):
     e = CollectiveEngine(topology_from_mesh(mesh),
                          library=compose_library(registry.ALL_FUNCTIONS),
                          config=EngineConfig(force_protocol={"all_reduce": proto}))
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
+    @partial(substrate.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
     def f(v):
         return e.all_reduce(v[0], "data")[None]
     out = jax.jit(f)(x)
@@ -58,8 +49,9 @@ from repro.train import TrainCfg, make_train_state, make_train_step, trainer
 from repro.core import CollectiveEngine, EngineConfig, compose_library, registry, topology_from_mesh
 from repro.data import SyntheticLMDataset
 from repro.parallel.sharding import named_shardings
+from repro.runtime import substrate
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = substrate.make_mesh((4, 2), ("data", "model"))
 cfg = get_config("granite-34b", reduced=True)
 model = build_model(cfg)
 opt = make_optimizer("adamw", lr=1e-3)
@@ -72,7 +64,7 @@ results = {}
 for mode in ("auto", "composed"):
     tcfg = TrainCfg(sync_mode=mode, data_axes=("data",))
     step = make_train_step(model, opt, tcfg, mesh=mesh, engine=engine)
-    with jax.set_mesh(mesh):
+    with substrate.set_mesh(mesh):
         state = make_train_state(model, opt, jax.random.PRNGKey(0), cfg=tcfg)
         sspecs = trainer.state_specs(model, opt, tcfg)
         state = jax.device_put(state, named_shardings(mesh, sspecs))
@@ -102,8 +94,9 @@ from repro.train import TrainCfg, make_train_state, make_train_step, trainer
 from repro.core import CollectiveEngine, EngineConfig, compose_library, registry, topology_from_mesh
 from repro.data import SyntheticLMDataset
 from repro.parallel.sharding import named_shardings
+from repro.runtime import substrate
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = substrate.make_mesh((8,), ("data",))
 cfg = get_config("granite-34b", reduced=True)
 model = build_model(cfg)
 opt = make_optimizer("adamw", lr=2e-3)
@@ -113,7 +106,7 @@ engine = CollectiveEngine(topology_from_mesh(mesh),
                           config=EngineConfig(mode="composed"))
 tcfg = TrainCfg(sync_mode="compressed", data_axes=("data",), bucket_grads=True)
 step = make_train_step(model, opt, tcfg, mesh=mesh, engine=engine)
-with jax.set_mesh(mesh):
+with substrate.set_mesh(mesh):
     state = make_train_state(model, opt, jax.random.PRNGKey(0), cfg=tcfg)
     state = jax.device_put(state, named_shardings(mesh, trainer.state_specs(model, opt, tcfg)))
     jstep = jax.jit(step)
@@ -137,8 +130,8 @@ from repro.models import build_model
 from repro.optim import make_optimizer
 from repro.train import TrainCfg, make_train_state, make_train_step, trainer
 from repro.launch.dryrun import fit_shardings
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.runtime import substrate
+mesh = substrate.make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = get_config("qwen3-moe-30b-a3b", reduced=True)
 model = build_model(cfg)
 opt = make_optimizer("adamw")
@@ -147,7 +140,7 @@ state = make_train_state(model, opt, abstract=True, cfg=tcfg)
 sspecs = trainer.state_specs(model, opt, tcfg)
 batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
          "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
-with jax.set_mesh(mesh):
+with substrate.set_mesh(mesh):
     state_sh = fit_shardings(sspecs, state, mesh)
     batch_sh = fit_shardings(trainer.batch_specs(batch), batch, mesh)
     step = make_train_step(model, opt, tcfg)
@@ -162,7 +155,8 @@ def test_sharded_batch_matches_host_batch():
     run_script("""
 import jax, numpy as np
 from repro.data import SyntheticLMDataset
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.runtime import substrate
+mesh = substrate.make_mesh((4, 2), ("data", "model"))
 ds = SyntheticLMDataset(vocab_size=97, seq_len=12, global_batch=8, seed=3)
 sb = ds.sharded_batch(5, mesh)
 hb = ds.host_batch(5)

@@ -1,0 +1,41 @@
+#!/usr/bin/env python
+"""Environment probe: which JAX is installed, how many devices it sees,
+and which device-substrate backend was selected.
+
+    PYTHONPATH=src python tools/check_env.py
+
+Exit status is 0 when the substrate imported cleanly, 1 otherwise — handy
+as a CI preflight before the real test run.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+
+def main() -> int:
+    try:
+        import jax
+    except Exception as e:  # pragma: no cover - catastrophic env
+        print(f"FATAL: jax failed to import: {e}")
+        return 1
+    try:
+        from repro.runtime import substrate
+    except Exception as e:
+        print(f"jax {jax.__version__} imported, but the substrate did not: "
+              f"{e}")
+        return 1
+    print(substrate.describe())
+    try:
+        import hypothesis  # noqa: F401
+        print("hypothesis:        installed (property tests full)")
+    except ImportError:
+        print("hypothesis:        absent (tests/_prop.py fixed-example "
+              "fallback)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
