@@ -20,6 +20,33 @@ from repro.core import (CollectiveEngine, EngineConfig, compose_library,
                         layers, registry, scan_step, topology_from_mesh_shape)
 
 
+def dispatch_overhead(repeat: int = 300) -> dict:
+    """Per-call trace-time dispatch cost (protocol selection + tier-wrapper
+    binding): the plan-once engine vs the per-call baseline
+    (``EngineConfig(plan=False)`` — the seed's behaviour).  Returns a
+    machine-readable payload for BENCH_plan.json."""
+    topo = topology_from_mesh_shape(("data",), (16,))
+    lib = compose_library(registry.ALL_FUNCTIONS)
+    planned = CollectiveEngine(topo, library=lib, config=EngineConfig())
+    baseline = CollectiveEngine(topo, library=lib,
+                                config=EngineConfig(plan=False))
+    nb = 1 << 20
+
+    def dispatch(eng):
+        eng.protocol_for("all_reduce", nb, "data")
+        eng.dispatcher("all_reduce")
+
+    us_base = time_python(lambda: dispatch(baseline), repeat=repeat)
+    us_plan = time_python(lambda: dispatch(planned), repeat=repeat)
+    return {
+        "per_call_us": us_base,
+        "planned_us": us_plan,
+        "speedup": us_base / us_plan if us_plan else float("inf"),
+        "plan_entries": planned.plan.table_size,
+        "plan_computes": planned.plan.stats.total_computes,
+    }
+
+
 def run() -> list:
     tables = []
     topo = topology_from_mesh_shape(("data",), (16,))
@@ -92,6 +119,16 @@ def run() -> list:
         extra = sum(v for k, v in ops.items() if k != "all-reduce")
         tb.add(layers.TIER_NAMES[tier], f"{us:.0f}", extra)
     tables.append(tb)
+
+    # (d) plan-once dispatch vs per-call selection (this PR's tentpole)
+    ov = dispatch_overhead()
+    td = Table("bench_layers: per-call dispatch overhead "
+               "(protocol selection + wrapper binding)",
+               ["engine", "us/call", "speedup"])
+    td.add("per-call baseline (plan=False)", f"{ov['per_call_us']:.2f}", "1x")
+    td.add("planned (CommPlan)", f"{ov['planned_us']:.2f}",
+           f"{ov['speedup']:.1f}x")
+    tables.append(td)
     return tables
 
 

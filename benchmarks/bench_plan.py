@@ -1,0 +1,101 @@
+"""Plan-once runtime bench: bytes-on-the-wire per gradient-sync mode.
+
+Traces each sync flavour over a mixed bf16/f32 gradient pytree (no device
+compute — ``jax.eval_shape``) and reads the wire-payload bytes the engine
+records in CommStats.  Together with ``bench_layers.dispatch_overhead``
+this feeds the machine-readable ``BENCH_plan.json`` that ``run.py`` emits
+so future PRs have a perf trajectory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Table
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        registry, topology_from_mesh_shape)
+from repro.core.engine import SYNC_STATS_KEY
+
+AX = "data"
+P = 8
+
+
+def _grads_struct(scale: int = 1):
+    """A transformer-ish mixed-dtype gradient pytree (per-device view)."""
+    return {
+        "wqkv": jax.ShapeDtypeStruct((P, 256 * scale, 384), jnp.bfloat16),
+        "wo": jax.ShapeDtypeStruct((P, 384, 256 * scale), jnp.bfloat16),
+        "mlp": jax.ShapeDtypeStruct((P, 256 * scale, 1024), jnp.bfloat16),
+        "norm": jax.ShapeDtypeStruct((P, 384), jnp.float32),
+        "head": jax.ShapeDtypeStruct((P, 384, 512), jnp.float32),
+    }
+
+
+def _engine():
+    return CollectiveEngine(
+        topology_from_mesh_shape((AX,), (P,)),
+        library=compose_library(registry.ALL_FUNCTIONS),
+        config=EngineConfig())
+
+
+def wire_bytes(scale: int = 1) -> dict:
+    """Trace each sync mode; return mode -> payload bytes on the wire."""
+    grads = _grads_struct(scale)
+    modes = {
+        "bucketed_dtype_aware": dict(bucketed=True, dtype_aware=True),
+        "bucketed_f32_upcast": dict(bucketed=True, dtype_aware=False),
+        "leaf_sync": dict(bucketed=False),
+        "bucketed_compressed": dict(bucketed=True, dtype_aware=True,
+                                    compress=True),
+    }
+    out = {}
+    for name, kw in modes.items():
+        eng = _engine()
+
+        def sync(g, kw=kw):
+            if kw.get("bucketed"):
+                return eng.sync_gradients_bucketed(
+                    g, AX, dtype_aware=kw.get("dtype_aware", True),
+                    compress=kw.get("compress", False))[0]
+            return eng.sync_gradients(g, AX)[0]
+
+        jax.eval_shape(
+            lambda g: jax.vmap(sync, axis_name=AX)(g), grads)
+        out[name] = int(eng.stats.bytes[SYNC_STATS_KEY])
+    return out
+
+
+def payload(smoke: bool = False) -> dict:
+    from benchmarks.bench_layers import dispatch_overhead
+    return {
+        "dispatch": dispatch_overhead(repeat=100 if smoke else 300),
+        "wire_bytes": wire_bytes(scale=1 if smoke else 4),
+    }
+
+
+def run(smoke: bool = False):
+    p = payload(smoke)
+    t = Table("bench_plan: gradient-sync bytes on the wire (per step)",
+              ["sync mode", "payload bytes", "vs f32 upcast"])
+    wb = p["wire_bytes"]
+    ref = wb["bucketed_f32_upcast"]
+    for name, b in sorted(wb.items(), key=lambda kv: kv[1]):
+        t.add(name, f"{b:,d}", f"{b / ref:.2f}x")
+    d = p["dispatch"]
+    t2 = Table("bench_plan: per-call dispatch overhead",
+               ["engine", "us/call"])
+    t2.add("per-call baseline", f"{d['per_call_us']:.2f}")
+    t2.add(f"planned ({d['speedup']:.1f}x faster)", f"{d['planned_us']:.2f}")
+    return [t, t2], p
+
+
+def main():
+    tables, _ = run()
+    for t in tables:
+        t.print()
+        print()
+
+
+if __name__ == "__main__":
+    main()

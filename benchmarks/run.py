@@ -1,21 +1,43 @@
 """Benchmark entry point: one bench per paper claim + the roofline report.
 
-    PYTHONPATH=src python -m benchmarks.run [--skip-subprocess]
+    PYTHONPATH=src python -m benchmarks.run [--skip-subprocess] [--smoke]
+
+Every run that includes the plan bench writes ``BENCH_plan.json`` (at the
+repo root unless --out says otherwise; git-ignored — it is a per-machine
+measurement artifact): per-call dispatch overhead from
+``bench_layers`` and bytes-on-wire per gradient-sync mode from
+``bench_plan`` — the machine-readable perf trajectory across PRs.
+``--smoke`` runs only that plan bench (finishes well under 60s; tier-1
+friendly).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+
+def write_plan_json(payload: dict, out_path: str) -> None:
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {out_path}", flush=True)
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-subprocess", action="store_true",
                     help="skip the 8-device subprocess benches")
+    ap.add_argument("--smoke", action="store_true",
+                    help="plan bench only: <60s, emits BENCH_plan.json")
     ap.add_argument("--only", default="",
-                    help="comma list: composable,layers,protocols,e2e,roofline")
+                    help="comma list: composable,layers,protocols,e2e,"
+                         "plan,roofline")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_plan.json"),
+        help="path for BENCH_plan.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -33,11 +55,25 @@ def main() -> int:
             failures += 1
             traceback.print_exc()
 
+    from benchmarks import bench_plan
+
+    def run_plan(smoke: bool):
+        tables, payload = bench_plan.run(smoke=smoke)
+        for t in tables:
+            t.print()
+            print()
+        write_plan_json(payload, os.path.normpath(args.out))
+
+    if args.smoke:
+        section("plan (plan-once runtime, smoke)", lambda: run_plan(True))
+        return 1 if failures else 0
+
     from benchmarks import (bench_composable, bench_e2e, bench_layers,
                             bench_protocols, roofline_report)
 
     section("composable (P1, paper §2)", bench_composable.main)
     section("layers (P2, paper §3)", bench_layers.main)
+    section("plan (plan-once runtime)", lambda: run_plan(False))
     if args.skip_subprocess:
         section("protocols (P3, paper §4)", lambda: [
             t.print() or print() for t in bench_protocols.run()[:-1]])

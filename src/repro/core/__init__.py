@@ -2,18 +2,20 @@
 protocol collective engine for JAX meshes (Xiong, "Some New Approaches to
 MPI Implementations")."""
 
-from repro.core import (compose, compression, costmodel, layers, registry,
-                        topology, trace)
+from repro.core import (compose, compression, costmodel, layers, plan,
+                        registry, topology, trace)
 from repro.core.compose import (ComposedLibrary, NotComposedError,
                                 compose as compose_library)
 from repro.core.engine import CollectiveEngine, EngineConfig
+from repro.core.plan import CommPlan, plan_buckets
 from repro.core.topology import (Topology, topology_from_mesh,
                                  topology_from_mesh_shape)
 from repro.core.trace import TraceReport, scan_step
 
 __all__ = [
-    "CollectiveEngine", "EngineConfig", "ComposedLibrary", "NotComposedError",
-    "Topology", "TraceReport", "compose", "compose_library", "compression",
-    "costmodel", "layers", "registry", "scan_step", "topology",
+    "CollectiveEngine", "CommPlan", "EngineConfig", "ComposedLibrary",
+    "NotComposedError", "Topology", "TraceReport", "compose",
+    "compose_library", "compression", "costmodel", "layers", "plan",
+    "plan_buckets", "registry", "scan_step", "topology",
     "topology_from_mesh", "topology_from_mesh_shape", "trace",
 ]

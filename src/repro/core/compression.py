@@ -77,6 +77,17 @@ jax.tree_util.register_dataclass(EFState, data_fields=["residual"],
                                  meta_fields=[])
 
 
+def bucket_ef_zeros(buckets, abstract: bool = False) -> tuple:
+    """Error-feedback residual layout for dtype-grouped gradient buckets
+    (``plan.plan_buckets``): one flat f32 residual per bucket.  Residuals
+    accumulate in f32 regardless of the bucket's wire dtype — quantization
+    error of a bf16 bucket is far below bf16 resolution."""
+    if abstract:
+        return tuple(jax.ShapeDtypeStruct((b.size,), jnp.float32)
+                     for b in buckets)
+    return tuple(jnp.zeros((b.size,), jnp.float32) for b in buckets)
+
+
 # ---------------------------------------------------------------------------
 # The protocol: int8-on-the-wire ring all-reduce
 # ---------------------------------------------------------------------------

@@ -154,7 +154,11 @@ def cost_broadcast_binomial(n: float, topo: Topology, axis: str) -> float:
 
 
 def cost_broadcast_scatter_allgather(n: float, topo: Topology, axis: str) -> float:
+    # van de Geijn: binomial scatter (log p rounds) + ring all-gather.  The
+    # schedule (protocols.tree.scatter_allgather_broadcast) needs pow2 p.
     p, a, bw = _axis(topo, axis)
+    if p & (p - 1):
+        return math.inf
     steps = math.ceil(math.log2(p))
     return (steps + p - 1) * a + 2 * _ring_factor(p) * n / bw
 
@@ -219,6 +223,11 @@ _MENU: Dict[str, Dict[str, Callable]] = {
 
 def protocol_menu(collective: str) -> Dict[str, Callable]:
     return dict(_MENU.get(collective, {}))
+
+
+def protocol_functions() -> Tuple[str, ...]:
+    """Collectives with a protocol menu (the plannable function set)."""
+    return tuple(_MENU)
 
 
 def choose_protocol(

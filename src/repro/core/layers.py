@@ -25,6 +25,7 @@ import logging
 from collections import Counter
 from typing import Callable, Dict, Mapping
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -139,6 +140,7 @@ def wrap_tier(fn_name: str, tier: int, impl: Callable,
             stats.event(f"{fn_name}@{axis_name}")
         x = lax.optimization_barrier(x)
         y = checked(x, axis_name, **kw)
-        return lax.optimization_barrier(y)
+        # per-leaf barrier: impls may return pytrees (e.g. (y, ef_state)).
+        return jax.tree_util.tree_map(lax.optimization_barrier, y)
 
     return full

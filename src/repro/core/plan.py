@@ -1,0 +1,266 @@
+"""Plan-once communication runtime (beyond-paper §3/§4 optimization).
+
+The paper binds one protocol per function (§4) and flattens the hot
+functions' dispatch stack (§3) — but the seed engine paid both *per call*:
+every collective invocation re-ran the full alpha-beta cost-model sort and
+re-built its tier wrapper closure.  Persistent, planned-ahead collectives
+(MPI Advance's ``MPIX_*_init``; pMR's "eliminate per-call software
+overhead") show the win comes from moving that work out of the call path.
+
+This module is that move:
+
+* ``CommPlan`` — a per-engine protocol dispatch table keyed on
+  ``(function, axis, pow2 size-bucket)``, precomputed from the cost model
+  at engine construction and consulted with a single dict lookup per
+  call.  The cache is invalidated (rebuilt) only when the topology
+  fingerprint changes (``CollectiveEngine.init`` onto a new mesh).
+
+* Gradient bucket planning — dtype-grouped, size-capped buckets for
+  fused gradient sync: leaves are grouped by dtype (bf16 stays bf16 on
+  the wire instead of the old upcast-everything-to-f32 path, halving
+  wire bytes), each group is split into buckets of at most
+  ``bucket_bytes``, and each bucket is issued as an independent
+  collective with its own planned protocol so XLA can overlap them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel
+from repro.core.costmodel import ProtocolChoice
+from repro.core.topology import Topology
+
+#: default size cap per gradient bucket (bytes on the wire).
+DEFAULT_BUCKET_BYTES = 32 * 1024 * 1024
+
+#: size buckets cover 1 byte .. 16 GiB; larger messages share the top bucket.
+MAX_SIZE_BUCKET = 34
+
+
+def size_bucket(nbytes: float) -> int:
+    """Pow2 bucket index b such that nbytes <= 2**b (0 for empty)."""
+    n = int(nbytes)
+    if n <= 1:
+        return 0
+    return min((n - 1).bit_length(), MAX_SIZE_BUCKET)
+
+
+def bucket_nbytes(bucket: int) -> int:
+    """Representative message size the cost model is evaluated at."""
+    return 1 << bucket
+
+
+@dataclasses.dataclass
+class PlanStats:
+    """Observability for the plan cache (asserted by tests)."""
+
+    computes: Counter = dataclasses.field(default_factory=Counter)
+    hits: int = 0
+    rebuilds: int = 0
+
+    def compute_count(self, key) -> int:
+        return self.computes[key]
+
+    @property
+    def total_computes(self) -> int:
+        return sum(self.computes.values())
+
+
+class CommPlan:
+    """Protocol dispatch table: plan once, execute many.
+
+    ``protocol_for`` is the hot-path entry: one dict lookup when the
+    ``(fn, axis, size_bucket)`` key was planned (always, after the eager
+    warm at construction), one cost-model evaluation otherwise.  With
+    ``enabled=False`` the plan degrades to the seed's per-call behaviour
+    (cost model re-run on every call) — the baseline ``bench_layers``
+    measures against.
+    """
+
+    def __init__(
+        self,
+        topology: Topology,
+        *,
+        composed: bool = True,
+        force: Optional[Mapping[str, str]] = None,
+        enabled: bool = True,
+        warm_functions: Sequence[str] = (),
+    ) -> None:
+        self.topology = topology
+        # topology may be None for engines bound to a mesh later (init())
+        self.fingerprint = None if topology is None else topology.fingerprint()
+        self.composed = composed
+        self.force = dict(force or {})
+        self.enabled = enabled
+        self.warm_functions = tuple(warm_functions)
+        self.stats = PlanStats()
+        self._table: Dict[Tuple[str, str, int], ProtocolChoice] = {}
+        # hot-path mirror of _table holding only the protocol string
+        self._protocols: Dict[Tuple[str, str, int], str] = {}
+        if enabled and composed:
+            self.warm(self.warm_functions or None)
+
+    # -- planning ------------------------------------------------------
+
+    def warm(self, functions: Optional[Sequence[str]] = None,
+             axes: Optional[Sequence[str]] = None) -> None:
+        """Eagerly fill the dispatch table for every (fn, axis, bucket)."""
+        if self.topology is None:
+            return
+        fns = [f for f in (functions or costmodel.protocol_functions())
+               if costmodel.protocol_menu(f)]
+        for fn in fns:
+            for axis in (axes or self.topology.axis_sizes):
+                for b in range(MAX_SIZE_BUCKET + 1):
+                    self._plan_key(fn, axis, b)
+
+    def _plan_key(self, fn: str, axis: str, bucket: int) -> ProtocolChoice:
+        key = (fn, axis, bucket)
+        choice = self._table.get(key)
+        if choice is None:
+            self.stats.computes[key] += 1
+            choice = costmodel.choose_protocol(
+                fn, bucket_nbytes(bucket), self.topology, axis)
+            self._table[key] = choice
+            self._protocols[key] = choice.protocol
+        return choice
+
+    # -- hot path ------------------------------------------------------
+
+    def protocol_for(self, fn: str, nbytes: float, axis: str) -> str:
+        """Hot-path protocol lookup: inlined size-bucketing + one dict get
+        (the per-call cost ``bench_layers`` measures).  The inline
+        bucketing must stay equivalent to ``size_bucket`` — pinned by
+        test_plan's consistency test."""
+        if not self.composed:
+            return costmodel.XLA_DEFAULT
+        forced = self.force.get(fn)
+        if forced:
+            return forced
+        if not self.enabled:
+            return costmodel.choose_protocol(
+                fn, nbytes, self.topology, axis).protocol
+        n = int(nbytes)
+        b = (n - 1).bit_length() if n > 1 else 0
+        if b > MAX_SIZE_BUCKET:
+            b = MAX_SIZE_BUCKET
+        proto = self._protocols.get((fn, axis, b))
+        if proto is None:
+            return self._plan_key(fn, axis, b).protocol
+        self.stats.hits += 1
+        return proto
+
+    # -- invalidation --------------------------------------------------
+
+    def maybe_rebuild(self, topology: Topology) -> bool:
+        """Topology change => rebuild (the one plan-invalidation rule)."""
+        fp = None if topology is None else topology.fingerprint()
+        if fp == self.fingerprint:
+            self.topology = topology
+            return False
+        self.topology = topology
+        self.fingerprint = fp
+        self._table.clear()
+        self._protocols.clear()
+        self.stats.rebuilds += 1
+        if self.enabled and self.composed:
+            self.warm(self.warm_functions or None)
+        return True
+
+    @property
+    def table_size(self) -> int:
+        return len(self._table)
+
+    def describe(self) -> str:
+        return (f"CommPlan(entries={len(self._table)}, "
+                f"computes={self.stats.total_computes}, "
+                f"hits={self.stats.hits}, rebuilds={self.stats.rebuilds})")
+
+
+# ---------------------------------------------------------------------------
+# Gradient bucket planning: dtype-grouped, size-capped fused buckets
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one pytree leaf lives inside a bucket's flat vector."""
+
+    index: int            # leaf position in the flattened tree
+    offset: int           # start element within the bucket
+    size: int
+    shape: Tuple[int, ...]
+    dtype: Any            # the leaf's own dtype (restored on unbucket)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradBucket:
+    """One fused collective's worth of gradient leaves (same wire dtype)."""
+
+    wire_dtype: Any
+    size: int             # total elements
+    slots: Tuple[LeafSlot, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * jnp.dtype(self.wire_dtype).itemsize
+
+
+def plan_buckets(leaves: Sequence[Any],
+                 bucket_bytes: Optional[int] = DEFAULT_BUCKET_BYTES,
+                 dtype_aware: bool = True) -> Tuple[GradBucket, ...]:
+    """Group leaves by dtype, then split each group into size-capped buckets.
+
+    Deterministic in (shapes, dtypes, order, bucket_bytes): callers that
+    need a matching state layout ahead of time (EF residuals) re-run this
+    on abstract leaves.  ``dtype_aware=False`` reproduces the legacy wire
+    format: every leaf upcast to one float32 group.  ``bucket_bytes=None``
+    means unlimited (one bucket per dtype group).  A single leaf larger
+    than the cap gets its own bucket.
+    """
+    groups: Dict[str, List[int]] = {}
+    for idx, leaf in enumerate(leaves):
+        key = jnp.dtype(leaf.dtype).name if dtype_aware else "float32"
+        groups.setdefault(key, []).append(idx)
+
+    buckets: List[GradBucket] = []
+    for key in sorted(groups):
+        wire_dtype = jnp.dtype(key)
+        itemsize = wire_dtype.itemsize
+        slots: List[LeafSlot] = []
+        offset = 0
+        for idx in groups[key]:
+            leaf = leaves[idx]
+            size = int(leaf.size)
+            if (slots and bucket_bytes is not None
+                    and (offset + size) * itemsize > bucket_bytes):
+                buckets.append(GradBucket(wire_dtype, offset, tuple(slots)))
+                slots, offset = [], 0
+            slots.append(LeafSlot(idx, offset, size, tuple(leaf.shape),
+                                  jnp.dtype(leaf.dtype)))
+            offset += size
+        if slots:
+            buckets.append(GradBucket(wire_dtype, offset, tuple(slots)))
+    return tuple(buckets)
+
+
+def gather_bucket(leaves: Sequence[jax.Array], bucket: GradBucket
+                  ) -> jax.Array:
+    """Concatenate a bucket's leaves into one flat wire-dtype vector."""
+    parts = [leaves[s.index].reshape(-1).astype(bucket.wire_dtype)
+             for s in bucket.slots]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def scatter_bucket(flat: jax.Array, bucket: GradBucket,
+                   out: List[Optional[jax.Array]]) -> None:
+    """Slice a synced bucket back into per-leaf arrays (leaf dtypes)."""
+    for s in bucket.slots:
+        out[s.index] = (flat[s.offset:s.offset + s.size]
+                        .reshape(s.shape).astype(s.dtype))

@@ -33,6 +33,49 @@ def binomial_broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array
     return x
 
 
+def scatter_allgather_broadcast(x2d: jax.Array, axis_name: str,
+                                root: int = 0) -> jax.Array:
+    """van de Geijn large-message broadcast: binomial scatter of root's
+    chunks (log p rounds, halving payload each round) + ring all-gather.
+
+    x2d: (p, chunk) — the root's rows are the payload; other devices' rows
+    are ignored.  Returns (p, chunk) == root's x2d on every device.
+    Requires pow2 p (callers fall back to ``binomial_broadcast``).
+    """
+    p = x2d.shape[0]
+    if p == 1:
+        return x2d
+    assert c.is_pow2(p), p
+    i = c.axis_index(axis_name)
+    r = jnp.mod(i - root, p)  # effective rank; root -> 0, owns chunk r
+
+    # Scatter: at distance k, effective rank s (s % 2k == 0) holds chunks
+    # [s, s+2k) and sends the upper half [s+k, s+2k) to rank s+k.
+    buf = x2d
+    k = p // 2
+    while k >= 1:
+        perm = c.complete_perm(
+            [((s + root) % p, (s + k + root) % p) for s in range(0, p, 2 * k)],
+            p)
+        sending = jnp.equal(jnp.mod(r, 2 * k), 0)
+        # Senders slice [r+k, r+2k); receivers' payload lands at [r, r+k).
+        start = jnp.where(sending, r + k, jnp.minimum(r, p - k))
+        block = lax.dynamic_slice_in_dim(buf, start, k, axis=0)
+        recv = lax.ppermute(block, axis_name, perm)
+        updated = lax.dynamic_update_slice_in_dim(
+            buf, recv, jnp.minimum(r, p - k), axis=0)
+        receiving = jnp.equal(jnp.mod(r, 2 * k), k)
+        buf = jnp.where(receiving, updated, buf)
+        k //= 2
+
+    # All-gather the per-device chunks.  ring_all_gather_flat keys rows by
+    # absolute device index; device d holds chunk (d - root) mod p, so a
+    # static roll restores chunk order.
+    from repro.core.protocols import ring
+    gathered = ring.ring_all_gather_flat(c.dyn_chunk(buf, r), axis_name)
+    return jnp.roll(gathered, -root, axis=0)
+
+
 def binomial_reduce_to_root(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
     """Reduce (sum) to root; non-root devices end with garbage partial sums
     (callers broadcast or discard).  log2(p) rounds mirrored from broadcast."""

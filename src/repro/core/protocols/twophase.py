@@ -30,7 +30,7 @@ def two_phase_all_reduce_2d(
     shard2d, n = c.pad_flat(shard, p1)
     shard2d = shard2d.reshape(p1, -1)
     reduced = ring.bidir_ring_all_reduce_flat(shard2d, axis1)
-    shard = c.unpad(reduced, n, shard.shape)
+    shard = c.unpad(reduced.reshape(-1), n, shard.shape)
     gathered = ring.bidir_ring_all_gather_flat(shard, axis0)
     return gathered.reshape(p0 * x2d.shape[1])
 

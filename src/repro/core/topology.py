@@ -63,6 +63,13 @@ class Topology:
     def is_cross_pod(self, axis: str) -> bool:
         return axis == "pod"
 
+    def fingerprint(self) -> tuple:
+        """Hashable identity of the modeled network: the protocol-plan
+        cache key component — equal fingerprints must cost identically."""
+        return tuple(sorted(
+            (name, size, self.axis_links[name])
+            for name, size in self.axis_sizes.items()))
+
     def describe(self) -> str:
         parts = []
         for name, n in self.axis_sizes.items():

@@ -24,6 +24,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import ARCH_IDS, get_config
 from repro.core import CollectiveEngine, EngineConfig, trace
 from repro.core.compose import compose_from_trace
+from repro.core.plan import DEFAULT_BUCKET_BYTES
 from repro.core.topology import topology_from_mesh
 from repro.data import SyntheticLMDataset
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -69,6 +70,10 @@ def main() -> None:
     ap.add_argument("--sync", choices=["auto", "composed", "compressed"],
                     default="auto")
     ap.add_argument("--bucket-grads", action="store_true")
+    ap.add_argument("--bucket-bytes", type=int,
+                    default=DEFAULT_BUCKET_BYTES,
+                    help="size cap per fused dtype-grouped "
+                         "gradient bucket")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
@@ -93,7 +98,8 @@ def main() -> None:
                            total=args.steps))
     tcfg = trainer.TrainCfg(microbatches=args.microbatches,
                             sync_mode=args.sync,
-                            bucket_grads=args.bucket_grads)
+                            bucket_grads=args.bucket_grads,
+                            bucket_bytes=args.bucket_bytes)
 
     ds = SyntheticLMDataset(vocab_size=cfg.vocab_size,
                             seq_len=args.seq_len,
@@ -101,15 +107,18 @@ def main() -> None:
 
     engine = None
     if args.sync != "auto":
-        # Trace a composed-mode probe over an abstract (4,2) mesh to
-        # discover the collective set 𝓕 (paper §2.2 application scan).
+        # Trace a probe over an abstract (4,2) mesh to discover the
+        # collective set 𝓕 (paper §2.2 application scan).  The probe must
+        # use the *actual* sync mode: a compressed launch invokes
+        # compressed_all_reduce, which the composed library must cover.
         from repro.core import compose_library, registry
         from repro.core.topology import topology_from_mesh_shape
         amesh = substrate.abstract_mesh((4, 2), ("data", "model"))
         probe_cfg = trainer.TrainCfg(microbatches=args.microbatches,
-                                     sync_mode="composed",
+                                     sync_mode=args.sync,
                                      data_axes=("data",),
-                                     bucket_grads=args.bucket_grads)
+                                     bucket_grads=args.bucket_grads,
+                                     bucket_bytes=args.bucket_bytes)
         probe_eng = CollectiveEngine(
             topology_from_mesh_shape(("data", "model"), (4, 2)),
             library=compose_library(registry.ALL_FUNCTIONS),

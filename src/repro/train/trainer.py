@@ -12,8 +12,12 @@ Three gradient-synchronisation modes (the paper's A/B/C):
                (feature injected in the protocol, paper §4); the EF
                residual lives in the train state and persists across steps.
 
-Gradient bucketing (flatten-to-one-vector before the ring) is a
-beyond-paper optimization toggled by ``TrainCfg.bucket_grads``.
+Gradient bucketing (``TrainCfg.bucket_grads``) is a beyond-paper
+optimization: leaves are grouped by dtype (bf16 stays bf16 on the wire)
+and fused into buckets of at most ``TrainCfg.bucket_bytes``, each an
+independent cost-model-planned collective (``engine.
+sync_gradients_bucketed``) so the alpha term amortizes and XLA overlaps
+the buckets.
 """
 
 from __future__ import annotations
@@ -26,7 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.compression import EFState
+from repro.core import plan as plan_mod
+from repro.core.compression import EFState, bucket_ef_zeros
 from repro.core.engine import CollectiveEngine
 from repro.runtime import substrate
 
@@ -38,12 +43,29 @@ class TrainCfg:
     microbatches: int = 1
     sync_mode: str = "auto"              # auto | composed | compressed
     data_axes: Tuple[str, ...] = ("pod", "data")
-    bucket_grads: bool = False           # beyond-paper: single fused ring
+    bucket_grads: bool = False           # beyond-paper: fused dtype buckets
+    bucket_bytes: int = plan_mod.DEFAULT_BUCKET_BYTES  # size cap per bucket
     grad_dtype: Any = jnp.float32        # accumulation dtype
 
 
 def _tree_size(tree) -> int:
     return sum(l.size for l in jax.tree_util.tree_leaves(tree))
+
+
+def _grad_structs(params, cfg: TrainCfg):
+    """Abstract leaves with the dtype gradients actually have in the step:
+    microbatched accumulation casts to ``grad_dtype``; a single microbatch
+    keeps each param's own dtype."""
+    return [jax.ShapeDtypeStruct(
+                l.shape, cfg.grad_dtype if cfg.microbatches > 1 else l.dtype)
+            for l in jax.tree_util.tree_leaves(params)]
+
+
+def grad_bucket_plan(params, cfg: TrainCfg) -> tuple:
+    """The dtype-grouped bucket layout the step's fused sync will use —
+    deterministic in (shapes, dtypes, order, bucket_bytes), so state
+    creation and the traced step always agree."""
+    return plan_mod.plan_buckets(_grad_structs(params, cfg), cfg.bucket_bytes)
 
 
 def make_train_state(model, optimizer, rng=None, abstract: bool = False,
@@ -60,9 +82,8 @@ def make_train_state(model, optimizer, rng=None, abstract: bool = False,
     state = {"params": params, "opt": opt, "step": step}
     if cfg.sync_mode == "compressed":
         if cfg.bucket_grads:
-            n = _tree_size(params)
-            state["ef"] = (jax.ShapeDtypeStruct((n,), jnp.float32) if abstract
-                           else jnp.zeros((n,), jnp.float32))
+            state["ef"] = bucket_ef_zeros(grad_bucket_plan(params, cfg),
+                                          abstract=abstract)
         else:
             mk = (lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)) \
                 if abstract else (lambda p: jnp.zeros(p.shape, jnp.float32))
@@ -77,7 +98,11 @@ def state_specs(model, optimizer, cfg: TrainCfg = TrainCfg()
              "opt": optimizer.state_specs(ps, model.abstract_params()),
              "step": P()}
     if cfg.sync_mode == "compressed":
-        specs["ef"] = P() if cfg.bucket_grads else ps
+        if cfg.bucket_grads:
+            specs["ef"] = tuple(
+                P() for _ in grad_bucket_plan(model.abstract_params(), cfg))
+        else:
+            specs["ef"] = ps
     return specs
 
 
@@ -134,41 +159,16 @@ def _accumulate_grads(loss_fn: Callable, params, batch, n_micro: int,
 
 
 # ---------------------------------------------------------------------------
-# Gradient bucketing (beyond-paper optimization)
+# Gradient sync flavours (both route mean-scaling through engine.mean_scale)
 # ---------------------------------------------------------------------------
 
-def _flatten(grads):
-    leaves, treedef = jax.tree_util.tree_flatten(grads)
-    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
-                            for l in leaves])
-    return flat, leaves, treedef
-
-
-def _unflatten(flat, leaves, treedef):
-    out, off = [], 0
-    for l in leaves:
-        out.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
-        off += l.size
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
-def _bucket_sync(engine: CollectiveEngine, grads, axes, compress, ef_flat):
-    """One fused ring over the whole gradient vector: amortizes the alpha
-    term of p-1 hops across every parameter instead of paying it per-leaf."""
-    flat, leaves, treedef = _flatten(grads)
-    if compress:
-        y, ef = engine.compressed_all_reduce(flat, axes[0],
-                                             EFState(residual=ef_flat))
-        for ax in axes[1:]:
-            y = engine.all_reduce(y, ax)
-        new_ef = ef.residual
-    else:
-        y = engine.all_reduce(flat, axes if len(axes) > 1 else axes[0])
-        new_ef = ef_flat
-    scale = 1.0
-    for ax in axes:
-        scale /= engine.topology.axis_sizes.get(ax, 1)
-    return _unflatten(y * scale, leaves, treedef), new_ef
+def _bucket_sync(engine: CollectiveEngine, grads, axes, compress, ef,
+                 bucket_bytes):
+    """Fused dtype-grouped buckets: amortizes the alpha term across each
+    bucket's leaves while keeping bf16 gradients bf16 on the wire."""
+    return engine.sync_gradients_bucketed(
+        grads, axes, mean=True, bucket_bytes=bucket_bytes,
+        compress=compress, ef_state=ef)
 
 
 def _leaf_sync(engine: CollectiveEngine, grads, axes, compress, ef_tree):
@@ -181,8 +181,8 @@ def _leaf_sync(engine: CollectiveEngine, grads, axes, compress, ef_tree):
         grads, axes[0], mean=True, compress=True, ef_state=ef_states)
     for ax in axes[1:]:
         synced = jax.tree_util.tree_map(
-            lambda g: engine.all_reduce(g, ax)
-            / engine.topology.axis_sizes.get(ax, 1), synced)
+            lambda g: engine.all_reduce(g, ax) * engine.mean_scale(ax),
+            synced)
     new_ef = jax.tree_util.tree_map(
         lambda s: s.residual, new_states,
         is_leaf=lambda x: isinstance(x, EFState))
@@ -236,13 +236,13 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
             ef = st.get("ef")
             if cfg.bucket_grads:
                 grads, new_ef = _bucket_sync(engine, grads, data_axes,
-                                             compress, ef)
+                                             compress, ef, cfg.bucket_bytes)
             else:
                 grads, new_ef = _leaf_sync(engine, grads, data_axes,
                                            compress, ef)
             for ax in data_axes:
-                loss = engine.all_reduce(loss, ax) \
-                    / engine.topology.axis_sizes.get(ax, 1)
+                loss = engine.all_reduce(loss, ax)
+            loss = loss * engine.mean_scale(data_axes)
             new_params, new_opt, om = optimizer.update(
                 grads, st["opt"], st["params"])
             new_state = {"params": new_params, "opt": new_opt,

@@ -1,0 +1,375 @@
+"""Plan-once runtime: protocol-plan caching, flattened dispatch, the
+scatter+allgather broadcast route, and dtype-aware fused gradient
+bucketing (numerics + bytes-on-the-wire)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        costmodel, plan as plan_mod, registry,
+                        topology_from_mesh_shape)
+from repro.core.compression import bucket_ef_zeros
+from repro.core.engine import SYNC_STATS_KEY
+
+AX = "data"
+P_AX = 8
+
+
+@pytest.fixture
+def topo():
+    return topology_from_mesh_shape((AX,), (P_AX,))
+
+
+def full_engine(topo, **cfg):
+    return CollectiveEngine(topo, library=compose_library(
+        registry.ALL_FUNCTIONS), config=EngineConfig(**cfg))
+
+
+def mixed_grads(rng):
+    return {"wq": rng.randn(16, 16).astype(np.float32),
+            "wk": rng.randn(8, 4).astype(jnp.bfloat16),
+            "bias": rng.randn(7).astype(np.float32),
+            "emb": rng.randn(32, 3).astype(jnp.bfloat16)}
+
+
+def per_device(rng, grads_fn):
+    """Stack P_AX per-device copies of a grads pytree."""
+    return jax.tree_util.tree_map(
+        lambda *ls: np.stack(ls), *[grads_fn(rng) for _ in range(P_AX)])
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_warm_covers_every_bucket(topo):
+    eng = full_engine(topo)
+    per_fn = len(topo.axis_sizes) * (plan_mod.MAX_SIZE_BUCKET + 1)
+    assert eng.plan.table_size == len(costmodel.protocol_functions()) * per_fn
+
+
+def test_choose_protocol_runs_at_most_once_per_key(topo):
+    eng = full_engine(topo)
+    x = jax.ShapeDtypeStruct((P_AX, 513), jnp.float32)
+    f = lambda v: eng.all_reduce(v, AX)
+    for _ in range(5):  # repeated tracing: same (fn, axis, bucket) key
+        jax.eval_shape(lambda a: jax.vmap(f, axis_name=AX)(a), x)
+    for key, n in eng.plan.stats.computes.items():
+        assert n <= 1, (key, n)
+    assert eng.plan.stats.hits >= 5
+    # a different size in the same pow2 bucket must not re-plan
+    computes = eng.plan.stats.total_computes
+    jax.eval_shape(lambda a: jax.vmap(f, axis_name=AX)(a),
+                   jax.ShapeDtypeStruct((P_AX, 520), jnp.float32))
+    assert eng.plan.stats.total_computes == computes
+
+
+def test_protocol_for_inline_bucketing_matches_size_bucket(topo):
+    """protocol_for inlines the pow2 bucketing for speed; it must agree
+    with size_bucket() for every size (guards against the two copies
+    drifting apart)."""
+    eng = full_engine(topo)
+    for nbytes in [0, 1, 2, 3, 4, 255, 256, 257, 1 << 20, (1 << 20) + 1,
+                   1 << 34, (1 << 34) + 1, 1 << 40]:
+        key = ("all_reduce", AX, plan_mod.size_bucket(nbytes))
+        assert (eng.protocol_for("all_reduce", nbytes, AX)
+                == eng.plan._table[key].protocol), nbytes
+
+
+def test_plan_matches_unplanned_choice(topo):
+    """The cached table must pick the same protocol the per-call cost
+    model picks at the bucket-representative size."""
+    planned = full_engine(topo)
+    for nbytes in (64, 4096, 1 << 20, 1 << 28):
+        b = plan_mod.size_bucket(nbytes)
+        want = costmodel.choose_protocol(
+            "all_reduce", plan_mod.bucket_nbytes(b), topo, AX).protocol
+        assert planned.protocol_for("all_reduce", nbytes, AX) == want
+
+
+def test_plan_invalidation_on_topology_change(topo):
+    eng = full_engine(topo)
+    assert eng.plan.stats.rebuilds == 0
+    plan_before = eng.plan
+    topo2 = topology_from_mesh_shape((AX, "model"), (4, 2))
+    assert plan_before.maybe_rebuild(topo2)          # fingerprint changed
+    assert plan_before.stats.rebuilds == 1
+    # same topology again: no rebuild
+    assert not plan_before.maybe_rebuild(topo2)
+
+
+def test_engine_init_replans_on_new_mesh(topo, rng):
+    from repro.runtime import substrate
+    eng = full_engine(topo)
+    assert eng.plan.stats.rebuilds == 0
+    mesh = substrate.make_mesh((1,), ("model",))
+    eng.init(mesh)
+    assert eng.plan.stats.rebuilds == 1      # topology change => rebuild
+    assert "model" in eng.topology.axis_sizes
+    # re-init on the same mesh: no rebuild, plan table kept
+    eng.init(mesh)
+    assert eng.plan.stats.rebuilds == 1
+
+
+def test_force_protocol_bypasses_plan(topo):
+    eng = full_engine(topo, force_protocol={"all_reduce": "ring"})
+    assert eng.protocol_for("all_reduce", 64, AX) == costmodel.RING
+    assert eng.protocol_for("all_reduce", 1 << 30, AX) == costmodel.RING
+
+
+def test_planned_dispatch_5x_faster_than_per_call(topo):
+    """Acceptance: >=5x lower per-call trace-time dispatch overhead
+    (protocol selection + tier-wrapper binding) for planned engines.
+    Idle-machine ratio is ~8-13x; min-of-batch timings plus retries keep
+    a loaded CI box from flaking on scheduler noise."""
+    planned = full_engine(topo)
+    baseline = full_engine(topo, plan=False)
+    nb = 1 << 20
+
+    def dispatch(eng):
+        eng.protocol_for("all_reduce", nb, AX)
+        eng.dispatcher("all_reduce")
+
+    def best_us(fn, batches=30, per_batch=20):
+        for _ in range(10):
+            fn()
+        best = float("inf")
+        for _ in range(batches):
+            t0 = time.perf_counter_ns()
+            for _ in range(per_batch):
+                fn()
+            best = min(best, (time.perf_counter_ns() - t0) / 1e3 / per_batch)
+        return best
+
+    ratios = []
+    for _ in range(5):
+        us_base = best_us(lambda: dispatch(baseline))
+        us_plan = best_us(lambda: dispatch(planned))
+        ratios.append(us_base / us_plan)
+        if ratios[-1] >= 5:
+            return
+    raise AssertionError(f"dispatch speedup below 5x in all attempts: "
+                         f"{[f'{r:.1f}' for r in ratios]}")
+
+
+# ---------------------------------------------------------------------------
+# Bucket planning (pure layout logic)
+# ---------------------------------------------------------------------------
+
+def test_plan_buckets_groups_by_dtype_and_caps_size():
+    leaves = [jax.ShapeDtypeStruct((256,), jnp.bfloat16),
+              jax.ShapeDtypeStruct((100,), jnp.float32),
+              jax.ShapeDtypeStruct((300,), jnp.bfloat16),
+              jax.ShapeDtypeStruct((4000,), jnp.float32)]
+    buckets = plan_mod.plan_buckets(leaves, bucket_bytes=1024)
+    for b in buckets:
+        assert len({s.dtype for s in b.slots}) == 1
+        assert b.nbytes <= 1024 or len(b.slots) == 1  # oversized leaf alone
+    # every leaf appears exactly once
+    seen = sorted(s.index for b in buckets for s in b.slots)
+    assert seen == [0, 1, 2, 3]
+    # bf16 leaves (256+300 elems = 1112B) split across two bf16 buckets
+    bf16 = [b for b in buckets if b.wire_dtype == jnp.dtype(jnp.bfloat16)]
+    assert len(bf16) == 2
+
+
+def test_plan_buckets_unlimited_and_upcast():
+    leaves = [jax.ShapeDtypeStruct((256,), jnp.bfloat16),
+              jax.ShapeDtypeStruct((100,), jnp.float32)]
+    assert len(plan_mod.plan_buckets(leaves, bucket_bytes=None)) == 2
+    legacy = plan_mod.plan_buckets(leaves, bucket_bytes=None,
+                                   dtype_aware=False)
+    assert len(legacy) == 1
+    assert legacy[0].wire_dtype == jnp.dtype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed sync: numerical equivalence across paths
+# ---------------------------------------------------------------------------
+
+def reference_mean(stacked):
+    return jax.tree_util.tree_map(
+        lambda g: np.broadcast_to(
+            np.asarray(g, np.float32).mean(0), g.shape).astype(np.float32),
+        stacked)
+
+
+def assert_close_tree(got, want_f32, bf16_tol=0.05, f32_tol=1e-4):
+    for k in want_f32:
+        g = np.asarray(got[k], np.float32)
+        tol = bf16_tol if np.asarray(got[k]).dtype == jnp.bfloat16 else f32_tol
+        np.testing.assert_allclose(g, want_f32[k], rtol=tol, atol=tol,
+                                   err_msg=k)
+
+
+@pytest.mark.parametrize("bucket_bytes", [None, 256, 1 << 20])
+@pytest.mark.parametrize("dtype_aware", [True, False])
+def test_bucketed_sync_matches_leaf_and_xla(topo, rng, bucket_bytes,
+                                            dtype_aware):
+    stacked = per_device(rng, mixed_grads)
+    want = reference_mean(stacked)
+    eng = full_engine(topo)
+    mono = CollectiveEngine.monolithic(topo)
+
+    bucketed = jax.vmap(
+        lambda g: eng.sync_gradients_bucketed(
+            g, AX, bucket_bytes=bucket_bytes, dtype_aware=dtype_aware)[0],
+        axis_name=AX)(stacked)
+    leaf = jax.vmap(lambda g: eng.sync_gradients(g, AX)[0],
+                    axis_name=AX)(stacked)
+    xla_path = jax.vmap(lambda g: mono.sync_gradients(g, AX)[0],
+                        axis_name=AX)(stacked)
+
+    assert_close_tree(bucketed, want)
+    assert_close_tree(leaf, want)
+    assert_close_tree(xla_path, want)
+    # bucketed output keeps each leaf's dtype
+    for k in stacked:
+        assert bucketed[k].dtype == stacked[k].dtype
+
+
+def test_bucketed_sync_multiaxis_mesh(rng):
+    topo2 = topology_from_mesh_shape(("pod", AX), (2, 4))
+    eng = CollectiveEngine(topo2, library=compose_library(
+        registry.ALL_FUNCTIONS), config=EngineConfig())
+    g = {"a": rng.randn(2, 4, 33).astype(np.float32),
+         "b": rng.randn(2, 4, 8, 2).astype(jnp.bfloat16)}
+    f = lambda v: eng.sync_gradients_bucketed(v, ("pod", AX))[0]
+    out = jax.vmap(jax.vmap(f, axis_name=AX), axis_name="pod")(g)
+    for k in g:
+        want = np.asarray(g[k], np.float32).mean((0, 1))
+        np.testing.assert_allclose(
+            np.asarray(out[k], np.float32),
+            np.broadcast_to(want, g[k].shape),
+            rtol=0.05 if g[k].dtype == jnp.bfloat16 else 1e-4, atol=0.05)
+
+
+def test_bucketed_sync_mean_scale_uses_live_axis_fallback(rng):
+    """The satellite fix: an axis missing from the topology must still be
+    mean-scaled via the live axis size (lax fallback), not silently
+    skipped.  Topology only knows "data"; the sync spans "aux" too."""
+    topo1 = topology_from_mesh_shape((AX,), (4,))
+    eng = CollectiveEngine(topo1, library=compose_library(
+        registry.ALL_FUNCTIONS), config=EngineConfig())
+    g = {"a": rng.randn(2, 4, 12).astype(np.float32)}  # aux=2, data=4
+    f = lambda v: eng.sync_gradients_bucketed(v, (AX, "aux"))[0]
+    out = jax.vmap(jax.vmap(f, axis_name=AX), axis_name="aux")(g)
+    want = np.broadcast_to(g["a"].mean((0, 1)), g["a"].shape)
+    np.testing.assert_allclose(np.asarray(out["a"]), want, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_bucketed_compressed_sync_with_ef(topo, rng):
+    stacked = per_device(rng, lambda r: {
+        "a": r.randn(600).astype(np.float32),
+        "b": r.randn(17, 3).astype(jnp.bfloat16)})
+    leaves = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda x: x[0], stacked))
+    buckets = plan_mod.plan_buckets(leaves, bucket_bytes=None)
+    eng = full_engine(topo)
+    ef0 = tuple(np.zeros((P_AX, b.size), np.float32) for b in buckets)
+    synced, ef1 = jax.vmap(
+        lambda g, e: eng.sync_gradients_bucketed(
+            g, AX, compress=True, ef_state=e, bucket_bytes=None),
+        axis_name=AX)(stacked, ef0)
+    want = reference_mean(stacked)
+    assert_close_tree(synced, want, bf16_tol=0.2, f32_tol=0.05)
+    assert len(ef1) == len(buckets)
+    for e0, e1 in zip(ef0, ef1):
+        assert e1.shape == e0.shape and e1.dtype == jnp.float32
+        assert np.abs(np.asarray(e1)).max() > 0   # EF captured some error
+
+
+def test_bucketed_compressed_auto_inits_ef(topo, rng):
+    """compress=True with ef_state=None must auto-init per-bucket EF
+    residuals (same contract as sync_gradients), not thread Nones."""
+    stacked = per_device(rng, lambda r: {"a": r.randn(600).astype(np.float32)})
+    eng = full_engine(topo)
+    synced, ef1 = jax.vmap(
+        lambda g: eng.sync_gradients_bucketed(g, AX, compress=True),
+        axis_name=AX)(stacked)
+    assert len(ef1) == 1 and ef1[0].dtype == jnp.float32
+    # and the returned state must be threadable into the next step
+    synced2, ef2 = jax.vmap(
+        lambda g, e: eng.sync_gradients_bucketed(g, AX, compress=True,
+                                                 ef_state=e),
+        axis_name=AX)(stacked, ef1)
+    assert ef2[0].shape == ef1[0].shape
+
+
+def test_bucketed_ef_bucket_mismatch_raises(topo, rng):
+    eng = full_engine(topo)
+    g = {"a": np.zeros((P_AX, 64), np.float32)}
+    with pytest.raises(ValueError, match="bucket"):
+        jax.eval_shape(
+            lambda v: jax.vmap(
+                lambda x: eng.sync_gradients_bucketed(
+                    x, AX, compress=True,
+                    ef_state=(jnp.zeros((64,)), jnp.zeros((1,)))),
+                axis_name=AX)(v), g)
+
+
+# ---------------------------------------------------------------------------
+# Bytes on the wire (acceptance: bf16 buckets move ~2x fewer bytes than the
+# legacy f32-upcast path) — asserted via CommStats at trace time
+# ---------------------------------------------------------------------------
+
+def sync_wire_bytes(topo, grads_struct, **kw):
+    eng = full_engine(topo)
+    jax.eval_shape(
+        lambda g: jax.vmap(
+            lambda v: eng.sync_gradients_bucketed(v, AX, **kw)[0],
+            axis_name=AX)(g), grads_struct)
+    return eng.stats.bytes[SYNC_STATS_KEY]
+
+
+def test_bf16_buckets_halve_wire_bytes(topo):
+    g = {"a": jax.ShapeDtypeStruct((P_AX, 4096), jnp.bfloat16),
+         "b": jax.ShapeDtypeStruct((P_AX, 512, 8), jnp.bfloat16)}
+    aware = sync_wire_bytes(topo, g, dtype_aware=True)
+    upcast = sync_wire_bytes(topo, g, dtype_aware=False)
+    assert aware == (4096 + 4096) * 2    # bf16 stays 2 bytes/elem
+    assert upcast == 2 * aware           # f32 upcast doubles the wire
+
+
+def test_compressed_buckets_quarter_wire_bytes(topo):
+    g = {"a": jax.ShapeDtypeStruct((P_AX, 4096), jnp.float32)}
+    plain = sync_wire_bytes(topo, g)
+    eng = full_engine(topo)
+    jax.eval_shape(
+        lambda v: jax.vmap(
+            lambda x: eng.sync_gradients_bucketed(x, AX, compress=True),
+            axis_name=AX)(v), g)
+    compressed = eng.stats.bytes[SYNC_STATS_KEY]
+    assert compressed < 0.3 * plain      # int8 + scales vs f32
+
+
+# ---------------------------------------------------------------------------
+# Broadcast RING route (satellite fix): real scatter+allgather
+# ---------------------------------------------------------------------------
+
+def test_broadcast_ring_protocol_is_scatter_allgather(topo, rng):
+    eng = full_engine(topo, force_protocol={"broadcast": costmodel.RING})
+    x = rng.randn(P_AX, 1000).astype(np.float32)   # not divisible by p
+    out = jax.vmap(lambda v: eng.broadcast(v, AX, root=3), axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(x[3], x.shape))
+
+
+def test_broadcast_large_message_picks_ring(topo):
+    # the cost model must route large pow2-axis broadcasts to RING now
+    # that the schedule really is scatter+allgather
+    assert costmodel.choose_protocol(
+        "broadcast", 1 << 28, topo, AX).protocol == costmodel.RING
+    assert costmodel.choose_protocol(
+        "broadcast", 256, topo, AX).protocol == costmodel.BINOMIAL_TREE
+
+
+def test_broadcast_ring_non_pow2_costs_inf():
+    topo6 = topology_from_mesh_shape((AX,), (6,))
+    assert costmodel.cost_broadcast_scatter_allgather(
+        1 << 20, topo6, AX) == float("inf")

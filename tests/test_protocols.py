@@ -128,6 +128,17 @@ def test_binomial_broadcast(rng, p, root):
 
 
 @pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("root", [0, 1, 3])
+def test_scatter_allgather_broadcast(rng, p, root):
+    if root >= p:
+        pytest.skip("root >= p")
+    x = rand(rng, p, p, 6)           # per device: (p, chunk)
+    out = run_spmd(lambda v: tree.scatter_allgather_broadcast(v, AX, root), x)
+    want = np.broadcast_to(x[root], (p, p, 6))
+    np.testing.assert_allclose(np.asarray(out), want)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
 def test_binomial_reduce_root(rng, p):
     x = rand(rng, p, 5)
     out = run_spmd(lambda v: tree.binomial_reduce_to_root(v, AX, 0), x)
