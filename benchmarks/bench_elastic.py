@@ -1,0 +1,99 @@
+"""Elasticity-cost bench: wall time of one crash recovery's components.
+
+Measures the three phases the ElasticController pays on a device loss —
+checkpoint restore, state re-mesh (device_put with re-fitted shardings),
+and protocol re-plan (the ``Topology.fingerprint()``-triggered CommPlan
+rebuild) — on a reduced model so the smoke run stays fast.  Feeds the
+``recovery`` block of ``BENCH_plan.json`` so the perf trajectory across
+PRs tracks what elasticity costs, not only what steady-state costs.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+
+from benchmarks.common import Table
+from repro.checkpoint.manager import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        registry, topology_from_mesh_shape)
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.runtime import remesh, substrate
+from repro.train import TrainCfg, TrainSession
+
+
+def _one_cycle(session, state, tmp) -> dict:
+    save_checkpoint(tmp, 0, state)
+
+    t0 = time.perf_counter()
+    restored = restore_checkpoint(tmp, jax.eval_shape(lambda: state))
+    restore_s = time.perf_counter() - t0
+
+    mesh = substrate.make_mesh((1, 1), ("data", "model"),
+                               devices=jax.devices()[:1])
+    t0 = time.perf_counter()
+    remesh(restored, session.state_specs(), mesh)
+    remesh_s = time.perf_counter() - t0
+
+    # Replan: shrink the modeled data axis — fingerprint change =>
+    # full CommPlan re-warm (the cost a real re-mesh pays in init()).
+    topo = topology_from_mesh_shape(("data", "model"), (8, 2))
+    eng = CollectiveEngine(topo,
+                           library=compose_library(registry.ALL_FUNCTIONS),
+                           config=EngineConfig(mode="composed"))
+    eng.plan.maybe_rebuild(topo.with_axis_sizes({"data": 6}))
+    return {"restore_s": restore_s, "remesh_s": remesh_s,
+            "replan_s": eng.plan.stats.last_rebuild_seconds}
+
+
+def recovery_latency(smoke: bool = True) -> dict:
+    """Restore + remesh + replan seconds per phase; the smoke run does a
+    single cycle, the full bench takes the median of several."""
+    arch = "granite-34b"
+    session = TrainSession(build_model(get_config(arch, reduced=True)),
+                           make_optimizer("adamw"), TrainCfg())
+    state = session.init_state(jax.random.PRNGKey(0))
+    nbytes = sum(l.size * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(state))
+
+    iters = 1 if smoke else 5
+    tmp = tempfile.mkdtemp(prefix="bench_elastic_")
+    try:
+        cycles = [_one_cycle(session, state, tmp) for _ in range(iters)]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    med = {k: sorted(c[k] for c in cycles)[iters // 2]
+           for k in ("restore_s", "remesh_s", "replan_s")}
+    return {
+        "arch": arch + "-reduced",
+        "state_bytes": int(nbytes),
+        "iters": iters,
+        **med,
+        "total_s": sum(med.values()),
+    }
+
+
+def run(smoke: bool = True):
+    p = recovery_latency(smoke)
+    t = Table("bench_elastic: recovery latency (restore+remesh+replan)",
+              ["phase", "seconds"])
+    for k in ("restore_s", "remesh_s", "replan_s", "total_s"):
+        t.add(k[:-2], f"{p[k]:.4f}")
+    return [t], p
+
+
+def main():
+    tables, _ = run()
+    for t in tables:
+        t.print()
+        print()
+
+
+if __name__ == "__main__":
+    main()

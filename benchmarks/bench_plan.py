@@ -67,10 +67,12 @@ def wire_bytes(scale: int = 1) -> dict:
 
 
 def payload(smoke: bool = False) -> dict:
+    from benchmarks.bench_elastic import recovery_latency
     from benchmarks.bench_layers import dispatch_overhead
     return {
         "dispatch": dispatch_overhead(repeat=100 if smoke else 300),
         "wire_bytes": wire_bytes(scale=1 if smoke else 4),
+        "recovery": recovery_latency(smoke=smoke),
     }
 
 
@@ -87,7 +89,13 @@ def run(smoke: bool = False):
                ["engine", "us/call"])
     t2.add("per-call baseline", f"{d['per_call_us']:.2f}")
     t2.add(f"planned ({d['speedup']:.1f}x faster)", f"{d['planned_us']:.2f}")
-    return [t, t2], p
+    r = p["recovery"]
+    t3 = Table("bench_plan: elastic recovery latency "
+               f"({r['arch']}, {r['state_bytes'] / 1e6:.1f} MB state)",
+               ["phase", "ms"])
+    for k in ("restore_s", "remesh_s", "replan_s", "total_s"):
+        t3.add(k[:-2], f"{r[k] * 1e3:.1f}")
+    return [t, t2, t3], p
 
 
 def main():

@@ -4,11 +4,11 @@
 
 Every run that includes the plan bench writes ``BENCH_plan.json`` (at the
 repo root unless --out says otherwise; git-ignored — it is a per-machine
-measurement artifact): per-call dispatch overhead from
-``bench_layers`` and bytes-on-wire per gradient-sync mode from
-``bench_plan`` — the machine-readable perf trajectory across PRs.
-``--smoke`` runs only that plan bench (finishes well under 60s; tier-1
-friendly).
+measurement artifact): per-call dispatch overhead from ``bench_layers``,
+bytes-on-wire per gradient-sync mode from ``bench_plan``, and elastic
+recovery latency (restore+remesh+replan) from ``bench_elastic`` — the
+machine-readable perf trajectory across PRs.  ``--smoke`` runs only that
+plan bench (finishes well under 60s; tier-1 friendly).
 """
 
 from __future__ import annotations

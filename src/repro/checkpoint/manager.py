@@ -20,6 +20,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Optional
 
 import jax
@@ -143,6 +144,10 @@ class CheckpointManager:
         self.keep = keep
         self.async_ = async_
         self._pending: Optional[threading.Thread] = None
+        self.last_restore_seconds: float = 0.0
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.directory)
 
     def maybe_save(self, step: int, tree: Any, force: bool = False) -> bool:
         if not force and (self.every <= 0 or step % self.every != 0):
@@ -174,5 +179,8 @@ class CheckpointManager:
         step = latest_step(self.directory)
         if step is None:
             return None, None
-        return restore_checkpoint(self.directory, abstract_tree,
-                                  step=step, shardings=shardings), step
+        t0 = time.perf_counter()
+        tree = restore_checkpoint(self.directory, abstract_tree,
+                                  step=step, shardings=shardings)
+        self.last_restore_seconds = time.perf_counter() - t0
+        return tree, step

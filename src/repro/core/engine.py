@@ -85,6 +85,7 @@ class CollectiveEngine:
         self.stats = layers.CommStats()
         self._initialized = False
         self._finalized = False
+        self.last_init_rebuilt = False
         self._invoked = set()
 
         if self.config.mode == "monolithic":
@@ -521,10 +522,17 @@ class CollectiveEngine:
         # topology change => CommPlan clears + re-warms its table in place
         # (plan.stats.rebuilds records it); wrappers capture the stats
         # object, so they re-bind to the fresh one either way.
-        self.plan.maybe_rebuild(self.topology)
+        self.last_init_rebuilt = self.plan.maybe_rebuild(self.topology)
         self._rebind_dispatch()
         self._initialized = True
         return self
+
+    @property
+    def plan_rebuilds(self) -> int:
+        """Lifetime count of fingerprint-triggered CommPlan rebuilds —
+        the elastic controller's invalidation contract is asserted
+        against this."""
+        return self.plan.stats.rebuilds
 
     def finalize(self) -> str:
         """MPI_Finalize analogue: flush stats, mark the engine dead."""

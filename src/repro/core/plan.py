@@ -26,6 +26,7 @@ This module is that move:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import Counter
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -63,6 +64,7 @@ class PlanStats:
     computes: Counter = dataclasses.field(default_factory=Counter)
     hits: int = 0
     rebuilds: int = 0
+    last_rebuild_seconds: float = 0.0   # re-warm cost of the latest rebuild
 
     def compute_count(self, key) -> int:
         return self.computes[key]
@@ -169,8 +171,10 @@ class CommPlan:
         self._table.clear()
         self._protocols.clear()
         self.stats.rebuilds += 1
+        t0 = time.perf_counter()
         if self.enabled and self.composed:
             self.warm(self.warm_functions or None)
+        self.stats.last_rebuild_seconds = time.perf_counter() - t0
         return True
 
     @property

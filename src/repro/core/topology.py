@@ -63,6 +63,19 @@ class Topology:
     def is_cross_pod(self, axis: str) -> bool:
         return axis == "pod"
 
+    def with_axis_sizes(self, sizes: Mapping[str, int]) -> "Topology":
+        """The same physical network with some axes resized — the elastic
+        shrink/grow variant (device loss changes axis extents, not link
+        classes).  Unknown axis names are rejected: a new axis would need
+        a link model."""
+        unknown = set(sizes) - set(self.axis_sizes)
+        if unknown:
+            raise KeyError(f"unknown axes {sorted(unknown)}; "
+                           f"have {sorted(self.axis_sizes)}")
+        merged = dict(self.axis_sizes)
+        merged.update(sizes)
+        return Topology(axis_sizes=merged, axis_links=dict(self.axis_links))
+
     def fingerprint(self) -> tuple:
         """Hashable identity of the modeled network: the protocol-plan
         cache key component — equal fingerprints must cost identically."""

@@ -8,6 +8,12 @@ the full configs on a real pod).  Demonstrates the whole substrate:
 synthetic sharded data -> engine-composed collectives -> microbatched
 train step -> async checkpointing -> watchdog -> crash recovery with
 elastic re-mesh.
+
+``--elastic`` hands the loop to ``repro.runtime.controller.
+ElasticController`` — the supervised fail/shrink/grow path; combine with
+``--fault-plan 'lose@5:2,gain@9:2'`` to drive deterministic fault
+injection on fake host devices (``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``).
 """
 
 from __future__ import annotations
@@ -31,7 +37,8 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import build_model
 from repro.optim import cosine_schedule, make_optimizer
 from repro.parallel.sharding import named_shardings
-from repro.runtime import StepWatchdog, substrate
+from repro.runtime import (ElasticController, FaultPlan, StepWatchdog,
+                           substrate)
 from repro.train import trainer
 
 logger = logging.getLogger("repro.train")
@@ -81,6 +88,17 @@ def main() -> None:
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--elastic", action="store_true",
+                    help="supervised fail/shrink/grow loop "
+                         "(ElasticController); needs --ckpt-dir")
+    ap.add_argument("--max-recoveries", type=int, default=8,
+                    help="abort after this many elastic recoveries")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault injection, e.g. "
+                         "'lose@5:2,gain@9:2,stall@7'")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for fault-victim selection")
+    ap.add_argument("--watchdog-timeout", type=float, default=300.0)
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -135,6 +153,28 @@ def main() -> None:
                                   probe_engine=probe_eng)
         engine.init(mesh)
         logger.info("composed engine:\n%s", engine.describe())
+
+    if args.elastic:
+        if not args.ckpt_dir:
+            ap.error("--elastic needs --ckpt-dir (recovery restores from "
+                     "the atomic checkpoint store)")
+        session = trainer.TrainSession(model, opt, tcfg)
+        fplan = (FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
+                 if args.fault_plan else None)
+        ctl = ElasticController(
+            session, ds, mesh, total_steps=args.steps,
+            ckpt_dir=args.ckpt_dir, engine=engine,
+            ckpt_every=args.ckpt_every, fault_plan=fplan,
+            max_recoveries=args.max_recoveries,
+            watchdog_timeout=args.watchdog_timeout,
+            on_step=lambda s, l: (s % args.log_every == 0
+                                  and logger.info("step %4d  loss %.4f",
+                                                  s, l)))
+        report = ctl.run()
+        logger.info("elastic run done:\n%s", report.describe())
+        if engine is not None:
+            logger.info("engine stats:\n%s", engine.finalize())
+        return
 
     step_fn = trainer.make_train_step(model, opt, tcfg, mesh=mesh,
                                       engine=engine)

@@ -1,7 +1,15 @@
 # substrate first: parallel.sharding imports it through this package, and
 # elastic imports sharding — keep the cycle broken by import order.
 from repro.runtime import substrate
-from repro.runtime.elastic import plan_mesh_shape, remesh
+from repro.runtime.controller import (ControllerReport, DeviceLoss,
+                                      ElasticController, FaultEvent,
+                                      FaultPlan, RecoveryRecord,
+                                      TooManyRecoveries)
+from repro.runtime.elastic import (make_mesh_from_shape, plan_from_mesh,
+                                   plan_mesh_shape, remesh)
 from repro.runtime.watchdog import StepWatchdog
 
-__all__ = ["StepWatchdog", "plan_mesh_shape", "remesh", "substrate"]
+__all__ = ["ControllerReport", "DeviceLoss", "ElasticController",
+           "FaultEvent", "FaultPlan", "RecoveryRecord", "StepWatchdog",
+           "TooManyRecoveries", "make_mesh_from_shape", "plan_from_mesh",
+           "plan_mesh_shape", "remesh", "substrate"]

@@ -1,0 +1,421 @@
+"""Elastic controller: the supervised fail/shrink/grow re-mesh loop.
+
+One entity owns the whole failure lifecycle (the single-entity thesis
+applied to fault tolerance): ``StepWatchdog`` stall/straggler signals and
+injected device-loss events feed a supervisor that
+
+  1. restores the latest atomic checkpoint,
+  2. plans the surviving mesh (``plan_mesh_shape`` -> ``make_mesh``),
+  3. re-meshes optimizer + param state onto it,
+  4. re-inits the engine so the ``Topology.fingerprint()`` invalidation
+     rule rebuilds the ``CommPlan`` (and the re-traced step rebuilds the
+     bucket layout), and
+  5. resumes the step loop at the recorded step.
+
+Determinism contract: the data pipeline is a pure function of step and
+the checkpoint carries the step counter, so the token stream — and with
+it every loss from the restored step onward — is bit-identical to a run
+that started on the surviving mesh from the same checkpoint.
+
+``FaultPlan`` is the deterministic injection harness that makes all of
+this drivable on one host with ``XLA_FLAGS`` fake devices: "at step N
+lose K devices" (victims picked by a seeded RNG), "at step N the lost
+devices come back", "at step N a straggler stalls".  Losses surface as a
+``DeviceLoss`` raised in the step path — the same supervisor ``except``
+arm a real device failure would take.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import random
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime import elastic, substrate
+from repro.runtime.watchdog import StepWatchdog
+
+logger = logging.getLogger("repro.runtime")
+
+LOSE, GAIN, STALL = "lose", "gain", "stall"
+
+
+class DeviceLoss(RuntimeError):
+    """A step failed because devices died; carries the victims' ids."""
+
+    def __init__(self, device_ids: Sequence[int]):
+        super().__init__(f"lost devices {sorted(device_ids)}")
+        self.device_ids = tuple(sorted(device_ids))
+
+
+class TooManyRecoveries(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fault injection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    step: int          # fires just before this step executes
+    kind: str          # "lose" | "gain" | "stall"
+    count: int = 0     # devices lost/regained (stall: unused)
+
+    def __post_init__(self):
+        if self.kind not in (LOSE, GAIN, STALL):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind in (LOSE, GAIN) and self.count < 1:
+            raise ValueError(f"{self.kind} event needs count >= 1")
+
+
+class FaultPlan:
+    """A seeded schedule of injected faults — pure in (events, seed).
+
+    Victim selection is a deterministic function of (seed, step), so two
+    runs with the same plan kill the same devices: the property that lets
+    a test rebuild the survivors' mesh independently.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent] = (), seed: int = 0):
+        self.events = tuple(sorted(events, key=lambda e: e.step))
+        self.seed = seed
+
+    @classmethod
+    def parse(cls, spec: str, seed: int = 0) -> "FaultPlan":
+        """``"lose@5:2,gain@9:2,stall@7"`` -> FaultPlan (CLI surface)."""
+        events = []
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            kind, _, rest = part.partition("@")
+            at, _, count = rest.partition(":")
+            events.append(FaultEvent(step=int(at), kind=kind,
+                                     count=int(count) if count else
+                                     (0 if kind == STALL else 1)))
+        return cls(events, seed=seed)
+
+    def at(self, step: int) -> Tuple[FaultEvent, ...]:
+        return tuple(e for e in self.events if e.step == step)
+
+    def pick_victims(self, healthy_ids: Sequence[int], count: int,
+                     step: int) -> Tuple[int, ...]:
+        rnd = random.Random((self.seed << 24) ^ (step + 1))
+        return tuple(sorted(rnd.sample(list(healthy_ids), count)))
+
+
+# ---------------------------------------------------------------------------
+# Run report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecoveryRecord:
+    step: int                       # step at which the fault surfaced
+    kind: str                       # "lose" | "grow"
+    before_shape: Tuple[int, ...]
+    after_shape: Tuple[int, ...]
+    healthy_after: Tuple[int, ...]  # surviving device ids, sorted
+    restored_step: Optional[int]    # None: live re-mesh (grow path)
+    plan_rebuilt: bool
+    restore_s: float = 0.0
+    remesh_s: float = 0.0
+    replan_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.restore_s + self.remesh_s + self.replan_s
+
+
+@dataclasses.dataclass
+class ControllerReport:
+    losses: Dict[int, float] = dataclasses.field(default_factory=dict)
+    recoveries: List[RecoveryRecord] = dataclasses.field(default_factory=list)
+    stalls: List[int] = dataclasses.field(default_factory=list)
+    stragglers: List[int] = dataclasses.field(default_factory=list)
+    mesh_history: List[Tuple[int, ...]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def plan_rebuilds(self) -> int:
+        return sum(1 for r in self.recoveries if r.plan_rebuilt)
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[max(self.losses)]
+
+    def describe(self) -> str:
+        rows = [f"ControllerReport(steps={len(self.losses)}, "
+                f"recoveries={len(self.recoveries)}, "
+                f"stalls={len(self.stalls)}, "
+                f"meshes={self.mesh_history})"]
+        for r in self.recoveries:
+            rows.append(
+                f"  step {r.step}: {r.kind} {r.before_shape}->"
+                f"{r.after_shape} restored={r.restored_step} "
+                f"rebuilt={r.plan_rebuilt} "
+                f"({r.restore_s * 1e3:.0f}+{r.remesh_s * 1e3:.0f}"
+                f"+{r.replan_s * 1e3:.0f} ms)")
+        return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# The controller
+# ---------------------------------------------------------------------------
+
+class ElasticController:
+    """Supervised elastic training loop over a ``TrainSession``.
+
+    ``mesh`` is the initial topology; its device list is the pool faults
+    draw from.  ``engine`` (composed/compressed sync) is re-``init``-ed on
+    every topology change — the fingerprint rule decides whether the
+    ``CommPlan`` rebuilds.  ``fault_plan`` injects deterministic failures;
+    with none, this is a plain fault-*tolerant* driver (watchdog + atomic
+    checkpoints) that a real device error would steer the same way.
+    """
+
+    def __init__(self, session, dataset, mesh, *,
+                 total_steps: int,
+                 ckpt_dir: str,
+                 engine=None,
+                 ckpt_every: int = 10,
+                 ckpt_keep: int = 3,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_recoveries: int = 8,
+                 watchdog_timeout: float = 300.0,
+                 rng_seed: int = 0,
+                 on_step: Optional[Callable[[int, float], None]] = None):
+        self.session = session
+        self.dataset = dataset
+        self.engine = engine
+        self.total_steps = total_steps
+        self.fault_plan = fault_plan or FaultPlan()
+        self.max_recoveries = max_recoveries
+        self.rng_seed = rng_seed
+        self.on_step = on_step
+        self.ckpt = CheckpointManager(ckpt_dir, every=ckpt_every,
+                                      keep=ckpt_keep)
+        self.watchdog = StepWatchdog(
+            timeout=watchdog_timeout, on_stall=self._on_stall,
+            on_straggler=lambda beat, dt: self.report.stragglers.append(beat))
+        self.report = ControllerReport()
+
+        devs = list(mesh.devices.flatten())
+        self._pool: List[Any] = devs                  # canonical order
+        self._healthy = {d.id for d in devs}
+        self._axis_names = tuple(mesh.axis_names)
+        # The *original* parallelism layout: re-planning always aims back
+        # at it, so a run degraded by deep shrinks (TP halved, pods
+        # collapsed) regains the full layout when devices return.
+        sizes = dict(mesh.shape)
+        self._mp0 = sizes.get("model", 1)
+        self._pods0 = sizes.get("pod", 1)
+        self._ndim = len(sizes)
+        self._stall_pending = False
+        self._fired: set = set()   # events consumed (recovery rewinds steps)
+        self.state = None
+        self.mesh = None
+        self._jstep = None
+        self._bind(mesh)
+
+    # -- topology ---------------------------------------------------------
+
+    def _healthy_devices(self) -> List[Any]:
+        return [d for d in self._pool if d.id in self._healthy]
+
+    def _planned_mesh(self):
+        devs = self._healthy_devices()
+        shape = elastic.plan_mesh_shape(len(devs), self._mp0,
+                                        pods=self._pods0, ndim=self._ndim)
+        n = 1
+        for s in shape:
+            n *= s
+        return elastic.make_mesh_from_shape(shape, self._axis_names,
+                                            devices=devs[:n])
+
+    def _bind(self, mesh) -> None:
+        """Bind every mesh-dependent piece: step fn, engine plan, report."""
+        self.mesh = mesh
+        if self.engine is not None:
+            self.engine.init(mesh)
+        step_fn = self.session.step_fn(mesh=mesh, engine=self.engine)
+        self._jstep = jax.jit(step_fn, donate_argnums=0)
+        shape = tuple(dict(mesh.shape).values())
+        if not self.report.mesh_history \
+                or self.report.mesh_history[-1] != shape:
+            self.report.mesh_history.append(shape)
+
+    # -- fault surfaces ---------------------------------------------------
+
+    def _on_stall(self, silence: float) -> None:
+        # Monitor-thread callback: note it; the step loop (the only place
+        # allowed to touch JAX state) handles it at the next boundary.
+        self._stall_pending = True
+
+    def mark_unhealthy(self, device_ids: Sequence[int]) -> None:
+        """Production surface for real health probes: devices reported
+        dead here are excluded from the next re-mesh; the loop notices at
+        the next stall signal or step failure."""
+        self._healthy -= set(device_ids)
+
+    def _apply_faults(self, step: int) -> None:
+        # keyed by event *index*: value-equal duplicate events are
+        # distinct injections, and recovery re-runs steps but not faults
+        for i, ev in enumerate(self.fault_plan.events):
+            if ev.step != step or i in self._fired:
+                continue
+            self._fired.add(i)
+            if ev.kind == LOSE:
+                victims = self.fault_plan.pick_victims(
+                    sorted(self._healthy), ev.count, step)
+                self._healthy -= set(victims)
+                logger.warning("step %d: injected loss of devices %s",
+                               step, victims)
+                raise DeviceLoss(victims)
+            if ev.kind == GAIN:
+                lost = [d.id for d in self._pool
+                        if d.id not in self._healthy]
+                back = lost[:ev.count]
+                if not back:       # nothing was lost: no re-mesh to do
+                    logger.warning("step %d: gain event with no lost "
+                                   "devices — ignored", step)
+                    continue
+                self._healthy |= set(back)
+                logger.warning("step %d: devices %s returned", step, back)
+                self._grow(step)
+            elif ev.kind == STALL:
+                self._stall_pending = True
+
+    def _check_stall(self, step: int) -> None:
+        if not self._stall_pending:
+            return
+        self._stall_pending = False
+        self.report.stalls.append(step)
+        # Straggler/stall with every device still healthy: the planned
+        # shape is unchanged, so recovery is a no-op — keep stepping.
+        if len(self._healthy_devices()) >= self.mesh.devices.size:
+            logger.warning("step %d: stall signal, all devices healthy "
+                           "— no re-mesh", step)
+            return
+        # Stalled AND a health probe flagged devices (mark_unhealthy):
+        # the stall is attributed to them — full recovery off this mesh.
+        raise DeviceLoss(())
+
+    # -- recovery paths ---------------------------------------------------
+
+    def _engine_reinit(self, mesh) -> Tuple[bool, float]:
+        """Steps 4+5 of the contract: rebind everything mesh-shaped.
+        Returns (plan_rebuilt, seconds)."""
+        t0 = time.perf_counter()
+        before = (self.engine.plan.stats.rebuilds
+                  if self.engine is not None else 0)
+        self._bind(mesh)
+        rebuilt = (self.engine is not None
+                   and self.engine.plan.stats.rebuilds > before)
+        return rebuilt, time.perf_counter() - t0
+
+    def _grow(self, step: int) -> None:
+        """Devices came back: live re-mesh — nothing was lost, so the
+        current state moves to the bigger mesh without a restore."""
+        before_shape = tuple(dict(self.mesh.shape).values())
+        self.ckpt.wait()
+        new_mesh = self._planned_mesh()
+        t0 = time.perf_counter()
+        self.state = elastic.remesh(self.state, self.session.state_specs(),
+                                    new_mesh)
+        remesh_s = time.perf_counter() - t0
+        rebuilt, replan_s = self._engine_reinit(new_mesh)
+        self.report.recoveries.append(RecoveryRecord(
+            step=step, kind="grow", before_shape=before_shape,
+            after_shape=tuple(dict(new_mesh.shape).values()),
+            healthy_after=tuple(sorted(self._healthy)),
+            restored_step=None, plan_rebuilt=rebuilt,
+            remesh_s=remesh_s, replan_s=replan_s))
+
+    def _recover(self, step: int, exc: DeviceLoss) -> int:
+        """The full crash-recovery path; returns the step to resume at."""
+        if len(self.report.recoveries) >= self.max_recoveries:
+            raise TooManyRecoveries(
+                f"{len(self.report.recoveries)} recoveries reached the "
+                f"--max-recoveries cap") from exc
+        before_shape = tuple(dict(self.mesh.shape).values())
+        self.ckpt.wait()                       # drain any in-flight save
+
+        # (1) restore the latest atomic checkpoint (host-side arrays).
+        t0 = time.perf_counter()
+        restored, rstep = self.ckpt.restore_latest(
+            self.session.abstract_state())
+        restore_s = time.perf_counter() - t0
+        if restored is None:                   # failed before any save
+            restored, rstep = self.session.init_state(
+                jax.random.PRNGKey(self.rng_seed)), 0
+
+        # (2) plan + build the survivors' mesh.
+        new_mesh = self._planned_mesh()
+
+        # (3) re-mesh the state onto it.
+        t0 = time.perf_counter()
+        self.state = elastic.remesh(restored, self.session.state_specs(),
+                                    new_mesh)
+        remesh_s = time.perf_counter() - t0
+
+        # (4)+(5) engine re-init (fingerprint change => CommPlan rebuild)
+        # and step-fn rebind; the re-trace rebuilds the bucket layout.
+        rebuilt, replan_s = self._engine_reinit(new_mesh)
+
+        self.report.recoveries.append(RecoveryRecord(
+            step=step, kind="lose", before_shape=before_shape,
+            after_shape=tuple(dict(new_mesh.shape).values()),
+            healthy_after=tuple(sorted(self._healthy)),
+            restored_step=rstep, plan_rebuilt=rebuilt,
+            restore_s=restore_s, remesh_s=remesh_s, replan_s=replan_s))
+        logger.warning("recovered: %s", self.report.recoveries[-1])
+        return rstep
+
+    # -- the loop ---------------------------------------------------------
+
+    def run(self) -> ControllerReport:
+        with substrate.set_mesh(self.mesh):
+            if self.state is None:
+                restored, rstep = self.ckpt.restore_latest(
+                    self.session.abstract_state())
+                if restored is not None:
+                    self.state = elastic.remesh(
+                        restored, self.session.state_specs(), self.mesh)
+                    step = rstep
+                else:
+                    self.state = elastic.remesh(
+                        self.session.init_state(
+                            jax.random.PRNGKey(self.rng_seed)),
+                        self.session.state_specs(), self.mesh)
+                    step = 0
+                    self.ckpt.maybe_save(0, self.state, force=True)
+            else:
+                step = 0
+
+        self.watchdog.start()
+        try:
+            while step < self.total_steps:
+                try:
+                    self._apply_faults(step)
+                    with substrate.set_mesh(self.mesh):
+                        batch = self.dataset.sharded_batch(
+                            step, self.mesh,
+                            batch_axes=self.session.batch_axes())
+                        self.state, metrics = self._jstep(self.state, batch)
+                        loss = float(metrics["loss"])
+                    self.watchdog.beat()
+                    self.report.losses[step] = loss
+                    if self.on_step is not None:
+                        self.on_step(step, loss)
+                    step += 1
+                    self.ckpt.maybe_save(step, self.state)
+                    self._check_stall(step - 1)
+                except DeviceLoss as e:
+                    step = self._recover(step, e)
+            self.ckpt.maybe_save(self.total_steps, self.state, force=True)
+            self.ckpt.wait()
+        finally:
+            self.watchdog.stop()
+        return self.report

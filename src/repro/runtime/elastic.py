@@ -10,6 +10,9 @@ checkpoint store this is the crash-recovery path:
     devices die -> restore latest checkpoint -> plan_mesh_shape ->
     remesh(state) -> continue at the recorded step (data pipeline is a
     pure function of step, so the token stream is unchanged).
+
+``repro.runtime.controller.ElasticController`` drives this loop end to
+end (watchdog + checkpoint + re-mesh + plan invalidation as one entity).
 """
 
 from __future__ import annotations
@@ -22,16 +25,25 @@ from repro.runtime import substrate
 
 
 def plan_mesh_shape(n_devices: int, model_parallel: int,
-                    pods: int = 1) -> Tuple[int, ...]:
+                    pods: int = 1, *,
+                    ndim: Optional[int] = None) -> Tuple[int, ...]:
     """Largest (pod, data, model) grid with <= n_devices devices.
 
     Keeps ``model_parallel`` fixed (changing it would re-layout params);
     drops to fewer pods before shrinking data parallelism within a pod.
     Falls back to shrinking model parallelism only when a single
     model-parallel group no longer fits.
+
+    ``ndim`` normalizes the rank of the result: callers holding a 3-axis
+    ``(pod, data, model)`` mesh pass ``ndim=3`` and always get a 3-tuple
+    back (a leading pod=1 where only one pod remains) so mesh axis names
+    stay stable across recoveries.  Without it the rank follows ``pods``
+    (2-tuple for single-pod planning) — the historical behaviour.
     """
     if n_devices < 1:
         raise ValueError("no healthy devices")
+    if ndim not in (None, 2, 3):
+        raise ValueError(f"ndim must be 2 or 3, got {ndim!r}")
     mp = model_parallel
     while mp > 1 and n_devices < mp:
         mp //= 2                         # degraded: shrink TP as last resort
@@ -44,17 +56,38 @@ def plan_mesh_shape(n_devices: int, model_parallel: int,
             used = p * data * mp
             if best is None or used > best[0]:
                 best = (used, plan)
-    if best is None:
-        return (1, mp)
-    return best[1]
+    shape = ((1, mp) if pods == 1 else (1, 1, mp)) if best is None \
+        else best[1]
+    if ndim == 3 and len(shape) == 2:
+        shape = (1,) + shape
+    elif ndim == 2 and len(shape) == 3:
+        if shape[0] != 1:
+            raise ValueError(
+                f"cannot normalize {shape} to 2 axes: pod axis is "
+                f"{shape[0]} > 1")
+        shape = shape[1:]
+    return shape
+
+
+def plan_from_mesh(mesh, n_devices: int) -> Tuple[int, ...]:
+    """``plan_mesh_shape`` for the survivors of an existing mesh: model
+    parallelism, pod budget, and rank are read off the mesh, so the
+    planned shape always matches its axis names."""
+    sizes = dict(mesh.shape)
+    return plan_mesh_shape(n_devices, sizes.get("model", 1),
+                           pods=sizes.get("pod", 1), ndim=len(sizes))
 
 
 def make_mesh_from_shape(shape: Sequence[int],
-                         axis_names: Optional[Sequence[str]] = None):
+                         axis_names: Optional[Sequence[str]] = None,
+                         devices: Optional[Sequence[Any]] = None):
+    """Concrete mesh for a planned shape.  ``devices`` restricts the mesh
+    to an explicit (healthy) subset — the elastic shrink path."""
     if axis_names is None:
         axis_names = (("pod", "data", "model") if len(shape) == 3
                       else ("data", "model"))
-    return substrate.make_mesh(tuple(shape), tuple(axis_names))
+    return substrate.make_mesh(tuple(shape), tuple(axis_names),
+                               devices=devices)
 
 
 def remesh(state: Any, spec_tree: Any, new_mesh) -> Any:

@@ -21,10 +21,12 @@ logger = logging.getLogger("repro.runtime")
 
 class StepWatchdog:
     def __init__(self, timeout: float, on_stall: Optional[Callable] = None,
-                 straggler_factor: float = 3.0):
+                 straggler_factor: float = 3.0,
+                 on_straggler: Optional[Callable] = None):
         self.timeout = timeout
         self.straggler_factor = straggler_factor
         self.on_stall = on_stall or self._default_stall
+        self.on_straggler = on_straggler
         self.step_times: List[float] = []
         self.stalls: List[float] = []
         self.stragglers: List[int] = []
@@ -65,6 +67,8 @@ class StepWatchdog:
                 self.stragglers.append(self._beats)
                 logger.warning("straggler step %d: %.2fs vs median %.2fs",
                                self._beats, dt, median)
+                if self.on_straggler is not None:
+                    self.on_straggler(self._beats, dt)
         self._beats += 1
         self._last = now
 

@@ -135,22 +135,32 @@ class BatchScheduler:
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
-            if slot is not None or not self.queue:
+            if slot is not None:
                 continue
-            req = self.queue.popleft()
-            # Single-slot prefill: run the prompt through a batch-1 cache,
-            # then splice the slot's cache rows into the live batch cache.
-            c1 = self.model.init_caches(1, self.cfg.max_len,
-                                        dtype=self.cfg.cache_dtype)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, c1 = self.model.prefill(self.params, {"tokens": prompt},
-                                            c1)
-            self.caches = splice_cache(self.caches, c1, i,
-                                       self.model.cache_specs())
-            tok = int(jnp.argmax(logits[0]))
-            req.generated.append(tok)
-            self._next_tok = self._next_tok.at[i].set(tok)
-            self.slots[i] = req
+            while self.queue:
+                req = self.queue.popleft()
+                # Single-slot prefill: run the prompt through a batch-1
+                # cache, then splice the slot's cache rows into the live
+                # batch cache.
+                c1 = self.model.init_caches(1, self.cfg.max_len,
+                                            dtype=self.cfg.cache_dtype)
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, c1 = self.model.prefill(self.params,
+                                                {"tokens": prompt}, c1)
+                tok = int(jnp.argmax(logits[0]))
+                req.generated.append(tok)
+                if req.done or (self.cfg.eos_id >= 0
+                                and tok == self.cfg.eos_id):
+                    # Finished at prefill (max_new=1 or eos): never takes
+                    # the slot (and never pays the cache splice) — try
+                    # the next queued request for it.
+                    self.completed.append(req)
+                    continue
+                self.caches = splice_cache(self.caches, c1, i,
+                                           self.model.cache_specs())
+                self._next_tok = self._next_tok.at[i].set(tok)
+                self.slots[i] = req
+                break
 
     def step(self) -> int:
         """Admit + one decode step for all active slots.  Returns number of

@@ -1,3 +1,4 @@
-from repro.train.trainer import TrainCfg, make_train_state, make_train_step
+from repro.train.trainer import (TrainCfg, TrainSession, make_train_state,
+                                 make_train_step)
 
-__all__ = ["TrainCfg", "make_train_state", "make_train_step"]
+__all__ = ["TrainCfg", "TrainSession", "make_train_state", "make_train_step"]

@@ -254,3 +254,47 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
         return inner(state, batch)
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# TrainSession: one (model, optimizer, cfg) bundle, many meshes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainSession:
+    """Everything about a training run that survives a re-mesh.
+
+    The elastic controller rebuilds the mesh-bound pieces (step function,
+    shardings, engine plan) after every topology change; the pieces that
+    must NOT change across a recovery — model, optimizer, TrainCfg, and
+    through them the state structure and bucket layout — live here so the
+    launch driver and the controller construct them exactly once and the
+    same way.
+    """
+
+    model: Any
+    optimizer: Any
+    cfg: TrainCfg = TrainCfg()
+
+    def state_specs(self) -> Dict[str, Any]:
+        return state_specs(self.model, self.optimizer, self.cfg)
+
+    def abstract_state(self):
+        return make_train_state(self.model, self.optimizer, abstract=True,
+                                cfg=self.cfg)
+
+    def init_state(self, rng=None):
+        return make_train_state(self.model, self.optimizer, rng,
+                                cfg=self.cfg)
+
+    def step_fn(self, mesh=None, engine: Optional[CollectiveEngine] = None
+                ) -> Callable:
+        """Build the (mesh, engine)-bound train step for the current
+        topology; called again after every re-mesh."""
+        return make_train_step(self.model, self.optimizer, self.cfg,
+                               mesh=mesh, engine=engine)
+
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Axes the data pipeline shards batches over (filtered to the
+        mesh's axes by the pipeline/spec machinery downstream)."""
+        return tuple(self.cfg.data_axes)

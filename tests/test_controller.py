@@ -1,0 +1,227 @@
+"""End-to-end elastic controller scenarios (8 fake host devices in
+subprocesses): fail -> restore -> re-mesh -> re-plan -> resume.
+
+The acceptance contract: a seeded fault injection (lose 2 of 8 devices at
+step 5) recovers automatically, and every loss from the restored step on
+is bit-identical to a run trained on the 6 surviving devices from the
+same checkpoint — the data pipeline is a pure function of step, so the
+token stream is unchanged across a recovery.  The CommPlan must be
+rebuilt exactly once per topology change (the fingerprint rule)."""
+
+from conftest import run_subprocess_script
+
+
+def test_shrink_recovery_bit_identical_and_replans_once():
+    run_subprocess_script("""
+import tempfile
+import jax
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, TrainSession
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        registry, topology_from_mesh)
+from repro.checkpoint.manager import restore_checkpoint
+from repro.data import SyntheticLMDataset
+from repro.runtime import ElasticController, FaultEvent, FaultPlan, substrate
+from repro.runtime.elastic import make_mesh_from_shape, remesh
+
+tmp = tempfile.mkdtemp()
+cfg = get_config("granite-34b", reduced=True)
+tcfg = TrainCfg(sync_mode="composed", data_axes=("data",))
+session = TrainSession(build_model(cfg), make_optimizer("adamw", lr=1e-3),
+                       tcfg)
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=12)
+mesh0 = substrate.make_mesh((4, 2), ("data", "model"))
+engine = CollectiveEngine(topology_from_mesh(mesh0),
+                          library=compose_library(registry.ALL_FUNCTIONS),
+                          config=EngineConfig(mode="composed"))
+ctl = ElasticController(
+    session, ds, mesh0, total_steps=8, ckpt_dir=tmp, engine=engine,
+    ckpt_every=2, ckpt_keep=0,
+    fault_plan=FaultPlan([FaultEvent(5, "lose", 2)], seed=1),
+    watchdog_timeout=600.0)
+report = ctl.run()
+
+assert len(report.recoveries) == 1, report.describe()
+rec = report.recoveries[0]
+assert rec.step == 5 and rec.kind == "lose"
+assert rec.before_shape == (4, 2) and rec.after_shape == (3, 2)
+assert rec.restored_step == 4, rec
+assert len(rec.healthy_after) == 6
+assert rec.total_s > 0.0
+# invalidation rule: exactly one CommPlan rebuild for one topology change
+assert rec.plan_rebuilt and engine.plan.stats.rebuilds == 1
+assert report.plan_rebuilds == 1
+assert report.mesh_history == [(4, 2), (3, 2)], report.mesh_history
+assert sorted(report.losses) == list(range(8))
+
+# Baseline: train on the 6 survivors from the restored checkpoint.
+surv = [d for d in jax.devices() if d.id in rec.healthy_after]
+mesh6 = make_mesh_from_shape((3, 2), devices=surv)
+eng6 = CollectiveEngine(topology_from_mesh(mesh6),
+                        library=compose_library(registry.ALL_FUNCTIONS),
+                        config=EngineConfig(mode="composed"))
+state = restore_checkpoint(tmp, session.abstract_state(), step=4)
+state = remesh(state, session.state_specs(), mesh6)
+losses = {}
+with substrate.set_mesh(mesh6):
+    jstep = jax.jit(session.step_fn(mesh=mesh6, engine=eng6),
+                    donate_argnums=0)
+    for s in range(4, 8):
+        batch = ds.sharded_batch(s, mesh6, batch_axes=("data",))
+        state, metrics = jstep(state, batch)
+        losses[s] = float(metrics["loss"])
+for s in range(4, 8):
+    assert losses[s] == report.losses[s], (s, losses[s], report.losses[s])
+print("OK bit-identical after recovery", report.losses)
+""", timeout=600)
+
+
+def test_shrink_shrink_grow_and_straggler_noop():
+    run_subprocess_script("""
+import tempfile
+import jax
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, TrainSession
+from repro.data import SyntheticLMDataset
+from repro.runtime import (ElasticController, FaultEvent, FaultPlan,
+                           TooManyRecoveries, substrate)
+
+cfg = get_config("granite-34b", reduced=True)
+tcfg = TrainCfg(sync_mode="auto")
+session = TrainSession(build_model(cfg), make_optimizer("adamw", lr=1e-3),
+                       tcfg)
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=12)
+mesh0 = substrate.make_mesh((4, 2), ("data", "model"))
+ctl = ElasticController(
+    session, ds, mesh0, total_steps=9, ckpt_dir=tempfile.mkdtemp(),
+    ckpt_every=1, ckpt_keep=0,
+    fault_plan=FaultPlan([FaultEvent(2, "lose", 2),
+                          FaultEvent(4, "lose", 2),
+                          FaultEvent(6, "gain", 4),
+                          FaultEvent(7, "stall")], seed=2),
+    watchdog_timeout=600.0)
+report = ctl.run()
+
+# shrink 8->6->4, grow back to 8; straggler signal is a no-op
+assert report.mesh_history == [(4, 2), (3, 2), (2, 2), (4, 2)], \
+    report.mesh_history
+kinds = [r.kind for r in report.recoveries]
+assert kinds == ["lose", "lose", "grow"], kinds
+assert report.recoveries[0].restored_step == 2
+assert report.recoveries[1].restored_step == 4
+assert report.recoveries[2].restored_step is None     # live re-mesh
+assert report.stalls == [7], report.stalls
+assert sorted(report.losses) == list(range(9))
+# after growing back, the full pool is in use again
+assert len(report.recoveries[2].healthy_after) == 8
+
+# max-recoveries cap aborts instead of flapping forever
+ctl2 = ElasticController(
+    session, ds, mesh0, total_steps=3, ckpt_dir=tempfile.mkdtemp(),
+    ckpt_every=1, fault_plan=FaultPlan([FaultEvent(1, "lose", 2)]),
+    max_recoveries=0, watchdog_timeout=600.0)
+try:
+    ctl2.run()
+    raise SystemExit("expected TooManyRecoveries")
+except TooManyRecoveries:
+    pass
+print("OK elastic scenario", report.mesh_history)
+""", timeout=600)
+
+
+def test_duplicate_lose_events_and_degraded_stall():
+    run_subprocess_script("""
+import tempfile
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, TrainSession
+from repro.data import SyntheticLMDataset
+from repro.runtime import (ElasticController, FaultEvent, FaultPlan,
+                           substrate)
+
+cfg = get_config("granite-34b", reduced=True)
+session = TrainSession(build_model(cfg), make_optimizer("adamw", lr=1e-3),
+                       TrainCfg(sync_mode="auto"))
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=12)
+
+# value-equal duplicate events are distinct injections: both must fire
+# even though the first one's recovery rewinds the step counter past them
+ctl = ElasticController(
+    session, ds, substrate.make_mesh((4, 2), ("data", "model")),
+    total_steps=4, ckpt_dir=tempfile.mkdtemp(), ckpt_every=1,
+    fault_plan=FaultPlan([FaultEvent(1, "lose", 1),
+                          FaultEvent(1, "lose", 1),
+                          FaultEvent(3, "gain", 9)], seed=4),
+    watchdog_timeout=600.0)
+report = ctl.run()
+assert [r.kind for r in report.recoveries] == ["lose", "lose", "grow"], \
+    report.describe()
+assert [len(r.healthy_after) for r in report.recoveries] == [7, 6, 8]
+# 7 healthy and 6 healthy both plan (3, 2); the grow restores (4, 2)
+assert report.mesh_history == [(4, 2), (3, 2), (4, 2)], report.mesh_history
+assert sorted(report.losses) == list(range(4))
+
+# a gain with nothing lost is ignored (no spurious re-mesh/recovery)
+ctl2 = ElasticController(
+    session, ds, substrate.make_mesh((4, 2), ("data", "model")),
+    total_steps=2, ckpt_dir=tempfile.mkdtemp(), ckpt_every=1,
+    fault_plan=FaultPlan([FaultEvent(1, "gain", 2)]),
+    watchdog_timeout=600.0)
+assert not ctl2.run().recoveries
+
+# stall + a health probe having flagged a device => full recovery
+ctl3 = ElasticController(
+    session, ds, substrate.make_mesh((4, 2), ("data", "model")),
+    total_steps=4, ckpt_dir=tempfile.mkdtemp(), ckpt_every=1,
+    fault_plan=FaultPlan([FaultEvent(2, "stall")]),
+    watchdog_timeout=600.0)
+ctl3.mark_unhealthy([7])
+report3 = ctl3.run()
+assert report3.stalls == [2]
+assert [r.kind for r in report3.recoveries] == ["lose"]
+assert report3.recoveries[0].after_shape == (3, 2)
+assert len(report3.recoveries[0].healthy_after) == 7
+assert sorted(report3.losses) == list(range(4))
+print("OK duplicate/degraded-stall scenarios", report.mesh_history)
+""", timeout=600)
+
+
+def test_straggler_only_run_matches_uninterrupted():
+    run_subprocess_script("""
+import tempfile
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, TrainSession
+from repro.data import SyntheticLMDataset
+from repro.runtime import (ElasticController, FaultEvent, FaultPlan,
+                           substrate)
+
+cfg = get_config("granite-34b", reduced=True)
+session = TrainSession(build_model(cfg), make_optimizer("adamw", lr=1e-3),
+                       TrainCfg(sync_mode="auto"))
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=8)
+
+def run(faults):
+    mesh = substrate.make_mesh((4, 2), ("data", "model"))
+    ctl = ElasticController(
+        session, ds, mesh, total_steps=6, ckpt_dir=tempfile.mkdtemp(),
+        ckpt_every=2, fault_plan=faults, watchdog_timeout=600.0)
+    return ctl.run()
+
+plain = run(None)
+stalled = run(FaultPlan([FaultEvent(3, "stall")]))
+assert stalled.stalls == [3] and not stalled.recoveries
+assert plain.losses == stalled.losses, (plain.losses, stalled.losses)
+assert stalled.mesh_history == [(4, 2)]
+print("OK straggler no-op bit-identical", plain.losses)
+""", timeout=600)

@@ -1,0 +1,130 @@
+"""Serve-layer slot scheduler coverage: admission into finished slots,
+eos handling (including eos/max_new hit at prefill), and decode shape
+stability (no recompilation across admissions)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.serve.engine import BatchScheduler, Request, ServeCfg, splice_cache
+
+VOCAB = 32
+
+
+class FakeLM:
+    """Deterministic LM: next token = (last token + 1) % VOCAB.
+
+    Matches the model surface BatchScheduler needs (init_caches / prefill /
+    decode_step / cache_specs); ``decode_traces`` counts jit retraces —
+    the body only runs while tracing under the scheduler's jit."""
+
+    def __init__(self):
+        self.decode_traces = 0
+
+    def init_caches(self, b, max_len, dtype=jnp.float32):
+        return {"pos": jnp.zeros((b, 1), jnp.int32),
+                "kv": jnp.zeros((b, max_len, 2), dtype)}
+
+    def cache_specs(self):
+        return {"pos": P("data", None), "kv": P("data", None, None)}
+
+    def prefill(self, params, batch, caches):
+        toks = batch["tokens"]
+        nxt = (toks[:, -1] + 1) % VOCAB
+        return (jax.nn.one_hot(nxt, VOCAB),
+                {"pos": caches["pos"] + toks.shape[1], "kv": caches["kv"]})
+
+    def decode_step(self, params, batch, caches):
+        self.decode_traces += 1
+        tok = batch["tokens"][:, 0]
+        nxt = (tok + 1) % VOCAB
+        return (jax.nn.one_hot(nxt, VOCAB),
+                {"pos": caches["pos"] + 1, "kv": caches["kv"]})
+
+
+def make_sched(batch=2, eos_id=-1, max_len=64):
+    model = FakeLM()
+    cfg = ServeCfg(max_len=max_len, batch=batch, eos_id=eos_id)
+    return model, BatchScheduler(model, {"w": jnp.zeros(())}, cfg)
+
+
+def test_admission_into_finished_slots():
+    _, sched = make_sched(batch=2)
+    sched.submit(Request(rid=0, prompt=[1], max_new=2))
+    sched.submit(Request(rid=1, prompt=[5], max_new=6))
+    sched.submit(Request(rid=2, prompt=[9], max_new=2))
+
+    sched.step()
+    # r0 finished in the first decode step; its slot must be free
+    assert sched.slots[0] is None and sched.slots[1].rid == 1
+    assert [r.rid for r in sched.completed] == [0]
+
+    sched.step()
+    # r2 was admitted into the freed slot 0 (not a new slot)
+    assert [r.rid for r in sched.completed] == [0, 2]
+    assert sched.slots[0] is None and sched.slots[1].rid == 1
+
+    done = sched.run()
+    assert [r.rid for r in done] == [0, 2, 1]
+    by_rid = {r.rid: r.generated for r in done}
+    assert by_rid[0] == [2, 3]
+    assert by_rid[1] == [6, 7, 8, 9, 10, 11]
+    assert by_rid[2] == [10, 11]
+
+
+def test_eos_stops_early_and_frees_slot():
+    _, sched = make_sched(batch=1, eos_id=7)
+    sched.submit(Request(rid=0, prompt=[5], max_new=10))
+    sched.submit(Request(rid=1, prompt=[20], max_new=2))
+    done = sched.run()
+    by_rid = {r.rid: r.generated for r in done}
+    # r0: prefill 6, decode 7 == eos -> stops at 2 tokens, slot freed for r1
+    assert by_rid[0] == [6, 7]
+    assert by_rid[1] == [21, 22]
+
+
+def test_eos_at_prefill_never_occupies_slot():
+    _, sched = make_sched(batch=1, eos_id=7)
+    sched.submit(Request(rid=0, prompt=[6], max_new=5))   # prefill -> eos
+    sched.submit(Request(rid=1, prompt=[10], max_new=2))
+    sched._admit()
+    # r0 completed straight from prefill; the slot went to r1
+    assert [r.rid for r in sched.completed] == [0]
+    assert sched.completed[0].generated == [7]
+    assert sched.slots[0].rid == 1
+    done = sched.run()
+    assert {r.rid: r.generated for r in done}[1] == [11, 12]
+
+
+def test_max_new_one_gets_exactly_one_token():
+    # Regression: a max_new=1 request used to occupy a slot and receive a
+    # second (spurious) decode token.
+    _, sched = make_sched(batch=2)
+    sched.submit(Request(rid=0, prompt=[3], max_new=1))
+    sched.submit(Request(rid=1, prompt=[8], max_new=3))
+    done = sched.run()
+    by_rid = {r.rid: r.generated for r in done}
+    assert by_rid[0] == [4], by_rid
+    assert by_rid[1] == [9, 10, 11]
+
+
+def test_no_recompilation_across_admissions():
+    model, sched = make_sched(batch=2)
+    for rid in range(6):
+        sched.submit(Request(rid=rid, prompt=[rid], max_new=1 + rid % 3))
+    done = sched.run()
+    assert len(done) == 6
+    # continuous batching at fixed shapes: decode traced exactly once
+    assert model.decode_traces == 1, model.decode_traces
+    for r in done:
+        want = [(r.prompt[-1] + 1 + i) % VOCAB for i in range(r.max_new)]
+        assert r.generated == want, (r.rid, r.generated, want)
+
+
+def test_splice_cache_replaces_one_batch_row():
+    full = {"kv": jnp.zeros((4, 8), jnp.float32)}
+    one = {"kv": jnp.ones((1, 8), jnp.float32)}
+    out = splice_cache(full, one, 2, {"kv": P("data", None)})
+    np.testing.assert_array_equal(np.asarray(out["kv"][2]), np.ones(8))
+    assert float(jnp.abs(out["kv"]).sum()) == 8.0
