@@ -57,7 +57,8 @@ def run() -> Table:
     # (b) dispatch depth: python-side µs per engine call during tracing —
     # 100 calls per trace so the per-call wrapper stack dominates the
     # fixed eval_shape overhead.
-    mono = CollectiveEngine.monolithic(topo)
+    from repro import comm as comm_mod
+    mono = comm_mod.Session(topology=topo, mode="monolithic").engine
 
     def trace_call(engine):
         def body(b):

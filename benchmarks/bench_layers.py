@@ -17,19 +17,30 @@ import numpy as np
 
 from benchmarks.common import Table, hlo_op_counts, time_python
 from repro.core import (CollectiveEngine, EngineConfig, compose_library,
-                        layers, registry, scan_step, topology_from_mesh_shape)
+                        costmodel, layers, registry, scan_step,
+                        topology_from_mesh_shape)
 
 
 def dispatch_overhead(repeat: int = 300) -> dict:
-    """Per-call trace-time dispatch cost (protocol selection + tier-wrapper
-    binding): the plan-once engine vs the per-call baseline
-    (``EngineConfig(plan=False)`` — the seed's behaviour).  Returns a
-    machine-readable payload for BENCH_plan.json."""
+    """Per-call trace-time dispatch cost, three rungs down the ladder:
+
+      per-call baseline  — cost-model sort + wrapper binding every call
+                           (``EngineConfig(plan=False)``, seed behaviour);
+      planned (PR 2)     — CommPlan dict lookup + pre-bound wrapper;
+      persistent (PR 4)  — ``comm.persistent`` handle: protocol + tier +
+                           scale resolved at bind time, a call is one
+                           revocation check.
+
+    Returns a machine-readable payload for BENCH_plan.json."""
+    from repro import comm as comm_mod
     topo = topology_from_mesh_shape(("data",), (16,))
     lib = compose_library(registry.ALL_FUNCTIONS)
     planned = CollectiveEngine(topo, library=lib, config=EngineConfig())
     baseline = CollectiveEngine(topo, library=lib,
                                 config=EngineConfig(plan=False))
+    sess = comm_mod.Session(topology=topo, library=lib)
+    handle = sess.split("data").persistent(
+        "all_reduce", (1 << 18,), jnp.float32)   # 1 MiB f32
     nb = 1 << 20
 
     def dispatch(eng):
@@ -38,12 +49,37 @@ def dispatch_overhead(repeat: int = 300) -> dict:
 
     us_base = time_python(lambda: dispatch(baseline), repeat=repeat)
     us_plan = time_python(lambda: dispatch(planned), repeat=repeat)
+    us_handle = time_python(handle.dispatch, repeat=repeat)
     return {
         "per_call_us": us_base,
         "planned_us": us_plan,
+        "persistent_us": us_handle,
         "speedup": us_base / us_plan if us_plan else float("inf"),
+        "persistent_speedup_vs_planned":
+            us_plan / us_handle if us_handle else float("inf"),
         "plan_entries": planned.plan.table_size,
         "plan_computes": planned.plan.stats.total_computes,
+    }
+
+
+def layer_numbers() -> dict:
+    """Frequency-weighted average layer number (paper §3) for the three
+    stacks: conventional monolithic, frequency-tiered composed, and
+    composed with persistent handles bound for every planned collective
+    (handles resolve the whole stack at bind time => L0)."""
+    from repro import comm as comm_mod
+    topo = topology_from_mesh_shape(("data",), (16,))
+    lib = compose_library(registry.ALL_FUNCTIONS)
+    mono = comm_mod.Session(topology=topo, mode="monolithic")
+    sess = comm_mod.Session(topology=topo, library=lib)
+    dcomm = sess.split("data")
+    handles = [dcomm.persistent(fn, (1 << 18,), jnp.float32)
+               for fn in costmodel.protocol_functions()]
+    return {
+        "monolithic": mono.average_layer_number(),
+        "composed": sess.average_layer_number(include_handles=False),
+        "composed_with_persistent_handles": sess.average_layer_number(),
+        "persistent_handles_bound": len(handles),
     }
 
 
@@ -92,7 +128,8 @@ def run() -> list:
     eng = CollectiveEngine(topo, library=compose_library(
         registry.ALL_FUNCTIONS), frequencies=freqs or None,
         config=EngineConfig())
-    mono = CollectiveEngine.monolithic(topo)
+    from repro import comm as comm_mod
+    mono = comm_mod.Session(topology=topo, mode="monolithic").engine
     t.add("conventional (Fig 1-A)", f"{mono.average_layer_number():.3f}",
           f"L{mono.tier('all_reduce')}", f"L{mono.tier('init')}")
     t.add("frequency-tiered (Fig 1-B)", f"{eng.average_layer_number():.3f}",
@@ -120,7 +157,8 @@ def run() -> list:
         tb.add(layers.TIER_NAMES[tier], f"{us:.0f}", extra)
     tables.append(tb)
 
-    # (d) plan-once dispatch vs per-call selection (this PR's tentpole)
+    # (d) dispatch ladder: per-call selection -> plan-once lookup (PR 2)
+    # -> persistent handle (PR 4)
     ov = dispatch_overhead()
     td = Table("bench_layers: per-call dispatch overhead "
                "(protocol selection + wrapper binding)",
@@ -128,7 +166,20 @@ def run() -> list:
     td.add("per-call baseline (plan=False)", f"{ov['per_call_us']:.2f}", "1x")
     td.add("planned (CommPlan)", f"{ov['planned_us']:.2f}",
            f"{ov['speedup']:.1f}x")
+    td.add("persistent handle (comm.persistent)",
+           f"{ov['persistent_us']:.2f}",
+           f"{ov['speedup'] * ov['persistent_speedup_vs_planned']:.1f}x")
     tables.append(td)
+
+    # (e) average layer number incl. the persistent-handle stack (PR 4)
+    ln = layer_numbers()
+    te = Table("bench_layers: avg layer number incl. persistent handles",
+               ["stack", "avg layer"])
+    te.add("conventional (monolithic)", f"{ln['monolithic']:.4f}")
+    te.add("frequency-tiered (composed)", f"{ln['composed']:.4f}")
+    te.add(f"+ {ln['persistent_handles_bound']} persistent handles",
+           f"{ln['composed_with_persistent_handles']:.4f}")
+    tables.append(te)
     return tables
 
 

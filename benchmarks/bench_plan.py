@@ -68,9 +68,10 @@ def wire_bytes(scale: int = 1) -> dict:
 
 def payload(smoke: bool = False) -> dict:
     from benchmarks.bench_elastic import recovery_latency
-    from benchmarks.bench_layers import dispatch_overhead
+    from benchmarks.bench_layers import dispatch_overhead, layer_numbers
     return {
         "dispatch": dispatch_overhead(repeat=100 if smoke else 300),
+        "average_layer_number": layer_numbers(),
         "wire_bytes": wire_bytes(scale=1 if smoke else 4),
         "recovery": recovery_latency(smoke=smoke),
     }
@@ -89,6 +90,13 @@ def run(smoke: bool = False):
                ["engine", "us/call"])
     t2.add("per-call baseline", f"{d['per_call_us']:.2f}")
     t2.add(f"planned ({d['speedup']:.1f}x faster)", f"{d['planned_us']:.2f}")
+    t2.add(f"persistent handle "
+           f"({d['persistent_speedup_vs_planned']:.1f}x vs planned)",
+           f"{d['persistent_us']:.2f}")
+    ln = p["average_layer_number"]
+    t2.add(f"avg layer: mono {ln['monolithic']:.2f} / composed "
+           f"{ln['composed']:.4f} / +handles "
+           f"{ln['composed_with_persistent_handles']:.4f}", "")
     r = p["recovery"]
     t3 = Table("bench_plan: elastic recovery latency "
                f"({r['arch']}, {r['state_bytes'] / 1e6:.1f} MB state)",

@@ -22,6 +22,7 @@ import numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import collectives as cc
 from repro.core.protocols import pipeline
 from repro.runtime import substrate
 
@@ -44,8 +45,8 @@ def main():
     def run(w, mb):
         out = pipeline.gpipe_forward(stage_fn, w[0], mb, "stage")
         # only the last stage's buffer is meaningful; broadcast it
-        last = jax.lax.psum(
-            jnp.where(jax.lax.axis_index("stage") == p - 1, out, 0.0),
+        last = cc.psum(
+            jnp.where(cc.axis_index("stage") == p - 1, out, 0.0),
             "stage")
         return last
 

@@ -1,5 +1,7 @@
-"""Quickstart: compose a thin collective engine for your application and
-train a small model with it (paper §2 flow, end to end).
+"""Quickstart: open a Sessions-style communication session for your
+application and train a small model with it (paper §2 flow, end to end,
+through the ``repro.comm`` facade — the only public way to do distributed
+work in this repo).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,10 +9,8 @@ train a small model with it (paper §2 flow, end to end).
 import jax
 import jax.numpy as jnp
 
+from repro import comm as comm_mod
 from repro.configs import get_config
-from repro.core import CollectiveEngine, scan_step
-from repro.core.compose import compose_from_trace
-from repro.core.topology import topology_from_mesh
 from repro.data import SyntheticLMDataset
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -27,45 +27,40 @@ def main():
     step = make_train_step(model, opt, tcfg)
 
     # 2. scan it (paper §2.2: "the application code is scanned to record
-    #    invoked MPI functions") — traced on an abstract (4, 2) mesh so
-    #    the composed collectives appear as jaxpr primitives; nothing is
-    #    executed or allocated.
-    from repro.core import EngineConfig, compose_library, registry
-    from repro.core.topology import topology_from_mesh_shape
-    from repro.runtime import substrate
-    from repro.train import trainer
+    #    invoked MPI functions") and compose the thin library — one call:
+    #    a probe session supplies the abstract (4, 2) mesh the composed
+    #    step is traced over (nothing executes, nothing is allocated) and
+    #    records the engine-level functions the step invokes.
     mesh = make_host_mesh()
-    amesh = substrate.abstract_mesh((4, 2), ("data", "model"))
-    probe_cfg = trainer.TrainCfg(microbatches=2, sync_mode="composed",
-                                 data_axes=("data",))
-    probe_eng = CollectiveEngine(
-        topology_from_mesh_shape(("data", "model"), (4, 2)),
-        library=compose_library(registry.ALL_FUNCTIONS),
-        config=EngineConfig(mode="composed"))
-    probe = make_train_step(model, opt, probe_cfg, mesh=amesh,
-                            engine=probe_eng)
-    state = make_train_state(model, opt, abstract=True, cfg=probe_cfg)
+    probe = comm_mod.Session.probe((4, 2), ("data", "model"))
+    probe_cfg = TrainCfg(microbatches=2, sync_mode="composed",
+                         data_axes=("data",))
+    probe_step = make_train_step(model, opt, probe_cfg, mesh=probe.mesh,
+                                 comm=probe.world)
+    state_abs = make_train_state(model, opt, abstract=True, cfg=probe_cfg)
     batch_abs = {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
                  "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
-    with substrate.use_abstract_mesh(amesh):
-        report = scan_step(probe, state, batch_abs)
+    session = comm_mod.Session.from_application(
+        probe_step, state_abs, batch_abs, mesh=mesh, probe=probe)
     print("— traced collective profile —")
-    print(report.summary())
+    print(session.trace_report.summary())
+    print("\n— composed session —")
+    print(session.describe())
 
-    # 3. compose the thin library and build the engine (the probe engine
-    #    recorded which engine-level functions the step invoked; the
-    #    jaxpr scan alone sees only their protocol lowering)
-    library = compose_from_trace(report, extra=probe_eng.invoked_functions)
-    engine = CollectiveEngine(
-        topology_from_mesh(mesh), library=library,
-        frequencies={fn: c * 1e4 for fn, c in report.frequencies().items()})
-    print("\n— composed engine —")
-    print(engine.describe())
+    # 3. communicators + persistent handles: the world communicator spans
+    #    every mesh axis; split() gives per-axis sub-communicators; a
+    #    persistent handle pre-binds protocol + tier + mean scale once
+    #    (MPI_Allreduce_init-style), so calls are zero-lookup.
+    dcomm = session.split("data")
+    handle = dcomm.persistent("all_reduce", (64,), jnp.float32, mean=True)
+    print("\npersistent handle:", handle.describe())
+    print(f"avg layer number with handles: "
+          f"{session.average_layer_number():.4f}")
 
     # 4. train with it
     ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=64,
                             global_batch=8)
-    with substrate.set_mesh(mesh):
+    with session.activate():
         state = make_train_state(model, opt, jax.random.PRNGKey(0), cfg=tcfg)
         jstep = jax.jit(step, donate_argnums=0)
         for i in range(20):
@@ -73,7 +68,7 @@ def main():
             state, metrics = jstep(state, batch)
             if i % 5 == 0 or i == 19:
                 print(f"step {i:3d}  loss {float(metrics['loss']):.4f}")
-    print("\nengine stats:\n" + engine.finalize())
+    print("\nsession stats:\n" + session.finalize())
 
 
 if __name__ == "__main__":

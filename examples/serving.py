@@ -1,5 +1,7 @@
 """Serving example: continuous batching over a reduced MoE model, with a
-deepseek-style MLA model to show the compressed-cache decode path.
+deepseek-style MLA model to show the compressed-cache decode path.  The
+serving mesh is owned by a ``repro.comm.Session`` (the facade); the
+scheduler and ``generate`` run under it.
 
     PYTHONPATH=src python examples/serving.py
 """
@@ -10,7 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm as comm_mod
 from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve import BatchScheduler, Request, ServeCfg, generate
 
@@ -18,13 +22,20 @@ from repro.serve import BatchScheduler, Request, ServeCfg, generate
 def main():
     rng = np.random.RandomState(0)
 
+    # The session is the one entity owning device/mesh concerns; hand its
+    # world communicator to the serving engine.
+    session = comm_mod.Session(mesh=make_host_mesh(model_parallel=1))
+    comm = session.world
+    print("serving session:", comm.describe())
+
     # --- continuous batching on a GQA decoder --------------------------
     cfg = get_config("qwen2-72b", reduced=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     sched = BatchScheduler(model, params,
                            ServeCfg(max_len=96, batch=4,
-                                    cache_dtype=jnp.float32))
+                                    cache_dtype=jnp.float32),
+                           comm=comm)
     t0 = time.time()
     for rid in range(10):
         prompt = rng.randint(0, cfg.vocab_size,
@@ -43,7 +54,8 @@ def main():
     prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 12)), jnp.int32)
     out = generate(model, params, prompts, max_new=8,
                    cfg=ServeCfg(max_len=64, batch=2,
-                                cache_dtype=jnp.float32))
+                                cache_dtype=jnp.float32),
+                   comm=comm)
     # cache footprint comparison: latent (kv_lora + dh_rope) vs dense H*Dh
     mla = cfg.mla
     latent = mla.kv_lora + mla.dh_rope

@@ -99,6 +99,40 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _bucket_layout_hint(abstract_tree: Any, abs_leaves,
+                        leaves_meta) -> Optional[str]:
+    """Diagnose the classic compressed+bucketed foot-gun: the EF residual
+    state is one flat f32 leaf PER BUCKET, and the bucket layout is a pure
+    function of ``TrainCfg.bucket_bytes`` — so restoring with a different
+    value shifts the total leaf count by the bucket-count delta.  Name the
+    two layouts instead of leaving a bare count mismatch."""
+    if not (isinstance(abstract_tree, dict)
+            and isinstance(abstract_tree.get("ef"), tuple)):
+        return None
+    expected_ef = list(abstract_tree["ef"])
+    if not all(getattr(l, "ndim", None) == 1 for l in expected_ef):
+        return None
+    n_other = len(abs_leaves) - len(expected_ef)
+    n_saved_ef = len(leaves_meta) - n_other
+    if n_saved_ef < 0 or n_saved_ef == len(expected_ef):
+        return None            # the mismatch is not (only) the EF state
+    # dict pytrees flatten key-sorted, and "ef" sorts before "opt"/
+    # "params"/"step": the checkpoint's EF leaves are the leading ones.
+    saved = leaves_meta[:n_saved_ef]
+    if not all(m["dtype"] == "float32" and len(m["shape"]) == 1
+               for m in saved):
+        return None
+    saved_sizes = [m["shape"][0] for m in saved]
+    expected_sizes = [int(l.shape[0]) for l in expected_ef]
+    return (f"compressed+bucketed EF state layout mismatch: the "
+            f"checkpoint was saved with {n_saved_ef} gradient bucket(s) "
+            f"of sizes {saved_sizes}, but this run plans "
+            f"{len(expected_ef)} bucket(s) of sizes {expected_sizes}. "
+            f"The bucket layout is determined by TrainCfg.bucket_bytes "
+            f"(--bucket-bytes); restore with the value the run was saved "
+            f"with, or start a fresh run")
+
+
 def restore_checkpoint(directory: str, abstract_tree: Any,
                        step: Optional[int] = None,
                        shardings: Any = None) -> Any:
@@ -117,9 +151,11 @@ def restore_checkpoint(directory: str, abstract_tree: Any,
     leaves_meta = manifest["leaves"]
     abs_leaves, treedef = jax.tree_util.tree_flatten(abstract_tree)
     if len(abs_leaves) != len(leaves_meta):
+        hint = _bucket_layout_hint(abstract_tree, abs_leaves, leaves_meta)
         raise ValueError(
             f"checkpoint has {len(leaves_meta)} leaves, expected "
-            f"{len(abs_leaves)} — structure changed since save")
+            f"{len(abs_leaves)} — "
+            + (hint if hint else "structure changed since save"))
     shard_leaves = (treedef.flatten_up_to(shardings)
                     if shardings is not None else [None] * len(abs_leaves))
     out = []

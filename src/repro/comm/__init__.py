@@ -1,0 +1,18 @@
+"""repro.comm — the Sessions-style communicator facade (PR 4).
+
+The single public way to do distributed work: ``Session`` owns substrate
+mesh + cost model + CommPlan + engine as one entity; ``Communicator``s
+(``session.world``, ``session.split(axis)``) carry the axis scope;
+``comm.persistent(fn, shape, dtype)`` returns pre-bound zero-lookup
+handles that the elastic controller revokes and rebinds on re-mesh.
+``repro.comm.collectives`` is the model-internal facade (TP/EP collectives
+inside shard_map bodies).
+"""
+
+from repro.comm import collectives
+from repro.comm.session import (Communicator, HandleRevokedError,
+                                PersistentHandle, Session,
+                                SessionFinalizedError)
+
+__all__ = ["Communicator", "HandleRevokedError", "PersistentHandle",
+           "Session", "SessionFinalizedError", "collectives"]

@@ -1,0 +1,85 @@
+"""Model-internal collective facade: the one place model code (tensor/
+expert-parallel forward passes) gets its collectives from.
+
+Model-parallel collectives live *inside* the model's shard_map body, where
+no Session object is in scope — but they must still route through the
+single entity so ``tools/check_api.py`` can enforce "no direct ``jax.lax``
+collectives outside repro/core and repro/comm".  This module is that
+route: a process-level default communicator backed by a monolithic engine
+whose protocols ARE the XLA primitives (``lax.psum`` etc.), so lowering —
+and therefore numerics — is bit-identical to the direct calls it
+replaces, while every invocation is visible to the engine's stats and
+library machinery.
+
+``install(session)`` lets an application swap in a composed session (the
+model-parallel collectives then go through its plan); ``install(None)``
+restores the conventional default.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.comm.session import Communicator, Session
+
+_default: Optional[Session] = None
+_installed: Optional[Session] = None
+
+
+def _session() -> Session:
+    global _default
+    if _installed is not None:
+        return _installed
+    if _default is None:
+        from repro.core.topology import Topology
+        _default = Session(topology=Topology(axis_sizes={}, axis_links={}),
+                           mode="monolithic")
+    return _default
+
+
+def install(session: Optional[Session]) -> None:
+    """Route model-internal collectives through ``session`` (None restores
+    the monolithic default)."""
+    global _installed
+    _installed = session
+
+
+def _comm(axis: str) -> Communicator:
+    # Model axes are usually absent from the default session's (empty)
+    # topology: strict=False lets axis sizes resolve against the LIVE
+    # axis (lax fallback), exactly like the lax calls this facade
+    # replaces.
+    return Communicator(_session(), (axis,), strict=False)
+
+
+def psum(x, axis: str):
+    """Sum over a (manual) mesh axis — ``lax.psum`` through the entity."""
+    return _comm(axis).all_reduce(x)
+
+
+def pmean(x, axis: str):
+    """Mean over a mesh axis: psum / live axis size (bit-identical to the
+    classic ``psum(x) / psum(1)`` spelling)."""
+    c = _comm(axis)
+    return c.all_reduce(x) / c.session.engine.axis_size(axis)
+
+
+def all_gather(x, axis: str, dim: int = 0):
+    """Tiled all-gather over a mesh axis (``lax.all_gather(tiled=True)``)."""
+    return _comm(axis).all_gather(x, dim=dim)
+
+
+def all_to_all(x, axis: str, split_dim: int = 0, concat_dim: int = 0):
+    return _comm(axis).all_to_all(x, split_dim=split_dim,
+                                  concat_dim=concat_dim)
+
+
+def axis_index(axis: str):
+    """This device's coordinate along a mesh axis (MPI_Comm_rank)."""
+    return _session().engine.axis_index(axis)
+
+
+def axis_size(axis: str):
+    """Extent of a mesh axis (MPI_Comm_size); live-axis fallback when the
+    session topology does not know it."""
+    return _session().engine.axis_size(axis)

@@ -1,0 +1,527 @@
+"""Sessions-style communicator facade: ONE entity over substrate, plan,
+and engine (the paper's single-entity thesis applied to the public API).
+
+After PR 1-3 the pieces existed but callers still assembled three objects
+by hand (substrate mesh + ``CollectiveEngine`` + controller) and every
+collective paid a string-keyed dispatch lookup.  MPI Sessions / MPIX
+extensions and MPI Advance's persistent collectives show the shape of the
+fix, reproduced here:
+
+* ``Session`` — an initialized session owns the substrate mesh, the
+  topology/cost model, the ``CommPlan``, and the engine *internally*; the
+  ``CollectiveEngine`` is a private implementation layer behind it.
+* ``Communicator`` — what a session hands out: the ``world`` communicator
+  spanning every mesh axis, and ``comm.split(axis)`` sub-communicators
+  per axis (MPI_Comm_split).  Collective methods carry no axis argument —
+  the communicator *is* the axis scope.
+* ``comm.persistent(fn, shape, dtype)`` — a pre-bound handle: protocol,
+  tier wrapper, and mean scale are resolved at bind time
+  (``MPI_*_init``-style persistent collectives), so a call is one
+  attribute load + one revocation check — below even the plan-once dict
+  lookup (measured in ``bench_layers`` / ``BENCH_plan.json``).
+
+Invalidation has exactly ONE path: ``Session.remesh(mesh)`` re-``init``s
+the engine (the topology-fingerprint rule decides the CommPlan rebuild)
+and revokes + rebinds every outstanding persistent handle against the
+survivor topology.  The elastic controller calls ``remesh`` on recovery —
+it is the communicator lifecycle owner.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import weakref
+from typing import Callable, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import compose as compose_mod
+from repro.core import layers, registry, trace
+from repro.core import plan as plan_mod
+from repro.core.compose import ComposedLibrary
+from repro.core.engine import CollectiveEngine, EngineConfig, PersistentBinding
+from repro.core.topology import (Topology, topology_from_mesh,
+                                 topology_from_mesh_shape)
+from repro.runtime import substrate
+
+
+class HandleRevokedError(RuntimeError):
+    """A persistent handle was invoked after revocation (its topology is
+    gone and it could not be rebound — e.g. its axis no longer exists, or
+    its session was finalized)."""
+
+
+class SessionFinalizedError(RuntimeError):
+    pass
+
+
+def _is_concrete_mesh(mesh) -> bool:
+    return mesh is not None and hasattr(mesh, "devices")
+
+
+# ---------------------------------------------------------------------------
+# Persistent handles
+# ---------------------------------------------------------------------------
+
+
+class PersistentHandle:
+    """A bound collective: ``handle(x)`` runs the pre-resolved schedule.
+
+    Lifecycle (owned by the session — exactly one invalidation path):
+
+    * bound at creation against the session's current topology;
+    * on ``Session.remesh`` the handle is revoked and immediately rebound
+      against the new topology (``revocations`` counts fingerprint
+      changes, ``epoch`` counts rebinds);
+    * if rebinding is impossible (axis vanished, session finalized) the
+      handle stays revoked and calling it raises ``HandleRevokedError``.
+    """
+
+    def __init__(self, comm: "Communicator", fn: str,
+                 shape: Sequence[int], dtype, *, mean: bool = False,
+                 **kw) -> None:
+        self._comm = comm
+        self.fn = fn
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = jnp.dtype(dtype)
+        self.mean = bool(mean)
+        self._kw = dict(kw)
+        self.binding: Optional[PersistentBinding] = None
+        self._target: Optional[Callable] = None
+        self._stale_reason: Optional[str] = None
+        self._permanent = False   # finalized session: no rebind can revive
+        self.epoch = 0            # successful (re)binds
+        self.revocations = 0      # fingerprint-change revocations
+        self._bind()
+
+    # -- lifecycle (driven by the owning Session) ----------------------
+
+    def _bind(self) -> None:
+        binding = self._comm._engine.bind_persistent(
+            self.fn, self.shape, self.dtype, self._comm._axis_arg,
+            mean=self.mean, **self._kw)
+        self.binding = binding
+        self._target = binding.call
+        self._stale_reason = None
+        self.epoch += 1
+
+    def _revoke(self, reason: str, permanent: bool = False) -> None:
+        self._target = None
+        self._stale_reason = reason
+        self._permanent = self._permanent or permanent
+
+    def _rebind(self, *, fingerprint_changed: bool) -> None:
+        if fingerprint_changed:
+            self.revocations += 1
+        try:
+            self._bind()
+        except ValueError as e:     # axis gone from the survivor topology
+            self._revoke(str(e))
+
+    # -- the hot path --------------------------------------------------
+
+    def __call__(self, x):
+        target = self._target
+        if target is None:
+            raise HandleRevokedError(
+                f"persistent {self.fn} handle is revoked "
+                f"({self._stale_reason}); "
+                + ("its session is finalized — bind a new handle on a new "
+                   "session" if self._permanent else
+                   "the owning session rebinding it on the next re-mesh "
+                   "will revive it"))
+        return target(x)
+
+    def dispatch(self) -> Callable:
+        """The bound schedule after the revocation check — the unit
+        ``bench_layers`` times against plan-table dispatch."""
+        target = self._target
+        if target is None:
+            raise HandleRevokedError(
+                f"persistent {self.fn} handle is revoked "
+                f"({self._stale_reason})")
+        return target
+
+    # -- introspection -------------------------------------------------
+
+    @property
+    def revoked(self) -> bool:
+        return self._target is None
+
+    @property
+    def protocols(self) -> Tuple[Tuple[str, str], ...]:
+        return self.binding.protocols if self.binding else ()
+
+    def describe(self) -> str:
+        state = f"REVOKED({self._stale_reason})" if self.revoked else "bound"
+        return (f"PersistentHandle({self.binding.describe() if self.binding else self.fn}, "
+                f"{state}, epoch={self.epoch}, "
+                f"revocations={self.revocations})")
+
+
+# ---------------------------------------------------------------------------
+# Communicators
+# ---------------------------------------------------------------------------
+
+
+class Communicator:
+    """An axis-scoped view of a session: every collective runs over the
+    communicator's own axes — no axis arguments, no engine exposure.
+
+    ``split`` derives sub-communicators (any non-empty subset of the
+    session's axes, order preserved as given).
+    """
+
+    def __init__(self, session: "Session", axes: Sequence[str], *,
+                 strict: bool = True) -> None:
+        axes = tuple(axes)
+        if not axes:
+            raise ValueError("a communicator needs at least one axis")
+        if strict:
+            unknown = [a for a in axes if a not in session.axis_names]
+            if unknown:
+                raise ValueError(f"unknown axes {unknown}; session has "
+                                 f"{list(session.axis_names)}")
+        self.session = session
+        self.axes = axes
+        self._axis_arg = axes[0] if len(axes) == 1 else axes
+
+    # -- plumbing ------------------------------------------------------
+
+    @property
+    def _engine(self) -> CollectiveEngine:
+        return self.session.engine
+
+    @property
+    def mesh(self):
+        return self.session.mesh
+
+    @property
+    def size(self) -> int:
+        return self._engine.topology.size(self.axes)
+
+    def _single_axis(self, what: str) -> str:
+        if len(self.axes) != 1:
+            raise ValueError(f"{what} needs a single-axis communicator; "
+                             f"split({self.axes}) first")
+        return self.axes[0]
+
+    def split(self, *axes: str) -> "Communicator":
+        """Sub-communicator over a subset of the session's axes
+        (MPI_Comm_split along named mesh axes)."""
+        return Communicator(self.session, axes)
+
+    # -- collectives (axis scope baked in) -----------------------------
+
+    def all_reduce(self, x, *, mean: bool = False):
+        y = self._engine.all_reduce(x, self._axis_arg)
+        if mean:
+            y = y * jnp.asarray(self.mean_scale(), y.dtype)
+        return y
+
+    def reduce_scatter(self, x, dim: int = 0):
+        return self._engine.reduce_scatter(
+            x, self._single_axis("reduce_scatter"), dim=dim)
+
+    def all_gather(self, x, dim: int = 0):
+        return self._engine.all_gather(
+            x, self._single_axis("all_gather"), dim=dim)
+
+    def all_to_all(self, x, split_dim: int = 0, concat_dim: int = 0):
+        return self._engine.all_to_all(
+            x, self._single_axis("all_to_all"),
+            split_dim=split_dim, concat_dim=concat_dim)
+
+    def broadcast(self, x, root: int = 0):
+        return self._engine.broadcast(
+            x, self._single_axis("broadcast"), root=root)
+
+    def permute(self, x, shift: int = 1):
+        return self._engine.permute(
+            x, self._single_axis("permute"), shift=shift)
+
+    def send_recv(self, x, pairs):
+        return self._engine.send_recv(
+            x, self._single_axis("send_recv"), pairs)
+
+    def compressed_all_reduce(self, x, state=None):
+        return self._engine.compressed_all_reduce(
+            x, self._single_axis("compressed_all_reduce"), state)
+
+    def barrier(self, token=None):
+        return self._engine.barrier(self._axis_arg, token)
+
+    def checkpoint_fence(self, tree):
+        return self._engine.checkpoint_fence(tree)
+
+    def axis_index(self):
+        return self._engine.axis_index(self._single_axis("axis_index"))
+
+    def mean_scale(self) -> float:
+        return self._engine.mean_scale(self.axes)
+
+    # -- gradient sync (the application-facing convenience API) --------
+
+    def sync_gradients(self, grads, *, mean: bool = True,
+                       compress: bool = False, ef_state=None):
+        return self._engine.sync_gradients(
+            grads, self._axis_arg, mean=mean, compress=compress,
+            ef_state=ef_state)
+
+    def sync_gradients_bucketed(self, grads, *, mean: bool = True,
+                                bucket_bytes=plan_mod.DEFAULT_BUCKET_BYTES,
+                                compress: bool = False, ef_state=None,
+                                dtype_aware: bool = True):
+        return self._engine.sync_gradients_bucketed(
+            grads, self._axis_arg, mean=mean, bucket_bytes=bucket_bytes,
+            compress=compress, ef_state=ef_state, dtype_aware=dtype_aware)
+
+    # -- persistent handles --------------------------------------------
+
+    def persistent(self, fn: str, shape: Sequence[int], dtype, *,
+                   mean: bool = False, **kw) -> PersistentHandle:
+        """Bind ``fn`` over this communicator's axes for a fixed
+        (shape, dtype): protocol + tier wrapper + mean scale resolved NOW,
+        zero lookups per call.  The session owns the handle's lifecycle
+        (revoked + rebound on re-mesh)."""
+        handle = PersistentHandle(self, fn, shape, dtype, mean=mean, **kw)
+        self.session._register(handle)
+        return handle
+
+    def describe(self) -> str:
+        sizes = dict(self._engine.topology.axis_sizes)
+        return ("Communicator(" + " x ".join(
+            f"{a}={sizes.get(a, '?')}" for a in self.axes) + ")")
+
+
+# ---------------------------------------------------------------------------
+# Sessions
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """An initialized communication session: the ONLY public way to do
+    distributed work in this repo (enforced by ``tools/check_api.py``).
+
+    Owns the substrate mesh, the topology/cost model, the ``CommPlan``,
+    and the ``CollectiveEngine`` internally; hands out ``Communicator``s.
+
+        sess = Session((4, 2), ("data", "model"))      # builds the mesh
+        sess = Session(mesh=my_mesh)                    # adopts a mesh
+        sess = Session(topology=topo)                   # trace/test only
+        comm = sess.world            # communicator over every mesh axis
+        dcomm = sess.split("data")   # per-axis sub-communicator
+        h = dcomm.persistent("all_reduce", (1024,), jnp.float32, mean=True)
+
+    ``mode="monolithic"`` is the conventional-stack baseline (every
+    function present, XLA protocols, uniform tier depth).
+    """
+
+    def __init__(self, mesh_shape: Optional[Sequence[int]] = None,
+                 axis_names: Optional[Sequence[str]] = None, *,
+                 mesh=None,
+                 devices=None,
+                 topology: Optional[Topology] = None,
+                 mode: str = "composed",
+                 config: Optional[EngineConfig] = None,
+                 library: Optional[ComposedLibrary] = None,
+                 frequencies: Optional[Mapping[str, float]] = None,
+                 _engine: Optional[CollectiveEngine] = None) -> None:
+        if mesh_shape is not None:
+            if mesh is not None:
+                raise ValueError("pass mesh_shape or mesh, not both")
+            if axis_names is None:
+                raise ValueError("mesh_shape needs axis_names")
+            mesh = substrate.make_mesh(tuple(mesh_shape), tuple(axis_names),
+                                       devices=devices)
+        self._mesh = mesh
+        self._handles: "weakref.WeakSet[PersistentHandle]" = weakref.WeakSet()
+        self._finalized = False
+        self.generation = 0          # fingerprint-changing remeshes
+        self.trace_report = None
+
+        if _engine is not None:      # adopt(): wrap an existing engine
+            self._engine = _engine
+            return
+        if topology is None:
+            if mesh is None:
+                raise ValueError(
+                    "Session needs mesh_shape+axis_names, mesh=, or "
+                    "topology=")
+            topology = topology_from_mesh(mesh)
+        cfg = config or EngineConfig(mode=mode)
+        if cfg.mode == "monolithic":
+            self._engine = CollectiveEngine(topology, config=cfg)
+        else:
+            self._engine = CollectiveEngine(
+                topology,
+                library=library or compose_mod.compose(
+                    registry.ALL_FUNCTIONS),
+                frequencies=frequencies, config=cfg)
+        if _is_concrete_mesh(mesh):
+            self._engine.init(mesh)
+
+    # -- construction helpers ------------------------------------------
+
+    @classmethod
+    def adopt(cls, engine: CollectiveEngine, mesh=None) -> "Session":
+        """Wrap an already-built engine (back-compat path for callers
+        still holding a ``CollectiveEngine``); the session takes over the
+        lifecycle but does not re-init."""
+        return cls(mesh=mesh, _engine=engine)
+
+    @classmethod
+    def probe(cls, mesh_shape: Sequence[int] = (4, 2),
+              axis_names: Sequence[str] = ("data", "model")) -> "Session":
+        """A device-less session over an ABSTRACT mesh for the paper's
+        §2.2 application scan: build the probe step against
+        ``probe.world`` / ``probe.mesh``, then hand both to
+        ``Session.from_application``.  Nothing executes, nothing is
+        allocated."""
+        sess = cls(topology=topology_from_mesh_shape(tuple(axis_names),
+                                                     tuple(mesh_shape)))
+        sess._mesh = substrate.abstract_mesh(tuple(mesh_shape),
+                                             tuple(axis_names))
+        return sess
+
+    @classmethod
+    def from_application(cls, step_fn: Callable, *abstract_args,
+                         mesh,
+                         probe: Optional["Session"] = None,
+                         config: Optional[EngineConfig] = None,
+                         steps_hint: float = 1e4,
+                         extra_functions: Sequence[str] = (),
+                         **abstract_kwargs) -> "Session":
+        """The §2.2 flow as one call: scan ``step_fn`` (traced with
+        abstract inputs over the probe's abstract mesh), compose the thin
+        library covering exactly what it invokes, and initialize a
+        session for ``mesh``.
+
+        ``probe`` is the ``Session.probe(...)`` the step was built
+        against; its engine records the engine-level function set the
+        step invoked (protocol lowering hides e.g. all_reduce behind
+        ppermute chains, so the jaxpr scan alone cannot attribute them).
+        """
+        ctx = (substrate.use_abstract_mesh(probe.mesh)
+               if probe is not None and probe.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            report = trace.scan_step(step_fn, *abstract_args,
+                                     **abstract_kwargs)
+        extra = set(extra_functions)
+        if probe is not None:
+            extra |= set(probe.engine.invoked_functions)
+        library = compose_mod.compose_from_trace(report, extra=extra)
+        freqs = dict(registry.DEFAULT_FREQUENCIES)
+        freqs.update({fn: c * steps_hint
+                      for fn, c in report.frequencies().items()})
+        sess = cls(mesh=mesh, config=config, library=library,
+                   frequencies=freqs)
+        sess.trace_report = report
+        return sess
+
+    # -- the private implementation layer ------------------------------
+
+    @property
+    def engine(self) -> CollectiveEngine:
+        """The private implementation layer.  Callers outside
+        ``repro/core``/``repro/comm`` must not construct engines
+        (``tools/check_api.py``); holding this reference for
+        introspection (plan stats, describe) is fine."""
+        return self._engine
+
+    @property
+    def mesh(self):
+        return self._mesh
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(self._engine.topology.axis_sizes)
+
+    # -- communicators -------------------------------------------------
+
+    @property
+    def world(self) -> Communicator:
+        """The communicator spanning every mesh axis."""
+        return Communicator(self, self.axis_names)
+
+    def split(self, *axes: str) -> Communicator:
+        return Communicator(self, axes)
+
+    # -- lifecycle ------------------------------------------------------
+
+    def _register(self, handle: PersistentHandle) -> None:
+        if self._finalized:
+            raise SessionFinalizedError("session is finalized")
+        self._handles.add(handle)
+
+    @property
+    def handles(self) -> Tuple[PersistentHandle, ...]:
+        return tuple(self._handles)
+
+    def remesh(self, mesh) -> bool:
+        """THE invalidation path: bind the session to a new mesh.
+
+        Re-``init``s the engine — the topology-fingerprint rule decides
+        whether the CommPlan rebuilds (exactly one rebuild per topology
+        change) — then revokes every outstanding persistent handle and
+        rebinds it against the survivor topology.  Returns whether the
+        plan was rebuilt.  The elastic controller calls this on every
+        recovery; nothing else invalidates handles.
+        """
+        if self._finalized:
+            raise SessionFinalizedError("session is finalized")
+        handles = list(self._handles)
+        for h in handles:
+            h._revoke("re-mesh in progress")
+        self._engine.init(mesh)
+        rebuilt = self._engine.last_init_rebuilt
+        self._mesh = mesh
+        if rebuilt:
+            self.generation += 1
+        for h in handles:
+            h._rebind(fingerprint_changed=rebuilt)
+        return rebuilt
+
+    def activate(self):
+        """Context manager making the session's mesh the active substrate
+        mesh (``substrate.set_mesh`` / ``use_abstract_mesh``)."""
+        if self._mesh is None:
+            return contextlib.nullcontext()
+        if _is_concrete_mesh(self._mesh):
+            return substrate.set_mesh(self._mesh)
+        return substrate.use_abstract_mesh(self._mesh)
+
+    def finalize(self) -> str:
+        """MPI_Session_finalize: permanently revoke handles, flush stats."""
+        for h in self._handles:
+            h._revoke("session finalized", permanent=True)
+        self._finalized = True
+        return self._engine.finalize()
+
+    # -- introspection -------------------------------------------------
+
+    def average_layer_number(self, include_handles: bool = True) -> float:
+        """Frequency-weighted average dispatch depth (paper §3).  Bound
+        persistent handles resolve their whole stack at bind time, so the
+        functions they cover count at L0 — the measurable layer-count win
+        of persistent binding over dict-lookup dispatch."""
+        eng = self._engine
+        tiers = dict(eng.tiers)
+        if include_handles:
+            for h in self._handles:
+                if not h.revoked and h.fn in tiers:
+                    tiers[h.fn] = 0
+        freqs = {fn: eng.frequencies.get(
+            fn, registry.DEFAULT_FREQUENCIES.get(fn, 1.0)) for fn in tiers}
+        return layers.average_layer_number(tiers, freqs)
+
+    def describe(self) -> str:
+        rows = [f"Session(axes={list(self.axis_names)}, "
+                f"handles={len(self._handles)}, "
+                f"generation={self.generation}, "
+                f"avg_layer={self.average_layer_number():.3f})",
+                "  " + self._engine.describe().replace("\n", "\n  ")]
+        for h in self._handles:
+            rows.append(f"  {h.describe()}")
+        return "\n".join(rows)

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -109,7 +110,20 @@ class CollectiveEngine:
 
     # ------------------------------------------------------------------
     # Construction from an application (the paper's §2.2 flow)
+    #
+    # The classmethod constructors are deprecated caller-facing surface:
+    # the Sessions-style facade (``repro.comm``) owns engine construction
+    # now — ``Session(...)``, ``Session.from_application(...)``, and
+    # ``Session(mode="monolithic")`` replace them.  They keep working
+    # (same behaviour) so out-of-tree callers migrate at leisure.
     # ------------------------------------------------------------------
+
+    @staticmethod
+    def _deprecated(old: str, new: str) -> None:
+        warnings.warn(
+            f"CollectiveEngine.{old} is deprecated; construct communicators "
+            f"through the repro.comm facade instead ({new})",
+            DeprecationWarning, stacklevel=3)
 
     @classmethod
     def from_application(
@@ -122,12 +136,16 @@ class CollectiveEngine:
         steps_hint: float = 1e4,
         **abstract_kwargs,
     ) -> "CollectiveEngine":
-        """Scan ``step_fn`` (traced with abstract inputs), compose the thin
+        """Deprecated: use ``repro.comm.Session.from_application``.
+
+        Scan ``step_fn`` (traced with abstract inputs), compose the thin
         library covering exactly what it invokes, and build the engine.
 
         ``steps_hint``: traced counts are per *step*; the paper's layer
         placement (§3) weighs per-application frequency, so counts are
         scaled by the expected number of step executions."""
+        cls._deprecated("from_application", "repro.comm.Session."
+                        "from_application(step_fn, ..., mesh=...)")
         report = trace.scan_step(step_fn, *abstract_args, **abstract_kwargs)
         library = compose_mod.compose_from_trace(report, extra=extra_functions)
         freqs = dict(registry.DEFAULT_FREQUENCIES)
@@ -138,12 +156,17 @@ class CollectiveEngine:
     @classmethod
     def monolithic(cls, topology: Topology,
                    config: Optional[EngineConfig] = None) -> "CollectiveEngine":
+        """Deprecated: use ``repro.comm.Session(..., mode="monolithic")``."""
+        cls._deprecated("monolithic",
+                        'repro.comm.Session(..., mode="monolithic")')
         cfg = config or EngineConfig()
         cfg = dataclasses.replace(cfg, mode="monolithic")
         return cls(topology, config=cfg)
 
     @classmethod
     def for_mesh(cls, mesh, **kwargs) -> "CollectiveEngine":
+        """Deprecated: use ``repro.comm.Session(mesh=...)``."""
+        cls._deprecated("for_mesh", "repro.comm.Session(mesh=...)")
         return cls(topology_from_mesh(mesh), **kwargs)
 
     # ------------------------------------------------------------------
@@ -298,11 +321,13 @@ class CollectiveEngine:
             return self._allreduce_multiaxis(x, axes)
         return self._allreduce_1d(x, axes[0])
 
-    def _allreduce_1d(self, x: jax.Array, axis: str) -> jax.Array:
+    def _allreduce_1d(self, x: jax.Array, axis: str,
+                      proto: Optional[str] = None) -> jax.Array:
         p = self._axis_size(axis)
         if p == 1:
             return x
-        proto = self.protocol_for(registry.ALL_REDUCE, _nbytes_of(x), axis)
+        if proto is None:
+            proto = self.protocol_for(registry.ALL_REDUCE, _nbytes_of(x), axis)
         if proto == costmodel.XLA_DEFAULT:
             return xla.all_reduce(x, axis)
         if proto == costmodel.RECURSIVE_DOUBLING:
@@ -347,13 +372,16 @@ class CollectiveEngine:
     def _reduce_scatter_mono(self, x, axis: str, dim: int = 0):
         return xla.reduce_scatter(x, axis, dim)
 
-    def _reduce_scatter_composed(self, x, axis: str, dim: int = 0):
+    def _reduce_scatter_composed(self, x, axis: str, dim: int = 0,
+                                 proto: Optional[str] = None):
         p = self._axis_size(axis)
         if p == 1:
             return x
         if x.shape[dim] % p:
             return xla.reduce_scatter(x, axis, dim)  # generic fallback
-        proto = self.protocol_for(registry.REDUCE_SCATTER, _nbytes_of(x), axis)
+        if proto is None:
+            proto = self.protocol_for(registry.REDUCE_SCATTER,
+                                      _nbytes_of(x), axis)
         xm = jnp.moveaxis(x, dim, 0)
         x2d = xm.reshape(p, -1)
         if proto == costmodel.RECURSIVE_HALVING:
@@ -375,11 +403,14 @@ class CollectiveEngine:
     def _all_gather_mono(self, x, axis: str, dim: int = 0):
         return xla.all_gather(x, axis, dim)
 
-    def _all_gather_composed(self, x, axis: str, dim: int = 0):
+    def _all_gather_composed(self, x, axis: str, dim: int = 0,
+                             proto: Optional[str] = None):
         p = self._axis_size(axis)
         if p == 1:
             return x
-        proto = self.protocol_for(registry.ALL_GATHER, _nbytes_of(x) * p, axis)
+        if proto is None:
+            proto = self.protocol_for(registry.ALL_GATHER,
+                                      _nbytes_of(x) * p, axis)
         xm = jnp.moveaxis(x, dim, 0)
         shard = xm.reshape(-1)
         if proto == costmodel.BRUCK:
@@ -407,13 +438,15 @@ class CollectiveEngine:
         return xla.all_to_all(x, axis, split_dim, concat_dim)
 
     def _all_to_all_composed(self, x, axis: str, split_dim: int = 0,
-                             concat_dim: int = 0):
+                             concat_dim: int = 0,
+                             proto: Optional[str] = None):
         p = self._axis_size(axis)
         if p == 1:
             return x
         if x.shape[split_dim] % p:
             return xla.all_to_all(x, axis, split_dim, concat_dim)
-        proto = self.protocol_for(registry.ALL_TO_ALL, _nbytes_of(x), axis)
+        if proto is None:
+            proto = self.protocol_for(registry.ALL_TO_ALL, _nbytes_of(x), axis)
         xm = jnp.moveaxis(x, split_dim, 0)
         blocks = xm.reshape((p, xm.shape[0] // p) + xm.shape[1:])
         if proto == costmodel.BRUCK:
@@ -440,8 +473,10 @@ class CollectiveEngine:
     def _broadcast_mono(self, x, axis: str, root: int = 0):
         return xla.broadcast(x, axis, root)
 
-    def _broadcast_composed(self, x, axis: str, root: int = 0):
-        proto = self.protocol_for(registry.BROADCAST, _nbytes_of(x), axis)
+    def _broadcast_composed(self, x, axis: str, root: int = 0,
+                            proto: Optional[str] = None):
+        if proto is None:
+            proto = self.protocol_for(registry.BROADCAST, _nbytes_of(x), axis)
         if proto == costmodel.RING:  # scatter+allgather for big payloads
             p = self._axis_size(axis)
             if c.is_pow2(p) and p > 1:
@@ -539,6 +574,158 @@ class CollectiveEngine:
         self._check(registry.FINALIZE)
         self._finalized = True
         return self.stats.summary()
+
+    # ------------------------------------------------------------------
+    # Persistent bindings (MPI Advance's MPIX_*_init analogue)
+    # ------------------------------------------------------------------
+
+    def bind_persistent(self, fn: str, shape: Sequence[int], dtype,
+                        axis_name, *, mean: bool = False,
+                        **kw) -> "PersistentBinding":
+        """Resolve everything one collective call site needs — protocol,
+        tier wrapper, mean scale — ONCE, for a fixed (shape, dtype, axis)
+        signature.  The returned binding's ``call`` is zero-lookup on the
+        hot path: no cost-model run, no plan-table get, no wrapper
+        construction per call (persistent collectives; the step past the
+        plan-once dict lookup).
+
+        This is the private layer under ``repro.comm``'s persistent
+        handles, which add lifecycle on top (revocation + rebind when the
+        elastic controller re-meshes).  Binding requires every axis to be
+        in the engine topology — the plan has nothing to resolve against
+        otherwise.
+        """
+        axes = _as_axes(axis_name)
+        self._check(fn)
+        for ax in axes:
+            if ax not in self.topology.axis_sizes:
+                raise ValueError(
+                    f"cannot bind persistent {fn!r}: axis {ax!r} is not in "
+                    f"the engine topology "
+                    f"({sorted(self.topology.axis_sizes)})")
+        shape = tuple(int(s) for s in shape)
+        dtype = jnp.dtype(dtype)
+        nbytes = math.prod(shape) * dtype.itemsize if shape else dtype.itemsize
+        if mean and fn != registry.ALL_REDUCE:
+            raise ValueError(f"mean=True is only supported for all_reduce, "
+                             f"not {fn!r}")
+        single_axis_only = (registry.REDUCE_SCATTER, registry.ALL_GATHER,
+                            registry.ALL_TO_ALL, registry.BROADCAST,
+                            registry.PERMUTE, registry.SEND_RECV)
+        if fn in single_axis_only and len(axes) != 1:
+            raise ValueError(f"{fn!r} binds over exactly one axis, "
+                             f"got {axes}")
+        mono = not self.composed
+        xla_tag = costmodel.XLA_DEFAULT
+
+        if fn == registry.ALL_REDUCE:
+            if mono:
+                target = lambda x: self._allreduce_mono(x, axes)
+                protocols = tuple((ax, xla_tag) for ax in axes)
+            elif len(axes) == 1:
+                ax0, proto = axes[0], self.protocol_for(fn, nbytes, axes[0])
+                target = lambda x: self._allreduce_1d(x, ax0, proto=proto)
+                protocols = ((ax0, proto),)
+            elif "pod" in axes or len(axes) == 2:
+                # these multi-axis schedules are fixed by the axis set —
+                # no per-call protocol lookup exists to eliminate
+                name = costmodel.HIERARCHICAL if "pod" in axes \
+                    else costmodel.TWO_PHASE_2D
+                target = lambda x: self._allreduce_multiaxis(x, axes)
+                protocols = (("+".join(axes), name),)
+            else:
+                protocols = tuple((ax, self.protocol_for(fn, nbytes, ax))
+                                  for ax in axes)
+
+                def target(x, _protos=protocols):
+                    for ax, pr in _protos:
+                        x = self._allreduce_1d(x, ax, proto=pr)
+                    return x
+        elif fn == registry.REDUCE_SCATTER:
+            ax0, dim = axes[0], int(kw.pop("dim", 0))
+            if mono:
+                proto = xla_tag
+                target = lambda x: self._reduce_scatter_mono(x, ax0, dim=dim)
+            else:
+                proto = self.protocol_for(fn, nbytes, ax0)
+                target = lambda x: self._reduce_scatter_composed(
+                    x, ax0, dim=dim, proto=proto)
+            protocols = ((ax0, proto),)
+        elif fn == registry.ALL_GATHER:
+            ax0, dim = axes[0], int(kw.pop("dim", 0))
+            if mono:
+                proto = xla_tag
+                target = lambda x: self._all_gather_mono(x, ax0, dim=dim)
+            else:
+                # all_gather plans at the gathered size (matches the
+                # per-call convention in _all_gather_composed)
+                proto = self.protocol_for(
+                    fn, nbytes * self._axis_size(ax0), ax0)
+                target = lambda x: self._all_gather_composed(
+                    x, ax0, dim=dim, proto=proto)
+            protocols = ((ax0, proto),)
+        elif fn == registry.ALL_TO_ALL:
+            ax0 = axes[0]
+            sd = int(kw.pop("split_dim", 0))
+            cd = int(kw.pop("concat_dim", 0))
+            if mono:
+                proto = xla_tag
+                target = lambda x: self._all_to_all_mono(
+                    x, ax0, split_dim=sd, concat_dim=cd)
+            else:
+                proto = self.protocol_for(fn, nbytes, ax0)
+                target = lambda x: self._all_to_all_composed(
+                    x, ax0, split_dim=sd, concat_dim=cd, proto=proto)
+            protocols = ((ax0, proto),)
+        elif fn == registry.BROADCAST:
+            ax0, root = axes[0], int(kw.pop("root", 0))
+            if mono:
+                proto = xla_tag
+                target = lambda x: self._broadcast_mono(x, ax0, root=root)
+            else:
+                proto = self.protocol_for(fn, nbytes, ax0)
+                target = lambda x: self._broadcast_composed(
+                    x, ax0, root=root, proto=proto)
+            protocols = ((ax0, proto),)
+        elif fn == registry.PERMUTE:
+            ax0, shift = axes[0], int(kw.pop("shift", 1))
+            target = lambda x: self._permute_impl(x, ax0, shift=shift)
+            protocols = ((ax0, xla_tag),)
+        elif fn == registry.SEND_RECV:
+            ax0, pairs = axes[0], tuple(kw.pop("pairs"))
+            target = lambda x: self._send_recv_impl(x, ax0, pairs=pairs)
+            protocols = ((ax0, xla_tag),)
+        elif fn == registry.BARRIER:
+            target = lambda t: self._barrier_impl(t, axes)
+            protocols = tuple((ax, xla_tag) for ax in axes)
+        else:
+            raise ValueError(f"{fn!r} does not support persistent binding")
+        if kw:
+            raise TypeError(f"unknown bind options for {fn!r}: {sorted(kw)}")
+
+        scale = None
+        if mean:
+            scale = self.mean_scale(axes)   # static: axes are in topology
+
+            def target(x, _inner=target, _s=scale):
+                y = _inner(x)
+                return y * jnp.asarray(_s, y.dtype)
+
+        tier = self.tier(fn)
+        if tier >= 2:
+            # tier semantics preserved: checked/full layers still wrap the
+            # schedule, but they are STACKED at bind time, not per call.
+            axis_label = axes if len(axes) > 1 else axes[0]
+            wrapped = layers.wrap_tier(
+                fn, tier, lambda x, _axis, **_: target(x), self.stats,
+                sanitize=self.config.sanitize_checked)
+            call = lambda x, _w=wrapped, _a=axis_label: _w(x, _a)
+        else:
+            call = target
+        return PersistentBinding(
+            fn=fn, axes=axes, protocols=protocols, tier=tier,
+            nbytes=nbytes, mean_scale=scale,
+            fingerprint=self.topology.fingerprint(), call=call)
 
     # ------------------------------------------------------------------
     # Gradient synchronisation (the application-facing convenience API)
@@ -642,6 +829,32 @@ class CollectiveEngine:
             plan_mod.scatter_bucket(y, bucket, out)
         return (jax.tree_util.tree_unflatten(treedef, out),
                 tuple(new_ef) if compress else ef_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class PersistentBinding:
+    """A fully-resolved collective call site: the output of
+    ``CollectiveEngine.bind_persistent``.  ``call`` takes the array and
+    nothing else — protocol, tier stack, and mean scale were baked in at
+    bind time.  ``fingerprint`` records the topology it was resolved
+    against (the repro.comm handle lifecycle compares it to decide
+    staleness)."""
+
+    fn: str
+    axes: Tuple[str, ...]
+    protocols: Tuple[Tuple[str, str], ...]   # (axis-label, protocol)
+    tier: int
+    nbytes: int
+    mean_scale: Optional[float]
+    fingerprint: Any
+    call: Callable
+
+    def describe(self) -> str:
+        protos = ", ".join(f"{a}:{p}" for a, p in self.protocols)
+        return (f"{self.fn}@{'+'.join(self.axes)} "
+                f"[{protos}] tier=L{self.tier} {self.nbytes}B"
+                + (f" mean={self.mean_scale:.4g}"
+                   if self.mean_scale is not None else ""))
 
 
 def _compressed_wire_bytes(size: int) -> int:

@@ -322,17 +322,11 @@ def build_train_cell(arch_id: str, shape_name: str, mesh,
     else:
         bspecs = trainer.batch_specs(batch)
     batch_sh = fit_shardings(bspecs, batch, mesh)
-    engine = None
+    comm = None
     if sync != "auto":
-        from repro.core import (CollectiveEngine, EngineConfig,
-                                compose_library, registry)
-        from repro.core.topology import topology_from_mesh
-        engine = CollectiveEngine(
-            topology_from_mesh(mesh),
-            library=compose_library(registry.ALL_FUNCTIONS),
-            config=EngineConfig(mode="composed"))
-    step = trainer.make_train_step(model, opt, tcfg, mesh=mesh,
-                                   engine=engine)
+        from repro import comm as comm_mod
+        comm = comm_mod.Session(mesh=mesh).world
+    step = trainer.make_train_step(model, opt, tcfg, mesh=mesh, comm=comm)
     return Cell(fn=step, args=(state, batch),
                 in_shardings=(state_sh, batch_sh),
                 out_shardings=(state_sh, None),
@@ -590,6 +584,8 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # pre-0.6 JAX: list per device
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         cost = hloanalysis.analyze_module(hlo, total_devices=n_dev)
         per_dev_bytes = (mem.argument_size_in_bytes

@@ -13,7 +13,9 @@ import time
 import jax
 import numpy as np
 
+from repro import comm as comm_mod
 from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.serve import BatchScheduler, Request, ServeCfg
 
@@ -39,9 +41,14 @@ def main() -> None:
     logger.info("model %s: %.2fM params", model.name,
                 model.param_count() / 1e6)
 
+    # The session owns the serving mesh (one entity); the scheduler's
+    # prefill/decode steps run inside it.
+    session = comm_mod.Session(mesh=make_host_mesh(model_parallel=1))
+    logger.info("serving session: %s", session.world.describe())
+
     scfg = ServeCfg(max_len=args.max_len, batch=args.batch,
                     cache_dtype=jax.numpy.float32)
-    sched = BatchScheduler(model, params, scfg)
+    sched = BatchScheduler(model, params, scfg, comm=session.world)
     rng = np.random.RandomState(0)
     t0 = time.time()
     for rid in range(args.requests):

@@ -26,12 +26,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import comm as comm_mod
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCH_IDS, get_config
-from repro.core import CollectiveEngine, EngineConfig, trace
-from repro.core.compose import compose_from_trace
 from repro.core.plan import DEFAULT_BUCKET_BYTES
-from repro.core.topology import topology_from_mesh
 from repro.data import SyntheticLMDataset
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import build_model
@@ -44,25 +42,28 @@ from repro.train import trainer
 logger = logging.getLogger("repro.train")
 
 
-def build_engine(mesh, step_fn, abstract_args, mode: str,
-                 steps_hint: float = 1e4, probe_engine=None):
-    """Paper §2.2: scan the application, compose the thin library.
-
-    The scan traces ``step_fn`` (a composed-mode probe whose shard_map
-    collectives appear as jaxpr primitives) over an abstract mesh —
-    nothing executes, nothing allocates.  ``probe_engine`` supplies the
-    engine-level function set recorded during the trace (protocol
-    lowering hides e.g. all_reduce behind ppermute chains)."""
-    topo = topology_from_mesh(mesh)
-    if mode == "monolithic":
-        return CollectiveEngine.monolithic(topo)
-    report = trace.scan_step(step_fn, *abstract_args)
-    extra = (probe_engine.invoked_functions
-             if probe_engine is not None else ())
-    library = compose_from_trace(report, extra=extra)
-    freqs = {fn: c * steps_hint for fn, c in report.frequencies().items()}
-    return CollectiveEngine(topo, library=library, frequencies=freqs or None,
-                            config=EngineConfig(mode="composed"))
+def build_session(mesh, model, opt, ds, args) -> "comm_mod.Session":
+    """Paper §2.2 through the facade: trace a composed-mode probe step
+    over ``Session.probe``'s abstract (4, 2) mesh to discover the
+    collective set 𝓕 — the probe must use the *actual* sync mode (a
+    compressed launch invokes compressed_all_reduce, which the composed
+    library must cover) — then ``Session.from_application`` composes the
+    thin library and initializes the session for the real mesh."""
+    probe = comm_mod.Session.probe((4, 2), ("data", "model"))
+    probe_cfg = trainer.TrainCfg(microbatches=args.microbatches,
+                                 sync_mode=args.sync,
+                                 data_axes=("data",),
+                                 bucket_grads=args.bucket_grads,
+                                 bucket_bytes=args.bucket_bytes)
+    probe_step = trainer.make_train_step(model, opt, probe_cfg,
+                                         mesh=probe.mesh, comm=probe.world)
+    abstate = trainer.make_train_state(model, opt, abstract=True,
+                                       cfg=probe_cfg)
+    abatch = jax.eval_shape(
+        lambda: {k: jnp.zeros(v.shape, v.dtype)
+                 for k, v in ds.host_batch(0).items()})
+    return comm_mod.Session.from_application(
+        probe_step, abstate, abatch, mesh=mesh, probe=probe)
 
 
 def main() -> None:
@@ -123,36 +124,10 @@ def main() -> None:
                             seq_len=args.seq_len,
                             global_batch=args.global_batch)
 
-    engine = None
+    comm_session = None
     if args.sync != "auto":
-        # Trace a probe over an abstract (4,2) mesh to discover the
-        # collective set 𝓕 (paper §2.2 application scan).  The probe must
-        # use the *actual* sync mode: a compressed launch invokes
-        # compressed_all_reduce, which the composed library must cover.
-        from repro.core import compose_library, registry
-        from repro.core.topology import topology_from_mesh_shape
-        amesh = substrate.abstract_mesh((4, 2), ("data", "model"))
-        probe_cfg = trainer.TrainCfg(microbatches=args.microbatches,
-                                     sync_mode=args.sync,
-                                     data_axes=("data",),
-                                     bucket_grads=args.bucket_grads,
-                                     bucket_bytes=args.bucket_bytes)
-        probe_eng = CollectiveEngine(
-            topology_from_mesh_shape(("data", "model"), (4, 2)),
-            library=compose_library(registry.ALL_FUNCTIONS),
-            config=EngineConfig(mode="composed"))
-        probe = trainer.make_train_step(model, opt, probe_cfg, mesh=amesh,
-                                        engine=probe_eng)
-        abstate = trainer.make_train_state(model, opt, abstract=True,
-                                           cfg=probe_cfg)
-        abatch = jax.eval_shape(
-            lambda: {k: jnp.zeros(v.shape, v.dtype)
-                     for k, v in ds.host_batch(0).items()})
-        with substrate.use_abstract_mesh(amesh):
-            engine = build_engine(mesh, probe, (abstate, abatch), "composed",
-                                  probe_engine=probe_eng)
-        engine.init(mesh)
-        logger.info("composed engine:\n%s", engine.describe())
+        comm_session = build_session(mesh, model, opt, ds, args)
+        logger.info("composed session:\n%s", comm_session.describe())
 
     if args.elastic:
         if not args.ckpt_dir:
@@ -163,7 +138,7 @@ def main() -> None:
                  if args.fault_plan else None)
         ctl = ElasticController(
             session, ds, mesh, total_steps=args.steps,
-            ckpt_dir=args.ckpt_dir, engine=engine,
+            ckpt_dir=args.ckpt_dir, comm=comm_session,
             ckpt_every=args.ckpt_every, fault_plan=fplan,
             max_recoveries=args.max_recoveries,
             watchdog_timeout=args.watchdog_timeout,
@@ -172,12 +147,13 @@ def main() -> None:
                                                   s, l)))
         report = ctl.run()
         logger.info("elastic run done:\n%s", report.describe())
-        if engine is not None:
-            logger.info("engine stats:\n%s", engine.finalize())
+        if comm_session is not None:
+            logger.info("session stats:\n%s", comm_session.finalize())
         return
 
-    step_fn = trainer.make_train_step(model, opt, tcfg, mesh=mesh,
-                                      engine=engine)
+    step_fn = trainer.make_train_step(
+        model, opt, tcfg, mesh=mesh,
+        comm=comm_session.world if comm_session is not None else None)
     sspecs = trainer.state_specs(model, opt, tcfg)
 
     with substrate.set_mesh(mesh):
@@ -216,8 +192,8 @@ def main() -> None:
         if ckpt is not None:
             ckpt.maybe_save(args.steps, state, force=True)
             ckpt.wait()
-        if engine is not None:
-            logger.info("engine stats:\n%s", engine.finalize())
+        if comm_session is not None:
+            logger.info("session stats:\n%s", comm_session.finalize())
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import collectives as cc
 from repro.models import layers as L
 from repro.runtime import substrate
 
@@ -251,19 +252,16 @@ def moe_forward_shardmap(mesh, params, cfg: MoECfg, x: jax.Array
         C = capacity_of(T, cfg)
         top_idx, top_vals, pos, keep, aux = route(x2d, p["router"], cfg, C)
 
-        m_idx = jax.lax.axis_index("model")
+        m_idx = cc.axis_index("model")
         e_lo = m_idx * e_loc
         posc = jnp.clip(pos, 0, C - 1)
 
         # FSDP: gather the experts' D dim (grads reduce-scatter back).
         pw = dict(p)
         if fsdp is not None:
-            pw["w_gate"] = jax.lax.all_gather(p["w_gate"], fsdp, axis=1,
-                                              tiled=True)
-            pw["w_up"] = jax.lax.all_gather(p["w_up"], fsdp, axis=1,
-                                            tiled=True)
-            pw["w_down"] = jax.lax.all_gather(p["w_down"], fsdp, axis=2,
-                                              tiled=True)
+            pw["w_gate"] = cc.all_gather(p["w_gate"], fsdp, dim=1)
+            pw["w_up"] = cc.all_gather(p["w_up"], fsdp, dim=1)
+            pw["w_down"] = cc.all_gather(p["w_down"], fsdp, dim=2)
 
         buf = jnp.zeros((e_loc, C, d), x_loc.dtype)
         for j in range(cfg.top_k):
@@ -285,7 +283,7 @@ def moe_forward_shardmap(mesh, params, cfg: MoECfg, x: jax.Array
             g = out_buf[le, posc[:, j]] \
                 * in_shard[:, None].astype(x_loc.dtype)
             y = y + g * top_vals[:, j:j + 1].astype(x_loc.dtype)
-        y = jax.lax.psum(y, "model")
+        y = cc.psum(y, "model")
 
         if cfg.num_shared:
             sf = cfg.shared_d_ff or cfg.d_ff
@@ -293,7 +291,7 @@ def moe_forward_shardmap(mesh, params, cfg: MoECfg, x: jax.Array
                                   L.MLPCfg(d, sf * cfg.num_shared,
                                            cfg.activation), x2d)
         for ax in data_axes:
-            aux = jax.lax.psum(aux, ax) / jax.lax.psum(1, ax)
+            aux = cc.pmean(aux, ax)
         return y.reshape(b_loc, s, d), aux
 
     needed = {k: params[k] for k in pspecs}

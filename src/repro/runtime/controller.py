@@ -7,9 +7,12 @@ injected device-loss events feed a supervisor that
   1. restores the latest atomic checkpoint,
   2. plans the surviving mesh (``plan_mesh_shape`` -> ``make_mesh``),
   3. re-meshes optimizer + param state onto it,
-  4. re-inits the engine so the ``Topology.fingerprint()`` invalidation
-     rule rebuilds the ``CommPlan`` (and the re-traced step rebuilds the
-     bucket layout), and
+  4. calls ``Session.remesh`` on the communication session — the
+     ``Topology.fingerprint()`` invalidation rule rebuilds the
+     ``CommPlan``, every outstanding persistent handle is revoked and
+     rebound against the survivor topology (the re-traced step rebuilds
+     the bucket layout) — the controller is the communicator lifecycle
+     owner and this is the ONE invalidation path, and
   5. resumes the step loop at the recorded step.
 
 Determinism contract: the data pipeline is a pure function of step and
@@ -168,9 +171,13 @@ class ElasticController:
     """Supervised elastic training loop over a ``TrainSession``.
 
     ``mesh`` is the initial topology; its device list is the pool faults
-    draw from.  ``engine`` (composed/compressed sync) is re-``init``-ed on
-    every topology change — the fingerprint rule decides whether the
-    ``CommPlan`` rebuilds.  ``fault_plan`` injects deterministic failures;
+    draw from.  ``comm`` (composed/compressed sync) is a ``repro.comm.
+    Session`` — the controller owns its lifecycle and calls
+    ``comm.remesh`` on every topology change: the fingerprint rule
+    decides whether the ``CommPlan`` rebuilds, and outstanding persistent
+    handles are revoked + rebound against the survivors.  ``engine`` (a
+    bare ``CollectiveEngine``) is the pre-PR-4 spelling, adopted into a
+    session internally.  ``fault_plan`` injects deterministic failures;
     with none, this is a plain fault-*tolerant* driver (watchdog + atomic
     checkpoints) that a real device error would steer the same way.
     """
@@ -179,6 +186,7 @@ class ElasticController:
                  total_steps: int,
                  ckpt_dir: str,
                  engine=None,
+                 comm=None,
                  ckpt_every: int = 10,
                  ckpt_keep: int = 3,
                  fault_plan: Optional[FaultPlan] = None,
@@ -188,7 +196,14 @@ class ElasticController:
                  on_step: Optional[Callable[[int, float], None]] = None):
         self.session = session
         self.dataset = dataset
-        self.engine = engine
+        if comm is not None and engine is not None:
+            raise ValueError("pass comm= (repro.comm.Session) or the "
+                             "legacy engine=, not both")
+        if comm is None and engine is not None:
+            from repro import comm as comm_mod   # lazy: breaks the cycle
+            comm = comm_mod.Session.adopt(engine, mesh)
+        self.comm = comm
+        self.engine = comm.engine if comm is not None else None
         self.total_steps = total_steps
         self.fault_plan = fault_plan or FaultPlan()
         self.max_recoveries = max_recoveries
@@ -235,11 +250,16 @@ class ElasticController:
                                             devices=devs[:n])
 
     def _bind(self, mesh) -> None:
-        """Bind every mesh-dependent piece: step fn, engine plan, report."""
+        """Bind every mesh-dependent piece: step fn, comm session (plan +
+        persistent handles), report.  ``Session.remesh`` is the one
+        invalidation path — engine re-init, CommPlan fingerprint rule,
+        handle revoke/rebind all happen in there."""
         self.mesh = mesh
-        if self.engine is not None:
-            self.engine.init(mesh)
-        step_fn = self.session.step_fn(mesh=mesh, engine=self.engine)
+        if self.comm is not None:
+            self.comm.remesh(mesh)
+        step_fn = self.session.step_fn(
+            mesh=mesh,
+            comm=self.comm.world if self.comm is not None else None)
         self._jstep = jax.jit(step_fn, donate_argnums=0)
         shape = tuple(dict(mesh.shape).values())
         if not self.report.mesh_history \

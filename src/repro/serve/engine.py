@@ -4,10 +4,18 @@
 long_500k dry-run shapes lower exactly this function); the scheduler keeps
 the slot batch full by admitting queued requests into finished slots —
 continuous batching at fixed shapes (no recompilation).
+
+Device placement goes through the ``repro.comm`` facade: pass ``comm=``
+(a ``repro.comm.Communicator``, e.g. ``Session(mesh=...).world``) and
+every prefill/decode step runs under the session's mesh, so sharded
+params and caches keep their placement — the serving path's piece of the
+one-entity contract (its elastic re-mesh is a ROADMAP open item; the
+session is the hook it will land on).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -45,24 +53,32 @@ def make_decode_step(model, cfg: ServeCfg) -> Callable:
     return decode_step
 
 
+def _mesh_scope(comm) -> contextlib.AbstractContextManager:
+    """The communicator's mesh context (no-op without a communicator)."""
+    return comm.session.activate() if comm is not None \
+        else contextlib.nullcontext()
+
+
 def generate(model, params, prompts: jax.Array, max_new: int,
-             cfg: Optional[ServeCfg] = None) -> jax.Array:
+             cfg: Optional[ServeCfg] = None, comm=None) -> jax.Array:
     """Simple batched greedy generation (examples / tests).
 
-    prompts: (B, S) int32 -> (B, S + max_new).
+    prompts: (B, S) int32 -> (B, S + max_new).  ``comm``: run under a
+    ``repro.comm`` session's mesh (sharded params/caches).
     """
     b, s = prompts.shape
     cfg = cfg or ServeCfg(max_len=s + max_new, batch=b)
-    caches = model.init_caches(b, cfg.max_len, dtype=cfg.cache_dtype)
-    logits, caches = model.prefill(params, {"tokens": prompts}, caches)
-    decode = jax.jit(make_decode_step(model, cfg))
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [tok]
-    rng = jax.random.PRNGKey(0)
-    for _ in range(max_new - 1):
-        tok, caches, rng = decode(params, tok[:, None], caches, rng)
-        out.append(tok)
-    return jnp.concatenate([prompts, jnp.stack(out, axis=1)], axis=1)
+    with _mesh_scope(comm):
+        caches = model.init_caches(b, cfg.max_len, dtype=cfg.cache_dtype)
+        logits, caches = model.prefill(params, {"tokens": prompts}, caches)
+        decode = jax.jit(make_decode_step(model, cfg))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [tok]
+        rng = jax.random.PRNGKey(0)
+        for _ in range(max_new - 1):
+            tok, caches, rng = decode(params, tok[:, None], caches, rng)
+            out.append(tok)
+        return jnp.concatenate([prompts, jnp.stack(out, axis=1)], axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -117,14 +133,16 @@ class BatchScheduler:
     one fused step for all slots.
     """
 
-    def __init__(self, model, params, cfg: ServeCfg):
+    def __init__(self, model, params, cfg: ServeCfg, comm=None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.comm = comm          # repro.comm Communicator (mesh owner)
         self.queue: deque = deque()
         self.slots: List[Optional[Request]] = [None] * cfg.batch
-        self.caches = model.init_caches(cfg.batch, cfg.max_len,
-                                        dtype=cfg.cache_dtype)
+        with _mesh_scope(comm):
+            self.caches = model.init_caches(cfg.batch, cfg.max_len,
+                                            dtype=cfg.cache_dtype)
         self._decode = jax.jit(make_decode_step(model, cfg))
         self._next_tok = jnp.zeros((cfg.batch,), jnp.int32)
         self._rng = jax.random.PRNGKey(0)
@@ -163,14 +181,16 @@ class BatchScheduler:
                 break
 
     def step(self) -> int:
-        """Admit + one decode step for all active slots.  Returns number of
-        active requests."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        if not active:
-            return 0
-        nxt, self.caches, self._rng = self._decode(
-            self.params, self._next_tok[:, None], self.caches, self._rng)
+        """Admit + one decode step for all active slots (under the comm
+        session's mesh when one was given).  Returns number of active
+        requests."""
+        with _mesh_scope(self.comm):
+            self._admit()
+            active = [i for i, s in enumerate(self.slots) if s is not None]
+            if not active:
+                return 0
+            nxt, self.caches, self._rng = self._decode(
+                self.params, self._next_tok[:, None], self.caches, self._rng)
         self._next_tok = nxt
         for i in active:
             req = self.slots[i]

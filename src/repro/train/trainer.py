@@ -1,4 +1,5 @@
-"""Training step: microbatched grad accumulation + engine-mediated sync.
+"""Training step: microbatched grad accumulation + communicator-mediated
+sync.
 
 Three gradient-synchronisation modes (the paper's A/B/C):
 
@@ -6,16 +7,23 @@ Three gradient-synchronisation modes (the paper's A/B/C):
                inserts every collective (the conventional generic stack).
   composed   — the loss/grad computation runs inside ``substrate.shard_map``
                manual over the data axes (model axes stay auto); gradients
-               are synced by the CollectiveEngine's per-function protocols
-               (ring / two-phase / hierarchical — cost-model-selected).
+               are synced through a ``repro.comm`` communicator whose
+               per-function protocols are cost-model-selected
+               (ring / two-phase / hierarchical).
   compressed — composed + int8 error-feedback compressed all-reduce
                (feature injected in the protocol, paper §4); the EF
                residual lives in the train state and persists across steps.
 
+Distributed work routes through the Sessions-style facade: pass
+``comm=`` (a ``repro.comm.Communicator``, usually ``session.world``) to
+``make_train_step``; the step splits it into the data-axis
+sub-communicator internally.  ``mesh=``+``engine=`` is the pre-PR-4
+spelling, adopted into a session-less communicator for back-compat.
+
 Gradient bucketing (``TrainCfg.bucket_grads``) is a beyond-paper
 optimization: leaves are grouped by dtype (bf16 stays bf16 on the wire)
 and fused into buckets of at most ``TrainCfg.bucket_bytes``, each an
-independent cost-model-planned collective (``engine.
+independent cost-model-planned collective (``comm.
 sync_gradients_bucketed``) so the alpha term amortizes and XLA overlaps
 the buckets.
 """
@@ -30,9 +38,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import comm as comm_mod
 from repro.core import plan as plan_mod
 from repro.core.compression import EFState, bucket_ef_zeros
-from repro.core.engine import CollectiveEngine
 from repro.runtime import substrate
 
 Params = Any
@@ -159,30 +167,29 @@ def _accumulate_grads(loss_fn: Callable, params, batch, n_micro: int,
 
 
 # ---------------------------------------------------------------------------
-# Gradient sync flavours (both route mean-scaling through engine.mean_scale)
+# Gradient sync flavours (both route mean-scaling through comm.mean_scale)
 # ---------------------------------------------------------------------------
 
-def _bucket_sync(engine: CollectiveEngine, grads, axes, compress, ef,
+def _bucket_sync(dcomm: "comm_mod.Communicator", grads, compress, ef,
                  bucket_bytes):
     """Fused dtype-grouped buckets: amortizes the alpha term across each
     bucket's leaves while keeping bf16 gradients bf16 on the wire."""
-    return engine.sync_gradients_bucketed(
-        grads, axes, mean=True, bucket_bytes=bucket_bytes,
+    return dcomm.sync_gradients_bucketed(
+        grads, mean=True, bucket_bytes=bucket_bytes,
         compress=compress, ef_state=ef)
 
 
-def _leaf_sync(engine: CollectiveEngine, grads, axes, compress, ef_tree):
+def _leaf_sync(dcomm: "comm_mod.Communicator", axis_comms, grads, compress,
+               ef_tree):
     if not compress:
-        synced, _ = engine.sync_gradients(
-            grads, axes if len(axes) > 1 else axes[0], mean=True)
+        synced, _ = dcomm.sync_gradients(grads, mean=True)
         return synced, ef_tree
     ef_states = jax.tree_util.tree_map(lambda r: EFState(residual=r), ef_tree)
-    synced, new_states = engine.sync_gradients(
-        grads, axes[0], mean=True, compress=True, ef_state=ef_states)
-    for ax in axes[1:]:
+    synced, new_states = axis_comms[0].sync_gradients(
+        grads, mean=True, compress=True, ef_state=ef_states)
+    for acomm in axis_comms[1:]:
         synced = jax.tree_util.tree_map(
-            lambda g: engine.all_reduce(g, ax) * engine.mean_scale(ax),
-            synced)
+            lambda g, _c=acomm: _c.all_reduce(g, mean=True), synced)
     new_ef = jax.tree_util.tree_map(
         lambda s: s.residual, new_states,
         is_leaf=lambda x: isinstance(x, EFState))
@@ -194,9 +201,15 @@ def _leaf_sync(engine: CollectiveEngine, grads, axes, compress, ef_tree):
 # ---------------------------------------------------------------------------
 
 def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
-                    mesh=None, engine: Optional[CollectiveEngine] = None
+                    mesh=None, engine=None,
+                    comm: Optional["comm_mod.Communicator"] = None
                     ) -> Callable:
-    """Returns train_step(state, batch) -> (state, metrics)."""
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Composed/compressed modes need a communicator: pass ``comm=``
+    (normally ``session.world`` from a ``repro.comm.Session``).  The
+    legacy ``mesh=``+``engine=`` pair still works and is adopted into a
+    communicator internally."""
 
     def loss_fn(p, b):
         return model.loss(p, b)
@@ -214,12 +227,29 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
 
     if cfg.sync_mode not in ("composed", "compressed"):
         raise ValueError(cfg.sync_mode)
-    if mesh is None or engine is None:
-        raise ValueError("composed mode needs mesh + engine")
+    if comm is None:
+        if mesh is None or engine is None:
+            raise ValueError("composed mode needs comm= (repro.comm "
+                             "Communicator) or the legacy mesh= + engine=")
+        comm = comm_mod.Session.adopt(engine, mesh).world
+    if mesh is None:
+        mesh = comm.mesh
+    if mesh is None:
+        raise ValueError("the communicator's session has no mesh; "
+                         "pass mesh= explicitly")
 
     compress = cfg.sync_mode == "compressed"
     data_axes = tuple(a for a in cfg.data_axes if a in mesh.axis_names)
+    if not data_axes:
+        raise ValueError(
+            f"sync_mode={cfg.sync_mode!r} has nothing to sync over: none "
+            f"of cfg.data_axes={cfg.data_axes} exist in the mesh axes "
+            f"{tuple(mesh.axis_names)}")
     manual = set(data_axes)
+    dcomm = comm.split(*data_axes)
+    # per-axis sub-communicators: the loss reduction and the compressed
+    # path's cross-axis stage are sequential single-axis collectives.
+    axis_comms = tuple(comm.split(a) for a in data_axes)
 
     def train_step(state, batch):
         bspecs = batch_specs(batch, data_axes)
@@ -235,14 +265,14 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
                 cfg.grad_dtype)
             ef = st.get("ef")
             if cfg.bucket_grads:
-                grads, new_ef = _bucket_sync(engine, grads, data_axes,
-                                             compress, ef, cfg.bucket_bytes)
+                grads, new_ef = _bucket_sync(dcomm, grads, compress, ef,
+                                             cfg.bucket_bytes)
             else:
-                grads, new_ef = _leaf_sync(engine, grads, data_axes,
+                grads, new_ef = _leaf_sync(dcomm, axis_comms, grads,
                                            compress, ef)
-            for ax in data_axes:
-                loss = engine.all_reduce(loss, ax)
-            loss = loss * engine.mean_scale(data_axes)
+            for acomm in axis_comms:
+                loss = acomm.all_reduce(loss)
+            loss = loss * dcomm.mean_scale()
             new_params, new_opt, om = optimizer.update(
                 grads, st["opt"], st["params"])
             new_state = {"params": new_params, "opt": new_opt,
@@ -287,12 +317,13 @@ class TrainSession:
         return make_train_state(self.model, self.optimizer, rng,
                                 cfg=self.cfg)
 
-    def step_fn(self, mesh=None, engine: Optional[CollectiveEngine] = None
-                ) -> Callable:
-        """Build the (mesh, engine)-bound train step for the current
-        topology; called again after every re-mesh."""
+    def step_fn(self, mesh=None, engine=None,
+                comm: Optional["comm_mod.Communicator"] = None) -> Callable:
+        """Build the topology-bound train step (pass ``comm=`` — the
+        session's world communicator — or the legacy mesh+engine pair);
+        called again after every re-mesh."""
         return make_train_step(self.model, self.optimizer, self.cfg,
-                               mesh=mesh, engine=engine)
+                               mesh=mesh, engine=engine, comm=comm)
 
     def batch_axes(self) -> Tuple[str, ...]:
         """Axes the data pipeline shards batches over (filtered to the

@@ -1,0 +1,53 @@
+"""tools/check_api.py wired into tier-1: the repo's own training/serving/
+elastic paths must route distributed work through repro.comm — no
+CollectiveEngine construction and no direct jax.lax collectives outside
+src/repro/core and src/repro/comm."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools"))
+
+import check_api
+
+
+def test_repo_is_clean():
+    violations = check_api.check_paths(check_api.DEFAULT_ROOTS)
+    assert not violations, "\n".join(violations)
+
+
+def test_lint_catches_engine_construction():
+    bad = "from repro.core import CollectiveEngine\n" \
+          "e = CollectiveEngine(topo)\n"
+    out = check_api.check_source(bad, "x.py")
+    assert len(out) == 1 and "CollectiveEngine" in out[0]
+
+    bad2 = "import repro.core.engine as E\n" \
+           "e = E.CollectiveEngine(topo)\n"
+    assert check_api.check_source(bad2, "x.py")
+
+    bad3 = "e = CollectiveEngine.monolithic(topo)\n"
+    out3 = check_api.check_source(bad3, "x.py")
+    assert out3 and "monolithic" in out3[0]
+
+
+def test_lint_catches_lax_collectives():
+    for snippet in ("import jax\ny = jax.lax.psum(x, 'data')\n",
+                    "from jax import lax\ny = lax.all_gather(x, 'd')\n",
+                    "from jax import lax\ni = lax.axis_index('model')\n",
+                    "from jax.lax import psum\ny = psum(x, 'data')\n",
+                    "from jax.lax import psum as p\ny = p(x, 'data')\n",
+                    "import jax.lax as jl\ny = jl.psum(x, 'data')\n"):
+        assert check_api.check_source(snippet, "x.py"), snippet
+    # non-collective lax stays allowed
+    ok = "import jax\ny = jax.lax.scan(f, c, xs)\n" \
+         "z = jax.lax.dynamic_update_slice_in_dim(a, b, 0, axis=0)\n"
+    assert not check_api.check_source(ok, "x.py")
+
+
+def test_lint_exempts_core_and_comm():
+    core = [v for v in check_api.check_paths(["src/repro/core"])]
+    assert core == []          # exempt prefix: nothing reported
+    comm = [v for v in check_api.check_paths(["src/repro/comm"])]
+    assert comm == []

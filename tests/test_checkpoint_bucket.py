@@ -1,0 +1,74 @@
+"""Satellite bugfix (PR 4): restoring a compressed+bucketed checkpoint
+with a different ``bucket_bytes`` used to die on an opaque leaf-count
+mismatch; restore now names the two bucket layouts."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import restore_checkpoint, save_checkpoint
+from repro.core import plan as plan_mod
+from repro.core.compression import bucket_ef_zeros
+
+
+def _state(ef):
+    return {"ef": ef,
+            "params": {"w": np.ones((4, 4), np.float32)},
+            "opt": {"m": np.zeros((4, 4), np.float32)},
+            "step": np.int32(3)}
+
+
+def _abstract(ef_abs):
+    return {"ef": ef_abs,
+            "params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)},
+            "opt": {"m": jax.ShapeDtypeStruct((4, 4), jnp.float32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _ef_layout(bucket_bytes, abstract=False):
+    """EF residual layout exactly as the trainer builds it: plan_buckets
+    over the gradient leaves at the given bucket_bytes."""
+    leaves = [jax.ShapeDtypeStruct((600,), jnp.float32),
+              jax.ShapeDtypeStruct((200,), jnp.float32)]
+    buckets = plan_mod.plan_buckets(leaves, bucket_bytes)
+    return bucket_ef_zeros(buckets, abstract=abstract)
+
+
+def test_bucket_bytes_mismatch_raises_named_layouts():
+    tmp = tempfile.mkdtemp()
+    saved_ef = tuple(np.asarray(e) for e in _ef_layout(4 * 1024))  # 1 bucket
+    save_checkpoint(tmp, 3, _state(saved_ef))
+
+    smaller = _ef_layout(1024, abstract=True)      # more, smaller buckets
+    assert len(smaller) != len(saved_ef)
+    with pytest.raises(ValueError) as err:
+        restore_checkpoint(tmp, _abstract(smaller), step=3)
+    msg = str(err.value)
+    assert "bucket" in msg and "bucket_bytes" in msg
+    saved_sizes = [int(e.shape[0]) for e in saved_ef]
+    expected_sizes = [int(e.shape[0]) for e in smaller]
+    assert str(saved_sizes) in msg and str(expected_sizes) in msg
+
+
+def test_matching_bucket_bytes_roundtrips():
+    tmp = tempfile.mkdtemp()
+    ef = tuple(np.asarray(e) for e in _ef_layout(1024))
+    save_checkpoint(tmp, 3, _state(ef))
+    restored = restore_checkpoint(
+        tmp, _abstract(_ef_layout(1024, abstract=True)), step=3)
+    assert len(restored["ef"]) == len(ef)
+    for a, b in zip(restored["ef"], ef):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+def test_non_ef_structure_change_keeps_generic_error():
+    tmp = tempfile.mkdtemp()
+    save_checkpoint(tmp, 3, _state(tuple(np.asarray(e)
+                                         for e in _ef_layout(1024))))
+    bad = {"params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError, match="structure changed"):
+        restore_checkpoint(tmp, bad, step=3)

@@ -1,0 +1,333 @@
+"""Sessions-style communicator facade (PR 4): session/communicator
+construction, split semantics, persistent handles (bind-time resolution,
+zero-lookup dispatch, revoke/rebind lifecycle), the model-internal
+collectives facade, and the CollectiveEngine deprecation shims."""
+
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm as comm_mod
+from repro.comm import collectives as cc
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        registry, topology_from_mesh_shape)
+from repro.runtime import substrate
+
+AX = "data"
+P_AX = 8
+
+
+@pytest.fixture
+def sess():
+    return comm_mod.Session(
+        topology=topology_from_mesh_shape((AX, "model"), (P_AX, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Session + communicator basics
+# ---------------------------------------------------------------------------
+
+def test_world_and_split(sess):
+    w = sess.world
+    assert w.axes == (AX, "model")
+    d = sess.split(AX)
+    assert d.axes == (AX,) and d.size == P_AX
+    assert w.size == P_AX * 2
+    with pytest.raises(ValueError):
+        sess.split("nope")
+    with pytest.raises(ValueError):
+        sess.split()
+    # multi-axis communicators refuse single-axis-only collectives
+    with pytest.raises(ValueError, match="single-axis"):
+        w.all_gather(np.zeros(4, np.float32))
+
+
+def test_session_needs_some_topology():
+    with pytest.raises(ValueError):
+        comm_mod.Session()
+    with pytest.raises(ValueError, match="axis_names"):
+        comm_mod.Session((1, 1))
+
+
+def test_communicator_collectives_match_lax(sess, rng):
+    d = sess.split(AX)
+    x = rng.randn(P_AX, 33).astype(np.float32)
+    out = jax.vmap(d.all_reduce, axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(x.sum(0), x.shape),
+                               rtol=1e-4, atol=1e-5)
+    out = jax.vmap(lambda v: d.all_reduce(v, mean=True), axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(x.mean(0), x.shape),
+                               rtol=1e-4, atol=1e-6)
+    idx = jax.vmap(lambda v: d.axis_index() + 0 * v[0], axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(idx), np.arange(P_AX))
+
+
+def test_sync_gradients_via_communicator(sess, rng):
+    d = sess.split(AX)
+    grads = {"a": rng.randn(P_AX, 6).astype(np.float32),
+             "b": rng.randn(P_AX, 3, 4).astype(np.float32)}
+    synced, _ = jax.vmap(lambda g: d.sync_gradients(g), axis_name=AX,
+                         out_axes=(0, None))(grads)
+    for k in grads:
+        np.testing.assert_allclose(
+            np.asarray(synced[k]),
+            np.broadcast_to(grads[k].mean(0), grads[k].shape), rtol=1e-5)
+    bucketed = jax.vmap(lambda g: d.sync_gradients_bucketed(g)[0],
+                        axis_name=AX)(grads)
+    for k in grads:
+        np.testing.assert_allclose(
+            np.asarray(bucketed[k]),
+            np.broadcast_to(grads[k].mean(0), grads[k].shape), rtol=1e-5)
+
+
+def test_session_mode_monolithic():
+    s = comm_mod.Session(
+        topology=topology_from_mesh_shape((AX,), (P_AX,)),
+        mode="monolithic")
+    assert not s.engine.composed
+    # conventional stack: every function at the conventional tier
+    assert s.average_layer_number() == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Persistent handles
+# ---------------------------------------------------------------------------
+
+def test_persistent_handle_matches_dynamic_call(sess, rng):
+    d = sess.split(AX)
+    x = rng.randn(P_AX, 33).astype(np.float32)
+    h = d.persistent("all_reduce", (33,), jnp.float32, mean=True)
+    got = jax.vmap(h, axis_name=AX)(x)
+    want = jax.vmap(lambda v: d.all_reduce(v, mean=True), axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    # the bound protocol is exactly what the plan would pick per call
+    assert h.protocols[0][1] == sess.engine.protocol_for(
+        "all_reduce", 33 * 4, AX)
+    # broadcast handle (checked tier) keeps tier semantics
+    hb = d.persistent("broadcast", (16,), jnp.float32, root=3)
+    got = jax.vmap(hb, axis_name=AX)(x[:, :16])
+    np.testing.assert_allclose(np.asarray(got),
+                               np.broadcast_to(x[3, :16], (P_AX, 16)))
+    assert hb.binding.tier >= 2
+
+
+def test_persistent_handle_lowers_average_layer_number(sess):
+    base = sess.engine.average_layer_number()
+    assert sess.average_layer_number() == pytest.approx(base)
+    d = sess.split(AX)
+    h = d.persistent("broadcast", (1024,), jnp.float32)  # L2 fn -> L0 handle
+    assert sess.handles == (h,)
+    assert sess.average_layer_number() < base
+    assert sess.average_layer_number(include_handles=False) \
+        == pytest.approx(base)
+
+
+def test_persistent_dispatch_faster_than_planned_lookup(sess):
+    """Acceptance: a bound handle dispatches faster than the plan-table
+    dict lookup (EngineConfig(plan=True)).  Min-of-batch timings + retries
+    keep loaded CI boxes from flaking."""
+    eng = sess.engine
+    d = sess.split(AX)
+    h = d.persistent("all_reduce", (1 << 18,), jnp.float32)
+    nb = (1 << 18) * 4
+
+    def planned():
+        eng.protocol_for("all_reduce", nb, AX)
+        eng.dispatcher("all_reduce")
+
+    def best_us(fn, batches=30, per_batch=50):
+        for _ in range(10):
+            fn()
+        best = float("inf")
+        for _ in range(batches):
+            t0 = time.perf_counter_ns()
+            for _ in range(per_batch):
+                fn()
+            best = min(best, (time.perf_counter_ns() - t0) / 1e3 / per_batch)
+        return best
+
+    ratios = []
+    for _ in range(5):
+        us_plan = best_us(planned)
+        us_handle = best_us(h.dispatch)
+        ratios.append(us_plan / us_handle)
+        if ratios[-1] > 1.0:
+            return
+    raise AssertionError(f"persistent dispatch not faster than planned "
+                         f"lookup: {[f'{r:.2f}' for r in ratios]}")
+
+
+def test_handle_revoke_rebind_on_remesh(rng):
+    s = comm_mod.Session(
+        topology=topology_from_mesh_shape((AX, "model"), (P_AX, 2)))
+    d = s.split(AX)
+    h = d.persistent("all_reduce", (33,), jnp.float32, mean=True)
+    fp0 = h.binding.fingerprint
+    assert h.epoch == 1 and h.revocations == 0
+
+    # fingerprint-changing remesh: revoked AND rebound against survivors
+    mesh1 = substrate.make_mesh((1, 1), (AX, "model"))
+    assert s.remesh(mesh1)            # plan rebuilt
+    assert s.generation == 1
+    assert h.revocations == 1 and h.epoch == 2 and not h.revoked
+    assert h.binding.fingerprint != fp0
+    y = h(jnp.ones((33,)))            # p==1 after shrink: identity * 1.0
+    np.testing.assert_allclose(np.asarray(y), np.ones(33))
+
+    # same-mesh re-init: handles rebind (fresh stats) but no revocation
+    assert not s.remesh(mesh1)
+    assert h.revocations == 1 and h.epoch == 3
+
+    # axis disappears: handle stays revoked, calling raises
+    mesh2 = substrate.make_mesh((1,), ("model",))
+    s.remesh(mesh2)
+    assert h.revoked
+    with pytest.raises(comm_mod.HandleRevokedError):
+        h(jnp.ones((33,)))
+    with pytest.raises(comm_mod.HandleRevokedError):
+        h.dispatch()
+
+
+def test_finalized_session_revokes_handles(sess):
+    d = sess.split(AX)
+    h = d.persistent("all_reduce", (8,), jnp.float32)
+    summary = sess.finalize()
+    assert isinstance(summary, str)
+    assert h.revoked
+    with pytest.raises(comm_mod.SessionFinalizedError):
+        d.persistent("all_reduce", (8,), jnp.float32)
+    mesh = substrate.make_mesh((1, 1), (AX, "model"))
+    with pytest.raises(comm_mod.SessionFinalizedError):
+        sess.remesh(mesh)
+
+
+def test_persistent_rejects_unknown_axis_and_fn(sess):
+    d = sess.split(AX)
+    with pytest.raises(ValueError):
+        d.persistent("checkpoint_fence", (8,), jnp.float32)
+    with pytest.raises(ValueError, match="mean"):
+        d.persistent("broadcast", (8,), jnp.float32, mean=True)
+
+
+def test_train_step_without_data_axes_raises_clearly():
+    """Composed sync on a mesh with none of cfg.data_axes is a config
+    error named as such (not a bare communicator complaint)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+    from repro.train import TrainCfg, make_train_step
+    mesh = substrate.make_mesh((1,), ("model",))
+    s = comm_mod.Session(mesh=mesh)
+    model = build_model(get_config("granite-34b", reduced=True))
+    with pytest.raises(ValueError, match="nothing to sync"):
+        make_train_step(model, make_optimizer("adamw"),
+                        TrainCfg(sync_mode="composed",
+                                 data_axes=("pod", "data")),
+                        comm=s.world)
+
+
+# ---------------------------------------------------------------------------
+# Session.from_application (§2.2 through the facade)
+# ---------------------------------------------------------------------------
+
+def test_from_application_composes_thin_library():
+    mesh = substrate.make_mesh((1,), (AX,))
+
+    def step(v):
+        return jax.lax.psum(v, AX)
+
+    s = comm_mod.Session.from_application(
+        lambda v: jax.vmap(step, axis_name=AX)(v),
+        np.zeros((8, 4), np.float32), mesh=mesh)
+    assert s.trace_report is not None
+    lib = s.engine.library
+    assert lib.supports(registry.ALL_REDUCE)
+    assert lib.supports(registry.INIT)
+    # thin: strictly fewer blocks than the full library
+    assert lib.m < compose_library(registry.ALL_FUNCTIONS).m
+    mono = comm_mod.Session(
+        topology=topology_from_mesh_shape((AX,), (8,)), mode="monolithic")
+    assert s.average_layer_number() < mono.average_layer_number()
+
+
+# ---------------------------------------------------------------------------
+# Model-internal collectives facade (what moe.py routes through)
+# ---------------------------------------------------------------------------
+
+def test_collectives_facade_matches_lax(rng):
+    x = rng.randn(4, 9).astype(np.float32)
+    out = jax.vmap(lambda v: cc.psum(v, "m"), axis_name="m")(x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(x.sum(0), x.shape), rtol=1e-5)
+    out = jax.vmap(lambda v: cc.pmean(v, "m"), axis_name="m")(x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(x.mean(0), x.shape),
+                               rtol=1e-5)
+    ag = jax.vmap(lambda v: cc.all_gather(v, "m", dim=0), axis_name="m")(x)
+    assert ag.shape == (4, 36)
+    idx = jax.vmap(lambda v: cc.axis_index("m") + 0 * v[0], axis_name="m")(x)
+    np.testing.assert_allclose(np.asarray(idx), np.arange(4))
+
+
+def test_collectives_install_session(rng):
+    s = comm_mod.Session(topology=topology_from_mesh_shape(("m",), (4,)))
+    cc.install(s)
+    try:
+        x = rng.randn(4, 9).astype(np.float32)
+        out = jax.vmap(lambda v: cc.psum(v, "m"), axis_name="m")(x)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.broadcast_to(x.sum(0), x.shape),
+                                   rtol=1e-4, atol=1e-5)
+        assert s.engine.stats.calls["all_reduce"] >= 0  # routed through it
+    finally:
+        cc.install(None)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: old constructors keep working, point at repro.comm
+# ---------------------------------------------------------------------------
+
+def test_deprecated_monolithic_warns_and_matches(rng):
+    topo = topology_from_mesh_shape((AX,), (P_AX,))
+    with pytest.warns(DeprecationWarning, match="repro.comm"):
+        old = CollectiveEngine.monolithic(topo)
+    new = comm_mod.Session(topology=topo, mode="monolithic").engine
+    assert old.config.mode == new.config.mode == "monolithic"
+    assert old.average_layer_number() == new.average_layer_number()
+    x = rng.randn(P_AX, 16).astype(np.float32)
+    a = jax.vmap(lambda v: old.all_reduce(v, AX), axis_name=AX)(x)
+    b = jax.vmap(lambda v: new.all_reduce(v, AX), axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_deprecated_for_mesh_warns_and_matches():
+    mesh = substrate.make_mesh((1,), (AX,))
+    with pytest.warns(DeprecationWarning, match="repro.comm"):
+        old = CollectiveEngine.for_mesh(
+            mesh, library=compose_library(registry.ALL_FUNCTIONS),
+            config=EngineConfig())
+    new = comm_mod.Session(mesh=mesh).engine
+    assert old.topology.fingerprint() == new.topology.fingerprint()
+    assert old.library.provided == new.library.provided
+
+
+def test_deprecated_from_application_warns_and_matches():
+    topo = topology_from_mesh_shape((AX,), (P_AX,))
+
+    def step(v):
+        return jax.lax.psum(v, AX)
+
+    tracer = lambda v: jax.vmap(step, axis_name=AX)(v)
+    args = (np.zeros((8, 4), np.float32),)
+    with pytest.warns(DeprecationWarning, match="repro.comm"):
+        old = CollectiveEngine.from_application(tracer, *args, topology=topo)
+    mesh = substrate.make_mesh((1,), (AX,))
+    new = comm_mod.Session.from_application(tracer, *args, mesh=mesh).engine
+    assert old.library.blocks == new.library.blocks
+    assert old.library.provided == new.library.provided

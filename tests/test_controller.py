@@ -79,6 +79,87 @@ print("OK bit-identical after recovery", report.losses)
 """, timeout=600)
 
 
+def test_comm_session_handles_revoked_rebound_bit_identical():
+    """PR 4 contract: the controller is the communicator lifecycle owner.
+    A persistent handle bound pre-shrink is revoked on the lose-recovery
+    and rebound against the survivor topology via the one invalidation
+    path (Session.remesh / fingerprint rule), and the facade-built run
+    stays bit-identical to the PR 3 baseline on the surviving mesh."""
+    run_subprocess_script("""
+import tempfile
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro import comm as comm_mod
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, TrainSession
+from repro.checkpoint.manager import restore_checkpoint
+from repro.data import SyntheticLMDataset
+from repro.runtime import ElasticController, FaultEvent, FaultPlan, substrate
+from repro.runtime.elastic import make_mesh_from_shape, remesh
+
+tmp = tempfile.mkdtemp()
+cfg = get_config("granite-34b", reduced=True)
+tcfg = TrainCfg(sync_mode="composed", data_axes=("data",))
+session = TrainSession(build_model(cfg), make_optimizer("adamw", lr=1e-3),
+                       tcfg)
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=12)
+mesh0 = substrate.make_mesh((4, 2), ("data", "model"))
+
+# everything through the facade: the session owns mesh+plan+engine, and
+# a persistent handle is bound against the PRE-shrink topology
+cs = comm_mod.Session(mesh=mesh0)
+handle = cs.split("data").persistent("all_reduce", (16,), jnp.float32,
+                                     mean=True)
+assert handle.epoch == 1 and handle.revocations == 0
+proto_before = handle.protocols
+
+ctl = ElasticController(
+    session, ds, mesh0, total_steps=8, ckpt_dir=tmp, comm=cs,
+    ckpt_every=2, ckpt_keep=0,
+    fault_plan=FaultPlan([FaultEvent(5, "lose", 2)], seed=1),
+    watchdog_timeout=600.0)
+report = ctl.run()
+
+assert len(report.recoveries) == 1, report.describe()
+rec = report.recoveries[0]
+assert rec.before_shape == (4, 2) and rec.after_shape == (3, 2)
+# invalidation contract: exactly one plan rebuild, and the handle was
+# revoked exactly once (the topology change) and rebound — not dead
+assert rec.plan_rebuilt and cs.engine.plan.stats.rebuilds == 1
+assert cs.generation == 1
+assert handle.revocations == 1 and not handle.revoked
+# data axis shrank 4 -> 3: the rebound handle's mean scale follows
+assert handle.binding.mean_scale == 1.0 / 3.0, handle.binding
+# the handle is live against the survivor topology
+x = np.ones((3, 16), np.float32)
+y = jax.vmap(handle, axis_name="data")(x)
+np.testing.assert_allclose(np.asarray(y), x)
+
+# PR 3 determinism contract, through the facade: train the 6 survivors
+# from the restored checkpoint with a fresh session — bit-identical.
+surv = [d for d in jax.devices() if d.id in rec.healthy_after]
+mesh6 = make_mesh_from_shape((3, 2), devices=surv)
+cs6 = comm_mod.Session(mesh=mesh6)
+state = restore_checkpoint(tmp, session.abstract_state(), step=4)
+state = remesh(state, session.state_specs(), mesh6)
+losses = {}
+with cs6.activate():
+    jstep = jax.jit(session.step_fn(mesh=mesh6, comm=cs6.world),
+                    donate_argnums=0)
+    for s in range(4, 8):
+        batch = ds.sharded_batch(s, mesh6, batch_axes=("data",))
+        state, metrics = jstep(state, batch)
+        losses[s] = float(metrics["loss"])
+for s in range(4, 8):
+    assert losses[s] == report.losses[s], (s, losses[s], report.losses[s])
+print("OK comm-session handle lifecycle + bit-identical", report.losses)
+""", timeout=600)
+
+
 def test_shrink_shrink_grow_and_straggler_noop():
     run_subprocess_script("""
 import tempfile

@@ -1,0 +1,152 @@
+#!/usr/bin/env python
+"""API-boundary lint: the Sessions-style facade is the ONLY public way to
+do distributed work (PR 4 contract).
+
+Enforced, for every Python file under ``src/repro`` and ``examples``
+EXCEPT the implementation layers ``src/repro/core`` and ``src/repro/comm``:
+
+  1. no construction of a ``CollectiveEngine`` — neither the constructor
+     nor the (deprecated) ``for_mesh`` / ``from_application`` /
+     ``monolithic`` classmethods; sessions own engines now;
+  2. no direct ``jax.lax`` collective calls (``psum``, ``all_gather``,
+     ``ppermute``, ``axis_index``, ...) — model-internal collectives go
+     through ``repro.comm.collectives``, application collectives through
+     a ``Communicator``.
+
+Pure AST walk, no imports of the checked code.  Wired into tier-1 via
+``tests/test_api_lint.py``; also runnable standalone:
+
+    python tools/check_api.py [paths...]
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Iterable, List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: jax.lax collective primitives the facade wraps.
+LAX_COLLECTIVES = frozenset({
+    "psum", "psum2", "pmean", "pmax", "pmin", "psum_scatter",
+    "all_gather", "all_to_all", "ppermute", "pshuffle", "pbroadcast",
+    "axis_index", "all_gather_invariant", "psum_invariant",
+})
+
+#: deprecated CollectiveEngine constructors (classmethod spellings).
+ENGINE_CTORS = frozenset({"for_mesh", "from_application", "monolithic"})
+
+#: path prefixes (relative to repo root, "/"-separated) that ARE the
+#: implementation and may touch engines/lax freely.
+EXEMPT = ("src/repro/core/", "src/repro/comm/")
+
+DEFAULT_ROOTS = ("src/repro", "examples")
+
+
+def _lax_aliases(tree: ast.Module) -> frozenset:
+    """Names this module binds to the ``jax.lax`` module itself
+    (``import jax.lax as jl``) — they count as lax values too."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "jax.lax" and alias.asname:
+                    names.add(alias.asname)
+    return frozenset(names)
+
+
+def _is_lax_value(node: ast.AST, aliases: frozenset) -> bool:
+    """True for the expressions ``lax``, ``jax.lax``, or a module alias."""
+    if isinstance(node, ast.Name) and (node.id == "lax"
+                                       or node.id in aliases):
+        return True
+    return (isinstance(node, ast.Attribute) and node.attr == "lax"
+            and isinstance(node.value, ast.Name) and node.value.id == "jax")
+
+
+def check_source(src: str, relpath: str) -> List[str]:
+    """Lint one file's source; returns violation strings."""
+    try:
+        tree = ast.parse(src, filename=relpath)
+    except SyntaxError as e:
+        return [f"{relpath}:{e.lineno}: syntax error: {e.msg}"]
+    out: List[str] = []
+    aliases = _lax_aliases(tree)
+    for node in ast.walk(tree):
+        # from jax.lax import psum — aliasing a collective out of lax
+        if isinstance(node, ast.ImportFrom) and node.module == "jax.lax":
+            for alias in node.names:
+                if alias.name in LAX_COLLECTIVES:
+                    out.append(f"{relpath}:{node.lineno}: imports "
+                               f"{alias.name} from jax.lax — route through "
+                               f"repro.comm (Communicator or "
+                               f"repro.comm.collectives)")
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        # CollectiveEngine(...) — direct construction
+        if isinstance(fn, ast.Name) and fn.id == "CollectiveEngine":
+            out.append(f"{relpath}:{node.lineno}: constructs a "
+                       f"CollectiveEngine — use repro.comm.Session")
+        elif isinstance(fn, ast.Attribute):
+            # <anything>.CollectiveEngine(...)
+            if fn.attr == "CollectiveEngine":
+                out.append(f"{relpath}:{node.lineno}: constructs a "
+                           f"CollectiveEngine — use repro.comm.Session")
+            # CollectiveEngine.for_mesh(...) etc.
+            elif (fn.attr in ENGINE_CTORS
+                  and isinstance(fn.value, ast.Name)
+                  and fn.value.id == "CollectiveEngine"):
+                out.append(f"{relpath}:{node.lineno}: calls CollectiveEngine"
+                           f".{fn.attr} — use repro.comm.Session")
+            # lax.psum(...) / jax.lax.psum(...) / <alias>.psum(...)
+            elif fn.attr in LAX_COLLECTIVES and _is_lax_value(fn.value,
+                                                              aliases):
+                out.append(f"{relpath}:{node.lineno}: direct jax.lax."
+                           f"{fn.attr} — route through repro.comm "
+                           f"(Communicator or repro.comm.collectives)")
+    return out
+
+
+def iter_files(roots: Iterable[str]) -> Iterable[str]:
+    for root in roots:
+        absroot = root if os.path.isabs(root) else os.path.join(REPO, root)
+        if os.path.isfile(absroot):
+            yield absroot
+            continue
+        for dirpath, _, names in os.walk(absroot):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    yield os.path.join(dirpath, name)
+
+
+def check_paths(roots: Iterable[str]) -> List[str]:
+    violations: List[str] = []
+    for path in iter_files(roots):
+        rel = os.path.relpath(path, REPO).replace(os.sep, "/")
+        if any(rel.startswith(p) for p in EXEMPT):
+            continue
+        with open(path, encoding="utf-8") as f:
+            violations.extend(check_source(f.read(), rel))
+    return violations
+
+
+def main(argv: List[str]) -> int:
+    roots = argv or list(DEFAULT_ROOTS)
+    violations = check_paths(roots)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"\ncheck_api: {len(violations)} violation(s) — distributed "
+              f"work outside repro/core + repro/comm must go through the "
+              f"repro.comm facade", file=sys.stderr)
+        return 1
+    print("check_api: OK — all paths route through repro.comm")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
