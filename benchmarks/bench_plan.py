@@ -69,11 +69,13 @@ def wire_bytes(scale: int = 1) -> dict:
 def payload(smoke: bool = False) -> dict:
     from benchmarks.bench_elastic import recovery_latency
     from benchmarks.bench_layers import dispatch_overhead, layer_numbers
+    from benchmarks.bench_overlap import overlap_metrics
     return {
         "dispatch": dispatch_overhead(repeat=100 if smoke else 300),
         "average_layer_number": layer_numbers(),
         "wire_bytes": wire_bytes(scale=1 if smoke else 4),
         "recovery": recovery_latency(smoke=smoke),
+        "overlap": overlap_metrics(smoke=smoke),
     }
 
 
@@ -103,7 +105,14 @@ def run(smoke: bool = False):
                ["phase", "ms"])
     for k in ("restore_s", "remesh_s", "replan_s", "total_s"):
         t3.add(k[:-2], f"{r[k] * 1e3:.1f}")
-    return [t, t2, t3], p
+    o = p["overlap"]
+    t4 = Table("bench_plan: comm/compute overlap (nonblocking start/wait)",
+               ["metric", "value"])
+    t4.add("blocking step", f"{o['step_us_blocking'] / 1e3:.2f} ms")
+    t4.add("overlapped step", f"{o['step_us_overlapped'] / 1e3:.2f} ms")
+    t4.add("overlap speedup", f"{o['overlap_speedup']:.3f}x")
+    t4.add("exposed comm frac", f"{o['exposed_comm_frac']:.3f}")
+    return [t, t2, t3, t4], p
 
 
 def main():

@@ -19,8 +19,44 @@ import os
 import sys
 import traceback
 
+#: every BENCH_plan.json block and the keys it must carry.  A payload
+#: missing any of them aborts the write with a nonzero exit — a partial
+#: artifact would silently corrupt the cross-PR perf trajectory.
+REQUIRED_KEYS = {
+    "dispatch": ("per_call_us", "planned_us", "persistent_us", "speedup",
+                 "persistent_speedup_vs_planned"),
+    "average_layer_number": ("monolithic", "composed",
+                             "composed_with_persistent_handles"),
+    "wire_bytes": ("bucketed_dtype_aware", "bucketed_f32_upcast",
+                   "leaf_sync", "bucketed_compressed"),
+    "recovery": ("restore_s", "remesh_s", "replan_s", "total_s"),
+    "overlap": ("exposed_comm_frac", "step_us_blocking",
+                "step_us_overlapped", "overlap_speedup"),
+}
+
+
+def validate_payload(payload: dict) -> list:
+    """Schema check for BENCH_plan.json; returns human-readable errors."""
+    errors = []
+    for block, keys in REQUIRED_KEYS.items():
+        if block not in payload:
+            errors.append(f"missing block {block!r}")
+            continue
+        for k in keys:
+            if k not in payload[block]:
+                errors.append(f"block {block!r} missing key {k!r}")
+    return errors
+
 
 def write_plan_json(payload: dict, out_path: str) -> None:
+    errors = validate_payload(payload)
+    if errors:
+        for e in errors:
+            print(f"BENCH_plan.json schema violation: {e}",
+                  file=sys.stderr, flush=True)
+        raise RuntimeError(
+            f"refusing to write partial {out_path}: "
+            f"{len(errors)} schema violation(s)")
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {out_path}", flush=True)

@@ -10,9 +10,11 @@ inside shard_map bodies).
 """
 
 from repro.comm import collectives
-from repro.comm.session import (Communicator, HandleRevokedError,
+from repro.comm.session import (Communicator, HandleInFlight,
+                                HandleRevokedError, InFlightHandleError,
                                 PersistentHandle, Session,
                                 SessionFinalizedError)
 
-__all__ = ["Communicator", "HandleRevokedError", "PersistentHandle",
-           "Session", "SessionFinalizedError", "collectives"]
+__all__ = ["Communicator", "HandleInFlight", "HandleRevokedError",
+           "InFlightHandleError", "PersistentHandle", "Session",
+           "SessionFinalizedError", "collectives"]

@@ -19,6 +19,13 @@ fix, reproduced here:
   (``MPI_*_init``-style persistent collectives), so a call is one
   attribute load + one revocation check — below even the plan-once dict
   lookup (measured in ``bench_layers`` / ``BENCH_plan.json``).
+* Nonblocking two-phase arms (MPI Advance's ``MPIX_Start``/``MPIX_Wait``):
+  ``handle.start(x)`` / ``handle.wait(token)`` and the communicator's
+  ``all_reduce_start/wait`` + ``sync_gradient_start/wait`` split every
+  collective at its pipeline seam — start launches the reduce-scatter
+  stage and returns an in-flight token, wait runs the rest and finalizes
+  — so compute issued between the two overlaps the transfer.  Blocking
+  calls compose the same stages: both paths are bit-identical.
 
 Invalidation has exactly ONE path: ``Session.remesh(mesh)`` re-``init``s
 the engine (the topology-fingerprint rule decides the CommPlan rebuild)
@@ -30,6 +37,7 @@ it is the communicator lifecycle owner.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import weakref
 from typing import Callable, Mapping, Optional, Sequence, Tuple
 
@@ -48,11 +56,31 @@ from repro.runtime import substrate
 class HandleRevokedError(RuntimeError):
     """A persistent handle was invoked after revocation (its topology is
     gone and it could not be rebound — e.g. its axis no longer exists, or
-    its session was finalized)."""
+    its session was finalized), or an in-flight token from a previous
+    binding epoch was waited after a re-mesh."""
+
+
+class InFlightHandleError(RuntimeError):
+    """A re-mesh was requested while a handle had a started-but-never-
+    waited collective.  Rebinding would silently drop that in-flight
+    reduction, so the session refuses; wait the token (or
+    ``handle.abandon_inflight()`` if the trace was discarded) first."""
 
 
 class SessionFinalizedError(RuntimeError):
     pass
+
+
+@dataclasses.dataclass
+class HandleInFlight:
+    """Comm-level in-flight token: the engine token plus the binding epoch
+    it was started under.  ``PersistentHandle.wait`` refuses tokens from a
+    stale epoch — a re-mesh between start and wait would otherwise
+    silently drop the reduction."""
+
+    handle: "PersistentHandle"
+    epoch: int
+    inner: object            # engine-level InFlight
 
 
 def _is_concrete_mesh(mesh) -> bool:
@@ -92,6 +120,7 @@ class PersistentHandle:
         self._permanent = False   # finalized session: no rebind can revive
         self.epoch = 0            # successful (re)binds
         self.revocations = 0      # fingerprint-change revocations
+        self._pending = 0         # started-but-not-yet-waited collectives
         self._bind()
 
     # -- lifecycle (driven by the owning Session) ----------------------
@@ -141,6 +170,56 @@ class PersistentHandle:
                 f"persistent {self.fn} handle is revoked "
                 f"({self._stale_reason})")
         return target
+
+    # -- the two-phase arms (MPIX_Start / MPIX_Wait) -------------------
+
+    def start(self, x) -> HandleInFlight:
+        """Launch the collective's first pipeline stage(s) and return an
+        in-flight token.  Revocation is checked ONCE, here — ``wait``
+        only validates that no re-mesh rebound the handle in between.
+        Issue unrelated compute between start and wait; XLA interleaves
+        it with the in-flight transfer."""
+        if self._target is None:
+            raise HandleRevokedError(
+                f"persistent {self.fn} handle is revoked "
+                f"({self._stale_reason}); cannot start")
+        inner = self.binding.start(x)
+        self._pending += 1
+        return HandleInFlight(handle=self, epoch=self.epoch, inner=inner)
+
+    def wait(self, token: HandleInFlight):
+        """Run the remaining stages and finalize (unpad + mean scale).
+        A token started under a previous binding epoch raises — its
+        in-flight reduction was dropped by a re-mesh and finishing it
+        against the new topology would silently return garbage."""
+        if token.handle is not self:
+            raise ValueError(f"token for {token.handle.fn} handle waited "
+                             f"on a different handle ({self.fn})")
+        if self.revoked or token.epoch != self.epoch:
+            raise HandleRevokedError(
+                f"in-flight {self.fn} collective was started under binding "
+                f"epoch {token.epoch} but the handle is now "
+                + (f"revoked ({self._stale_reason})" if self.revoked else
+                   f"at epoch {self.epoch} (re-mesh between start and "
+                   f"wait)") + " — the started reduction was dropped, "
+                "not silently completed; re-issue start() on the rebound "
+                "handle")
+        self._pending -= 1
+        return self.binding.wait(token.inner)
+
+    @property
+    def inflight(self) -> int:
+        """Started-but-never-waited collectives on the CURRENT binding
+        (trace-time count).  ``Session.remesh`` refuses to revoke a
+        handle with in-flight work."""
+        return self._pending
+
+    def abandon_inflight(self) -> int:
+        """Explicitly drop the in-flight count (e.g. after an aborted
+        trace whose tokens were discarded).  Returns how many were
+        abandoned."""
+        n, self._pending = self._pending, 0
+        return n
 
     # -- introspection -------------------------------------------------
 
@@ -219,6 +298,32 @@ class Communicator:
             y = y * jnp.asarray(self.mean_scale(), y.dtype)
         return y
 
+    # -- nonblocking two-phase collectives (MPIX_Start / MPIX_Wait) ----
+
+    def all_reduce_start(self, x, *, mean: bool = False):
+        """Launch the all-reduce's first pipeline stage(s); returns an
+        in-flight token for ``all_reduce_wait``.  Compute issued between
+        the two overlaps the transfer."""
+        return self._engine.all_reduce_start(x, self._axis_arg, mean=mean)
+
+    def all_reduce_wait(self, token):
+        return self._engine.all_reduce_wait(token)
+
+    def sync_gradient_start(self, g, *, mean: bool = True,
+                            compress: bool = False, ef_residual=None):
+        """Two-phase arm of one gradient tensor's sync (a fused bucket or
+        a leaf); wire bytes are recorded identically to the blocking
+        ``sync_gradients*`` paths."""
+        return self._engine.sync_gradient_start(
+            g, self._axis_arg, mean=mean, compress=compress,
+            ef_residual=ef_residual)
+
+    def sync_gradient_wait(self, token):
+        """Finalize one in-flight gradient sync — remaining stages, mean
+        scale, and (compressed) the EF-residual update, which mutates
+        here and ONLY here.  Returns (synced, new_ef_residual | None)."""
+        return self._engine.sync_gradient_wait(token)
+
     def reduce_scatter(self, x, dim: int = 0):
         return self._engine.reduce_scatter(
             x, self._single_axis("reduce_scatter"), dim=dim)
@@ -283,7 +388,11 @@ class Communicator:
         """Bind ``fn`` over this communicator's axes for a fixed
         (shape, dtype): protocol + tier wrapper + mean scale resolved NOW,
         zero lookups per call.  The session owns the handle's lifecycle
-        (revoked + rebound on re-mesh)."""
+        (revoked + rebound on re-mesh).  Besides ``handle(x)`` every
+        handle carries the nonblocking ``handle.start(x)`` /
+        ``handle.wait(token)`` arms; ``sync_stats=True`` marks a
+        gradient-sync handle whose calls record wire bytes under the
+        engine's sync key like the planned paths do."""
         handle = PersistentHandle(self, fn, shape, dtype, mean=mean, **kw)
         self.session._register(handle)
         return handle
@@ -472,6 +581,15 @@ class Session:
         if self._finalized:
             raise SessionFinalizedError("session is finalized")
         handles = list(self._handles)
+        pending = [h for h in handles if h.inflight]
+        if pending:
+            raise InFlightHandleError(
+                "remesh would drop in-flight collectives: "
+                + "; ".join(f"{h.fn} handle has {h.inflight} start(s) "
+                            f"never waited" for h in pending)
+                + " — wait() the outstanding tokens (or "
+                "handle.abandon_inflight() if their trace was discarded) "
+                "before re-meshing")
         for h in handles:
             h._revoke("re-mesh in progress")
         self._engine.init(mesh)

@@ -92,26 +92,18 @@ def bucket_ef_zeros(buckets, abstract: bool = False) -> tuple:
 # The protocol: int8-on-the-wire ring all-reduce
 # ---------------------------------------------------------------------------
 
-def compressed_ring_all_reduce_flat(x2d: jax.Array, axis_name: str,
-                                    block: int = QBLOCK,
-                                    use_kernel: bool = False) -> jax.Array:
-    """Ring RS+AG where every hop carries int8 payload + f32 block scales.
-
-    x2d: (p, chunk) float; chunk % block == 0.  Wire bytes per hop:
-    chunk * 1 + (chunk/block) * 4  ≈ chunk bytes — 2x less than bf16.
-    Accumulation happens in f32 after dequantize (no int overflow); each
-    hop requantizes, which is the standard lossy-compressed-ring trade
-    (bounded by error feedback at the caller).
-    """
+def compressed_ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str,
+                                        block: int = QBLOCK,
+                                        use_kernel: bool = False
+                                        ) -> jax.Array:
+    """The int8 ring's first pipeline stage: pass quantized partial sums
+    around the ring.  x2d: (p, chunk) float with chunk % block == 0.
+    Returns this device's in-flight f32 reduced chunk."""
     p = x2d.shape[0]
-    if p == 1:
-        return x2d[0]
     chunk = x2d.shape[1]
     assert chunk % block == 0, (chunk, block)
     i = c.axis_index(axis_name)
     fwd = c.fwd_perm(p)
-
-    # --- reduce-scatter phase: pass quantized partial sums around the ring.
     acc = c.dyn_chunk(x2d, i - 1).astype(jnp.float32)
     for s in range(1, p):
         q, scale = _maybe_kernel_quantize(acc, block, use_kernel)
@@ -119,8 +111,18 @@ def compressed_ring_all_reduce_flat(x2d: jax.Array, axis_name: str,
         scale = lax.ppermute(scale, axis_name, fwd)
         recv = _maybe_kernel_dequantize(q, scale, block, jnp.float32, use_kernel)
         acc = recv + c.dyn_chunk(x2d, i - s - 1).astype(jnp.float32)
+    return acc
 
-    # --- all-gather phase: circulate the reduced chunks, still int8 wire.
+
+def compressed_ring_all_gather_flat(acc: jax.Array, axis_name: str, p: int,
+                                    block: int = QBLOCK,
+                                    use_kernel: bool = False,
+                                    out_dtype=jnp.float32) -> jax.Array:
+    """The int8 ring's remaining stage: circulate the reduced chunks,
+    still int8 on the wire.  acc: (chunk,) f32 -> (p, chunk) out_dtype."""
+    chunk = acc.shape[0]
+    i = c.axis_index(axis_name)
+    fwd = c.fwd_perm(p)
     q, scale = _maybe_kernel_quantize(acc, block, use_kernel)
     buf = jnp.zeros((p, chunk), jnp.float32)
     buf = c.dyn_put(buf, _maybe_kernel_dequantize(q, scale, block, jnp.float32,
@@ -133,7 +135,107 @@ def compressed_ring_all_reduce_flat(x2d: jax.Array, axis_name: str,
             _maybe_kernel_dequantize(q, scale, block, jnp.float32, use_kernel),
             i - s,
         )
-    return buf.astype(x2d.dtype)
+    return buf.astype(out_dtype)
+
+
+def compressed_ring_all_reduce_flat(x2d: jax.Array, axis_name: str,
+                                    block: int = QBLOCK,
+                                    use_kernel: bool = False) -> jax.Array:
+    """Ring RS+AG where every hop carries int8 payload + f32 block scales.
+
+    x2d: (p, chunk) float; chunk % block == 0.  Wire bytes per hop:
+    chunk * 1 + (chunk/block) * 4  ≈ chunk bytes — 2x less than bf16.
+    Accumulation happens in f32 after dequantize (no int overflow); each
+    hop requantizes, which is the standard lossy-compressed-ring trade
+    (bounded by error feedback at the caller).  Stage-split: the blocking
+    path composes the RS + AG stage functions above, so the engine's
+    start/wait arms are bit-identical to this by construction.
+    """
+    p = x2d.shape[0]
+    if p == 1:
+        return x2d[0]
+    acc = compressed_ring_reduce_scatter_flat(x2d, axis_name, block,
+                                              use_kernel)
+    return compressed_ring_all_gather_flat(acc, axis_name, p, block,
+                                           use_kernel, out_dtype=x2d.dtype)
+
+
+@dataclasses.dataclass
+class CompressedInFlight:
+    """A started-but-unfinished compressed all-reduce: the in-flight
+    reduced chunk plus everything the finalization stage needs.  Created
+    by ``compressed_all_reduce_start``, consumed exactly once by
+    ``compressed_all_reduce_wait`` — within the same trace (this is a
+    plain Python object holding tracers, not a pytree)."""
+
+    acc: jax.Array            # in-flight reduced chunk (f32)
+    xf: jax.Array             # local f32 contribution (EF residual source)
+    p: int
+    n: int                    # unpadded element count
+    orig_shape: Tuple[int, ...]
+    orig_dtype: object
+    axis_name: str
+    block: int
+    use_kernel: bool
+    has_state: bool
+    waited: bool = False
+
+
+def compressed_all_reduce_start(x: jax.Array, axis_name: str,
+                                state: EFState | None = None,
+                                block: int = QBLOCK,
+                                use_kernel: bool = False
+                                ) -> CompressedInFlight:
+    """Launch the compressed all-reduce's first pipeline stage (the int8
+    ring reduce-scatter) and return the in-flight token.  No EF state is
+    touched here — ``compressed_all_reduce_wait`` is the ONLY place the
+    residual is produced."""
+    p = c.axis_size(axis_name)
+    xf = x.astype(jnp.float32).reshape(-1)
+    if state is not None:
+        xf = xf + state.residual.reshape(-1)
+    flat, n = c.pad_flat(xf, p * block)
+    x2d = flat.reshape(p, -1)
+    if p == 1:
+        acc = x2d[0]   # nothing on the wire; no (lossy) quantize round-trip
+    else:
+        acc = compressed_ring_reduce_scatter_flat(x2d, axis_name, block,
+                                                  use_kernel)
+    return CompressedInFlight(
+        acc=acc, xf=xf, p=p, n=xf.shape[0], orig_shape=x.shape,
+        orig_dtype=x.dtype, axis_name=axis_name, block=block,
+        use_kernel=use_kernel, has_state=state is not None)
+
+
+def compressed_all_reduce_wait(tok: CompressedInFlight
+                               ) -> Tuple[jax.Array, EFState | None]:
+    """Run the remaining stage (int8 ring all-gather), unpad, and update
+    the error-feedback residual — the residual mutates here and ONLY here,
+    so a started-but-unwaited reduction leaves the EF state untouched."""
+    if tok.waited:
+        raise RuntimeError(
+            "in-flight compressed_all_reduce token was already waited — "
+            "each start() produces exactly one wait()able reduction")
+    tok.waited = True
+    if tok.p == 1:
+        reduced = tok.acc
+    else:
+        reduced = compressed_ring_all_gather_flat(
+            tok.acc, tok.axis_name, tok.p, tok.block, tok.use_kernel,
+            out_dtype=jnp.float32)
+    y = c.unpad(reduced.reshape(-1), tok.n, tok.xf.shape)
+
+    new_state = None
+    if tok.has_state:
+        # Residual: what quantization dropped from OUR contribution.  The
+        # sum's error is bounded by p * per-device residuals; feeding back
+        # the local one recovers it over steps (Karimireddy et al. 2019).
+        q, scale = _maybe_kernel_quantize(
+            c.pad_flat(tok.xf, tok.block)[0], tok.block, tok.use_kernel)
+        deq = _maybe_kernel_dequantize(q, scale, tok.block, jnp.float32,
+                                       tok.use_kernel)[: tok.xf.shape[0]]
+        new_state = EFState(residual=(tok.xf - deq).reshape(tok.orig_shape))
+    return (y.reshape(tok.orig_shape).astype(tok.orig_dtype), new_state)
 
 
 def compressed_all_reduce(x: jax.Array, axis_name: str,
@@ -144,28 +246,9 @@ def compressed_all_reduce(x: jax.Array, axis_name: str,
     """Error-feedback compressed all-reduce over one manual mesh axis.
 
     Returns (summed x, updated EF state).  With ``state=None`` runs without
-    error feedback (stateless mode, e.g. for loss scalars).
+    error feedback (stateless mode, e.g. for loss scalars).  The blocking
+    path is literally start + wait, so the engine's nonblocking arms are
+    bit-identical to it.
     """
-    p = c.axis_size(axis_name)
-    orig_shape, orig_dtype = x.shape, x.dtype
-    xf = x.astype(jnp.float32).reshape(-1)
-    if state is not None:
-        xf = xf + state.residual.reshape(-1)
-
-    flat, n = c.pad_flat(xf, p * block)
-    x2d = flat.reshape(p, -1)
-    reduced = compressed_ring_all_reduce_flat(x2d, axis_name, block,
-                                              use_kernel)
-    y = c.unpad(reduced.reshape(-1), n, xf.shape)
-
-    new_state = None
-    if state is not None:
-        # Residual: what quantization dropped from OUR contribution.  The
-        # sum's error is bounded by p * per-device residuals; feeding back
-        # the local one recovers it over steps (Karimireddy et al. 2019).
-        q, scale = _maybe_kernel_quantize(
-            c.pad_flat(xf, block)[0], block, use_kernel)
-        deq = _maybe_kernel_dequantize(q, scale, block, jnp.float32,
-                                       use_kernel)[: xf.shape[0]]
-        new_state = EFState(residual=(xf - deq).reshape(orig_shape))
-    return y.reshape(orig_shape).astype(orig_dtype), new_state
+    return compressed_all_reduce_wait(
+        compressed_all_reduce_start(x, axis_name, state, block, use_kernel))

@@ -63,12 +63,49 @@ class EngineConfig:
         default_factory=layers.TierPolicy)
     sanitize_checked: bool = False       # L2+: runtime finite-guard op
     use_quantize_kernel: bool = False    # Pallas path for compression
+    use_local_reduce_kernel: bool = False  # Pallas path for RS combine
     force_protocol: Mapping[str, str] = dataclasses.field(default_factory=dict)
     plan: bool = True                    # False: per-call selection baseline
 
     def __post_init__(self):
         if self.mode not in ("composed", "monolithic"):
             raise ValueError(f"unknown engine mode: {self.mode!r}")
+
+
+@dataclasses.dataclass
+class InFlight:
+    """A started-but-unfinished collective (MPIX_Start's return value).
+
+    ``finish`` is the remaining pipeline stage(s) as a closure over the
+    in-flight arrays; ``scale`` is the mean factor the wait arm applies
+    after the last stage (finalization belongs to wait, never start).
+    This is a plain Python object holding tracers, NOT a pytree: it must
+    be consumed exactly once, inside the same trace that produced it.
+    """
+
+    fn: str
+    axes: Tuple[str, ...]
+    finish: Callable[[], jax.Array]
+    protocol: str = costmodel.XLA_DEFAULT
+    start_bytes: int = 0        # wire bytes the start phase moved
+    wait_bytes: int = 0         # wire bytes the wait phase will move
+    scale: Optional[float] = None
+    waited: bool = False
+
+
+@dataclasses.dataclass
+class SyncInFlight:
+    """An in-flight gradient-sync collective: one bucket (or leaf) whose
+    start phase has been issued.  ``repro.comm``'s ``sync_gradient_wait``
+    consumes it — running the remaining stages, the cross-axis reductions
+    of the compressed path, the mean scale, and (compressed only) the
+    error-feedback residual update."""
+
+    inner: Any                  # InFlight | compression.CompressedInFlight
+    compress: bool
+    axes: Tuple[str, ...]
+    scale: Optional[float]
+    waited: bool = False
 
 
 class CollectiveEngine:
@@ -323,42 +360,112 @@ class CollectiveEngine:
 
     def _allreduce_1d(self, x: jax.Array, axis: str,
                       proto: Optional[str] = None) -> jax.Array:
+        # blocking = start + finish of the SAME stage split, so the
+        # overlapped path is bit-identical by construction
+        return self._allreduce_1d_start(x, axis, proto=proto).finish()
+
+    def _allreduce_1d_start(self, x: jax.Array, axis: str,
+                            proto: Optional[str] = None) -> InFlight:
+        """Launch the first pipeline stage of a 1-axis all-reduce; the
+        returned token's ``finish`` runs the remaining stage(s)."""
+        fn = registry.ALL_REDUCE
         p = self._axis_size(axis)
         if p == 1:
-            return x
+            return InFlight(fn, (axis,), lambda: x, protocol="local")
         if proto is None:
-            proto = self.protocol_for(registry.ALL_REDUCE, _nbytes_of(x), axis)
+            proto = self.protocol_for(fn, _nbytes_of(x), axis)
+        sb, wb = plan_mod.phase_wire_bytes(proto, p, _nbytes_of(x))
         if proto == costmodel.XLA_DEFAULT:
-            return xla.all_reduce(x, axis)
+            y = xla.all_reduce(x, axis)
+            return InFlight(fn, (axis,), lambda: y, proto, sb, wb)
         if proto == costmodel.RECURSIVE_DOUBLING:
-            return recursive.recursive_doubling_all_reduce(x, axis)
+            y = recursive.recursive_doubling_all_reduce(x, axis)
+            return InFlight(fn, (axis,), lambda: y, proto, sb, wb)
         x2d, n, shape = self._chunked(x, p)
+        uk = self.config.use_local_reduce_kernel
         if proto == costmodel.RING:
-            flat = ring.ring_all_reduce_flat(x2d, axis)
+            shard = ring.ring_all_reduce_start(x2d, axis, uk)
+            fin = lambda: c.unpad(
+                ring.ring_all_reduce_finish(shard, axis).reshape(-1),
+                n, shape)
         elif proto == costmodel.BIDIR_RING:
-            flat = ring.bidir_ring_all_reduce_flat(x2d, axis)
+            shard = ring.bidir_ring_all_reduce_start(x2d, axis, uk)
+            fin = lambda: c.unpad(
+                ring.bidir_ring_all_reduce_finish(shard, axis).reshape(-1),
+                n, shape)
         elif proto == costmodel.RECURSIVE_HALVING:
-            flat = recursive.rabenseifner_all_reduce_flat(x2d, axis)
+            shard = recursive.halving_reduce_scatter_flat(x2d, axis)
+            fin = lambda: c.unpad(
+                recursive.doubling_all_gather_flat(shard, axis).reshape(-1),
+                n, shape)
         else:
             raise ValueError(f"no all_reduce impl for protocol {proto!r}")
-        return c.unpad(flat.reshape(-1), n, shape)
+        return InFlight(fn, (axis,), fin, proto, sb, wb)
 
     def _allreduce_multiaxis(self, x: jax.Array, axes: Tuple[str, ...]
                              ) -> jax.Array:
+        return self._allreduce_multiaxis_start(x, axes).finish()
+
+    def _allreduce_multiaxis_start(self, x: jax.Array,
+                                   axes: Tuple[str, ...]) -> InFlight:
+        fn = registry.ALL_REDUCE
+        nb = _nbytes_of(x)
         if "pod" in axes:
             intra = tuple(a for a in axes if a != "pod")
             if intra:
-                return twophase.hierarchical_all_reduce(x, intra, "pod")
-            return self._allreduce_1d(x, "pod")
+                flat, sizes = twophase.hierarchical_start(x, intra)
+                fin = lambda: twophase.hierarchical_finish(
+                    flat, sizes, intra, "pod", x.shape)
+                # phase shares follow the full intra-pod extent (the RS
+                # spans every intra axis before the pod hop)
+                p_intra = 1
+                for ax in intra:
+                    p_intra *= self._axis_size(ax)
+                sb, wb = plan_mod.phase_wire_bytes(
+                    costmodel.HIERARCHICAL, p_intra, nb)
+                return InFlight(fn, axes, fin, costmodel.HIERARCHICAL,
+                                sb, wb)
+            return self._allreduce_1d_start(x, "pod")
         if len(axes) == 2:
             p0 = self._axis_size(axes[0])
             x2d, n, shape = self._chunked(x, p0)
-            flat = twophase.two_phase_all_reduce_2d(x2d, axes[0], axes[1])
-            return c.unpad(flat, n, shape)
-        out = x
-        for ax in axes:
-            out = self._allreduce_1d(out, ax)
-        return out
+            shard = twophase.two_phase_start(x2d, axes[0])
+            fin = lambda: c.unpad(
+                twophase.two_phase_finish(shard, axes[0], axes[1],
+                                          x2d.shape[0], x2d.shape[1]),
+                n, shape)
+            sb, wb = plan_mod.phase_wire_bytes(costmodel.TWO_PHASE_2D, p0, nb)
+            return InFlight(fn, axes, fin, costmodel.TWO_PHASE_2D, sb, wb)
+        return self._allreduce_seq_start(
+            x, tuple((ax, None) for ax in axes))
+
+    def _allreduce_seq_start(self, x: jax.Array,
+                             protos: Tuple[Tuple[str, Optional[str]], ...]
+                             ) -> InFlight:
+        """Sequential per-axis chain: start the first axis's protocol; the
+        wait arm finishes it and runs the remaining axes blocking (they
+        depend on the first axis's result, so only the first stage can
+        overlap)."""
+        (ax0, p0), rest = protos[0], protos[1:]
+        tok0 = self._allreduce_1d_start(x, ax0, proto=p0)
+
+        def fin():
+            y = tok0.finish()
+            for ax, pr in rest:
+                y = self._allreduce_1d(y, ax, proto=pr)
+            return y
+
+        # unplanned later axes resolve to what the cost model will pick
+        # per call, so the phase accounting matches the real schedule
+        wait_extra = sum(
+            sum(plan_mod.phase_wire_bytes(
+                pr or self.protocol_for(registry.ALL_REDUCE,
+                                        _nbytes_of(x), ax),
+                self._axis_size(ax), _nbytes_of(x)))
+            for ax, pr in rest)
+        return InFlight(registry.ALL_REDUCE, tuple(a for a, _ in protos),
+                        fin, tok0.protocol, tok0.start_bytes,
+                        tok0.wait_bytes + wait_extra)
 
     # ---- reduce_scatter / all_gather ---------------------------------
 
@@ -384,12 +491,13 @@ class CollectiveEngine:
                                       _nbytes_of(x), axis)
         xm = jnp.moveaxis(x, dim, 0)
         x2d = xm.reshape(p, -1)
+        uk = self.config.use_local_reduce_kernel
         if proto == costmodel.RECURSIVE_HALVING:
             shard = recursive.halving_reduce_scatter_flat(x2d, axis)
         elif proto == costmodel.BIDIR_RING:
-            shard = ring.bidir_ring_reduce_scatter_flat(x2d, axis)
+            shard = ring.bidir_ring_reduce_scatter_flat(x2d, axis, uk)
         else:
-            shard = ring.ring_reduce_scatter_flat(x2d, axis)
+            shard = ring.ring_reduce_scatter_flat(x2d, axis, uk)
         out = shard.reshape((xm.shape[0] // p,) + xm.shape[1:])
         return jnp.moveaxis(out, 0, dim)
 
@@ -475,15 +583,29 @@ class CollectiveEngine:
 
     def _broadcast_composed(self, x, axis: str, root: int = 0,
                             proto: Optional[str] = None):
+        return self._broadcast_start(x, axis, root=root, proto=proto).finish()
+
+    def _broadcast_start(self, x, axis: str, root: int = 0,
+                         proto: Optional[str] = None) -> InFlight:
+        """Stage-split broadcast: the van de Geijn protocol starts with
+        its binomial scatter and finishes with the ring all-gather; the
+        binomial tree has no seam and runs entirely in start."""
+        fn = registry.BROADCAST
         if proto is None:
-            proto = self.protocol_for(registry.BROADCAST, _nbytes_of(x), axis)
-        if proto == costmodel.RING:  # scatter+allgather for big payloads
-            p = self._axis_size(axis)
-            if c.is_pow2(p) and p > 1:
-                x2d, n, shape = self._chunked(x, p)
-                full = tree.scatter_allgather_broadcast(x2d, axis, root)
-                return c.unpad(full.reshape(-1), n, shape)
-        return tree.binomial_broadcast(x, axis, root)
+            proto = self.protocol_for(fn, _nbytes_of(x), axis)
+        p = self._axis_size(axis)
+        if proto == costmodel.RING and c.is_pow2(p) and p > 1:
+            sb, wb = plan_mod.phase_wire_bytes(proto, p, _nbytes_of(x))
+            x2d, n, shape = self._chunked(x, p)
+            chunk = tree.scatter_allgather_start(x2d, axis, root)
+            fin = lambda: c.unpad(
+                tree.scatter_allgather_finish(chunk, axis, root).reshape(-1),
+                n, shape)
+            return InFlight(fn, (axis,), fin, proto, sb, wb)
+        y = tree.binomial_broadcast(x, axis, root)
+        sb, _ = plan_mod.phase_wire_bytes(costmodel.BINOMIAL_TREE, p,
+                                          _nbytes_of(x))
+        return InFlight(fn, (axis,), lambda: y, costmodel.BINOMIAL_TREE, sb, 0)
 
     def permute(self, x: jax.Array, axis_name: str, shift: int = 1
                 ) -> jax.Array:
@@ -515,6 +637,136 @@ class CollectiveEngine:
     def _compressed_impl(self, x, axis: str, state=None):
         return compression.compressed_all_reduce(
             x, axis, state, use_kernel=self.config.use_quantize_kernel)
+
+    # ------------------------------------------------------------------
+    # Nonblocking two-phase arms (MPIX_Start / MPIX_Wait analogue)
+    #
+    # ``*_start`` launches a collective's first pipeline stage(s) and
+    # returns an in-flight token; ``*_wait`` runs the remaining stages and
+    # finalizes (unpad, mean scale, EF-residual update).  The blocking
+    # methods above are literally start∘wait of the same stage split, so
+    # the two paths are bit-identical by construction.  Tokens are plain
+    # Python objects over tracers: consume each exactly once, within the
+    # trace that created it.
+    # ------------------------------------------------------------------
+
+    def all_reduce_start(self, x: jax.Array, axis_name, *,
+                         mean: bool = False) -> InFlight:
+        fn = registry.ALL_REDUCE
+        self._check(fn)
+        axes = _as_axes(axis_name)
+        # the checked/full tier layers run input-side here and output-side
+        # in the wait arm, so blocking (tier-wrapped dispatch) and
+        # overlapped runs stay bit-identical AND count the same stats
+        x = layers.tier_input(fn, self.tier(fn), x,
+                              axes if len(axes) > 1 else axes[0],
+                              self.stats,
+                              sanitize=self.config.sanitize_checked)
+        if not self.composed:
+            # monolithic baseline has no stage seam: the generic XLA path
+            # runs whole in start, so blocking and overlapped stay
+            # bit-identical in that mode too
+            y = self._allreduce_mono(x, axes)
+            sb = sum(plan_mod.phase_wire_bytes(
+                costmodel.XLA_DEFAULT, self._axis_size(ax),
+                _nbytes_of(x))[0] for ax in axes)
+            tok = InFlight(fn, axes, lambda: y,
+                           costmodel.XLA_DEFAULT, sb, 0)
+        elif len(axes) == 1:
+            tok = self._allreduce_1d_start(x, axes[0])
+        else:
+            tok = self._allreduce_multiaxis_start(x, axes)
+        if mean:
+            tok.scale = self.mean_scale(axes)
+        self.stats.record_phase(fn, "start", tok.start_bytes)
+        return tok
+
+    def all_reduce_wait(self, token: InFlight) -> jax.Array:
+        return self._wait_inflight(token)
+
+    def _wait_inflight(self, token: InFlight) -> jax.Array:
+        if token.waited:
+            raise RuntimeError(
+                f"in-flight {token.fn} token was already waited — each "
+                f"start() produces exactly one wait()able reduction")
+        token.waited = True
+        self.stats.record_phase(token.fn, "wait", token.wait_bytes)
+        y = token.finish()
+        if token.scale is not None:
+            y = y * jnp.asarray(token.scale, y.dtype)
+        # L3 output fence (identity for values; ordering semantics only)
+        return layers.tier_output(self.tier(token.fn), y)
+
+    def compressed_all_reduce_start(self, x: jax.Array, axis_name: str,
+                                    state: Optional[compression.EFState]
+                                    = None):
+        fn = registry.COMPRESSED_ALL_REDUCE
+        self._check(fn)
+        x = layers.tier_input(fn, self.tier(fn), x, axis_name, self.stats,
+                              sanitize=self.config.sanitize_checked)
+        tok = compression.compressed_all_reduce_start(
+            x, axis_name, state,
+            use_kernel=self.config.use_quantize_kernel)
+        sb, _ = plan_mod.phase_wire_bytes(
+            costmodel.RING, tok.p, _compressed_wire_bytes(x.size))
+        self.stats.record_phase(fn, "start", sb)
+        return tok
+
+    def compressed_all_reduce_wait(self, token):
+        fn = registry.COMPRESSED_ALL_REDUCE
+        _, wb = plan_mod.phase_wire_bytes(
+            costmodel.RING, token.p,
+            _compressed_wire_bytes(int(token.n)))
+        self.stats.record_phase(fn, "wait", wb)
+        return layers.tier_output(self.tier(fn),
+                                  compression.compressed_all_reduce_wait(
+                                      token))
+
+    # -- two-phase gradient sync (what the overlapped trainer drives) ---
+
+    def sync_gradient_start(self, g: jax.Array, axis_name, *,
+                            mean: bool = True, compress: bool = False,
+                            ef_residual: Optional[jax.Array] = None
+                            ) -> SyncInFlight:
+        """Issue the start phase of ONE gradient tensor's sync (a fused
+        bucket or a leaf).  Records wire bytes under ``SYNC_STATS_KEY``
+        identically to the blocking ``sync_gradients[_bucketed]`` paths,
+        so overlapped and blocking runs report the same traffic."""
+        axes = _as_axes(axis_name)
+        scale = self.mean_scale(axes) if mean else None
+        if compress:
+            self.stats.record(SYNC_STATS_KEY,
+                              _compressed_wire_bytes(g.size))
+            state = (compression.EFState(residual=ef_residual)
+                     if ef_residual is not None else None)
+            inner = self.compressed_all_reduce_start(g, axes[0], state)
+        else:
+            self.stats.record(SYNC_STATS_KEY, _nbytes_of(g))
+            inner = self.all_reduce_start(
+                g, axes if len(axes) > 1 else axes[0])
+        return SyncInFlight(inner=inner, compress=compress, axes=axes,
+                            scale=scale)
+
+    def sync_gradient_wait(self, token: SyncInFlight):
+        """Finalize one in-flight gradient sync: remaining stages, the
+        compressed path's cross-axis reductions, the mean scale, and the
+        EF-residual update (residuals mutate here and ONLY here).
+        Returns (synced, new_ef_residual | None)."""
+        if token.waited:
+            raise RuntimeError("in-flight gradient sync was already waited")
+        token.waited = True
+        new_residual = None
+        if token.compress:
+            y, st = self.compressed_all_reduce_wait(token.inner)
+            for ax in token.axes[1:]:
+                y = self.all_reduce(y, ax)
+            if st is not None:
+                new_residual = st.residual
+        else:
+            y = self._wait_inflight(token.inner)
+        if token.scale is not None:
+            y = y * jnp.asarray(token.scale, y.dtype)
+        return y, new_residual
 
     def barrier(self, axis_name, token: jax.Array | None = None) -> jax.Array:
         fn = registry.BARRIER
@@ -581,6 +833,7 @@ class CollectiveEngine:
 
     def bind_persistent(self, fn: str, shape: Sequence[int], dtype,
                         axis_name, *, mean: bool = False,
+                        sync_stats: bool = False,
                         **kw) -> "PersistentBinding":
         """Resolve everything one collective call site needs — protocol,
         tier wrapper, mean scale — ONCE, for a fixed (shape, dtype, axis)
@@ -588,6 +841,18 @@ class CollectiveEngine:
         hot path: no cost-model run, no plan-table get, no wrapper
         construction per call (persistent collectives; the step past the
         plan-once dict lookup).
+
+        Every binding also carries the two-phase ``start``/``wait`` arms
+        (MPIX_Start/MPIX_Wait): ``start(x)`` launches the first pipeline
+        stage(s) and returns an in-flight token, ``wait(token)`` runs the
+        remaining stages and finalizes (unpad + mean scale live in wait).
+        Blocking ``call`` composes the same stages, so both paths are
+        bit-identical.
+
+        ``sync_stats=True`` marks the binding as a gradient-sync call
+        site: every call/start records its wire bytes under
+        ``SYNC_STATS_KEY`` exactly like the planned ``sync_gradients*``
+        paths do (without it, handle-covered syncs under-report).
 
         This is the private layer under ``repro.comm``'s persistent
         handles, which add lifecycle on top (revocation + rebind when the
@@ -597,6 +862,9 @@ class CollectiveEngine:
         """
         axes = _as_axes(axis_name)
         self._check(fn)
+        if sync_stats and fn != registry.ALL_REDUCE:
+            raise ValueError(f"sync_stats=True marks a gradient-sync "
+                             f"all_reduce handle, not {fn!r}")
         for ax in axes:
             if ax not in self.topology.axis_sizes:
                 raise ValueError(
@@ -617,6 +885,7 @@ class CollectiveEngine:
                              f"got {axes}")
         mono = not self.composed
         xla_tag = costmodel.XLA_DEFAULT
+        start_impl: Optional[Callable] = None   # non-trivial stage split
 
         if fn == registry.ALL_REDUCE:
             if mono:
@@ -625,6 +894,8 @@ class CollectiveEngine:
             elif len(axes) == 1:
                 ax0, proto = axes[0], self.protocol_for(fn, nbytes, axes[0])
                 target = lambda x: self._allreduce_1d(x, ax0, proto=proto)
+                start_impl = lambda x: self._allreduce_1d_start(
+                    x, ax0, proto=proto)
                 protocols = ((ax0, proto),)
             elif "pod" in axes or len(axes) == 2:
                 # these multi-axis schedules are fixed by the axis set —
@@ -632,6 +903,8 @@ class CollectiveEngine:
                 name = costmodel.HIERARCHICAL if "pod" in axes \
                     else costmodel.TWO_PHASE_2D
                 target = lambda x: self._allreduce_multiaxis(x, axes)
+                start_impl = lambda x: self._allreduce_multiaxis_start(
+                    x, axes)
                 protocols = (("+".join(axes), name),)
             else:
                 protocols = tuple((ax, self.protocol_for(fn, nbytes, ax))
@@ -641,6 +914,9 @@ class CollectiveEngine:
                     for ax, pr in _protos:
                         x = self._allreduce_1d(x, ax, proto=pr)
                     return x
+
+                start_impl = lambda x, _protos=protocols: \
+                    self._allreduce_seq_start(x, _protos)
         elif fn == registry.REDUCE_SCATTER:
             ax0, dim = axes[0], int(kw.pop("dim", 0))
             if mono:
@@ -686,6 +962,8 @@ class CollectiveEngine:
                 proto = self.protocol_for(fn, nbytes, ax0)
                 target = lambda x: self._broadcast_composed(
                     x, ax0, root=root, proto=proto)
+                start_impl = lambda x: self._broadcast_start(
+                    x, ax0, root=root, proto=proto)
             protocols = ((ax0, proto),)
         elif fn == registry.PERMUTE:
             ax0, shift = axes[0], int(kw.pop("shift", 1))
@@ -703,6 +981,7 @@ class CollectiveEngine:
         if kw:
             raise TypeError(f"unknown bind options for {fn!r}: {sorted(kw)}")
 
+        base_target = target            # unscaled schedule (wait finalizes)
         scale = None
         if mean:
             scale = self.mean_scale(axes)   # static: axes are in topology
@@ -722,10 +1001,42 @@ class CollectiveEngine:
             call = lambda x, _w=wrapped, _a=axis_label: _w(x, _a)
         else:
             call = target
+        if sync_stats:
+            def call(x, _inner=call, _nb=nbytes):
+                self.stats.record(SYNC_STATS_KEY, _nb)
+                return _inner(x)
+
+        # -- two-phase arms: protocols with no seam run fully in start --
+        if start_impl is None:
+            def start_impl(x, _t=base_target):
+                y = _t(x)
+                return InFlight(fn, axes, lambda: y,
+                                protocols[0][1], nbytes, 0)
+
+        axis_label = axes if len(axes) > 1 else axes[0]
+
+        def start(x, _impl=start_impl, _tier=tier, _nb=nbytes, _s=scale,
+                  _a=axis_label):
+            if sync_stats:
+                self.stats.record(SYNC_STATS_KEY, _nb)
+            # same checked/full input stack the blocking call wraps with
+            # (output fence runs in _wait_inflight) — values and stats
+            # match the tier-wrapped dispatch exactly
+            x = layers.tier_input(fn, _tier, x, _a, self.stats,
+                                  sanitize=self.config.sanitize_checked)
+            tok = _impl(x)
+            if _s is not None:
+                tok.scale = _s
+            self.stats.record_phase(fn, "start", tok.start_bytes)
+            return tok
+
+        wait = self._wait_inflight
+
         return PersistentBinding(
             fn=fn, axes=axes, protocols=protocols, tier=tier,
             nbytes=nbytes, mean_scale=scale,
-            fingerprint=self.topology.fingerprint(), call=call)
+            fingerprint=self.topology.fingerprint(), call=call,
+            start=start, wait=wait, sync_stats=sync_stats)
 
     # ------------------------------------------------------------------
     # Gradient synchronisation (the application-facing convenience API)
@@ -836,9 +1147,12 @@ class PersistentBinding:
     """A fully-resolved collective call site: the output of
     ``CollectiveEngine.bind_persistent``.  ``call`` takes the array and
     nothing else — protocol, tier stack, and mean scale were baked in at
-    bind time.  ``fingerprint`` records the topology it was resolved
-    against (the repro.comm handle lifecycle compares it to decide
-    staleness)."""
+    bind time.  ``start``/``wait`` are the two-phase arms of the same
+    schedule (``call`` ≡ ``wait(start(x))`` bit-identically); ``wait`` is
+    where unpad + mean scale happen, so compute issued between the two
+    overlaps the transfer.  ``fingerprint`` records the topology it was
+    resolved against (the repro.comm handle lifecycle compares it to
+    decide staleness)."""
 
     fn: str
     axes: Tuple[str, ...]
@@ -848,6 +1162,9 @@ class PersistentBinding:
     mean_scale: Optional[float]
     fingerprint: Any
     call: Callable
+    start: Optional[Callable] = None      # x -> InFlight
+    wait: Optional[Callable] = None       # InFlight -> array
+    sync_stats: bool = False              # records SYNC_STATS_KEY per call
 
     def describe(self) -> str:
         protos = ", ".join(f"{a}:{p}" for a, p in self.protocols)

@@ -76,16 +76,25 @@ def average_layer_number(tiers: Mapping[str, int],
 
 
 class CommStats:
-    """Trace-time statistics the checked tiers record."""
+    """Trace-time statistics the checked tiers record.
+
+    ``phase_bytes`` attributes wire bytes to the two-phase split of the
+    nonblocking collectives: key ``"<fn>.start"`` counts bytes the start
+    arm puts in flight (overlappable with compute), ``"<fn>.wait"`` bytes
+    the wait arm still moves after compute could have finished."""
 
     def __init__(self) -> None:
         self.calls: Counter = Counter()
         self.bytes: Counter = Counter()
+        self.phase_bytes: Counter = Counter()
         self.events: list = []
 
     def record(self, fn: str, nbytes: int) -> None:
         self.calls[fn] += 1
         self.bytes[fn] += nbytes
+
+    def record_phase(self, fn: str, phase: str, nbytes: int) -> None:
+        self.phase_bytes[f"{fn}.{phase}"] += nbytes
 
     def event(self, what: str) -> None:
         self.events.append(what)
@@ -110,37 +119,54 @@ def _validate(fn_name: str, x, axis_name) -> None:
         raise ValueError(f"{fn_name}: axis_name is required")
 
 
+def tier_input(fn_name: str, tier: int, x, axis_name,
+               stats: CommStats | None, sanitize: bool = False):
+    """The input-side half of the L2/L3 stack: validation, stats
+    recording, the optional finite-sanitize, and (L3) the event + input
+    fence.  ``wrap_tier`` composes this with ``tier_output`` around the
+    schedule, and the nonblocking arms apply the same halves at ``start``
+    and ``wait`` — ONE copy of the logic, so the overlapped path's values
+    and CommStats cannot drift from the blocking wrapped dispatch."""
+    if tier <= 1:
+        return x
+    _validate(fn_name, x, axis_name)
+    if stats is not None:
+        stats.record(fn_name, _nbytes(x))
+    if sanitize:
+        x = jnp.where(jnp.isfinite(x), x, jnp.zeros_like(x))
+    if tier >= 3:
+        logger.debug("collective %s over axis %r: %d bytes",
+                     fn_name, axis_name, _nbytes(x))
+        if stats is not None:
+            stats.event(f"{fn_name}@{axis_name}")
+        x = lax.optimization_barrier(x)
+    return x
+
+
+def tier_output(tier: int, y):
+    """The output-side half of the L3 stack: a per-leaf fence (impls may
+    return pytrees, e.g. (y, ef_state)).  Identity below L3."""
+    if tier >= 3:
+        return jax.tree_util.tree_map(lax.optimization_barrier, y)
+    return y
+
+
 def wrap_tier(fn_name: str, tier: int, impl: Callable,
               stats: CommStats | None, sanitize: bool = False) -> Callable:
     """Stack wrapper layers under ``impl`` according to the tier.
 
     ``impl(x, axis_name, **kw)`` is the already-protocol-selected schedule.
-    Returns a callable with the same signature but ``tier`` extra layers.
+    Returns a callable with the same signature but ``tier`` extra layers
+    (``tier_input`` -> schedule -> ``tier_output``).
     """
     if tier <= 1:
         # L0/L1: protocol selection (done by the engine before this point)
         # is the only indirection; nothing wraps the schedule.
         return impl
 
-    def checked(x, axis_name, **kw):
-        _validate(fn_name, x, axis_name)
-        if stats is not None:
-            stats.record(fn_name, _nbytes(x))
-        if sanitize:
-            x = jnp.where(jnp.isfinite(x), x, jnp.zeros_like(x))
-        return impl(x, axis_name, **kw)
+    def wrapped(x, axis_name, **kw):
+        x = tier_input(fn_name, tier, x, axis_name, stats,
+                       sanitize=sanitize)
+        return tier_output(tier, impl(x, axis_name, **kw))
 
-    if tier == 2:
-        return checked
-
-    def full(x, axis_name, **kw):
-        logger.debug("collective %s over axis %r: %d bytes",
-                     fn_name, axis_name, _nbytes(x))
-        if stats is not None:
-            stats.event(f"{fn_name}@{axis_name}")
-        x = lax.optimization_barrier(x)
-        y = checked(x, axis_name, **kw)
-        # per-leaf barrier: impls may return pytrees (e.g. (y, ef_state)).
-        return jax.tree_util.tree_map(lax.optimization_barrier, y)
-
-    return full
+    return wrapped

@@ -57,6 +57,81 @@ def bucket_nbytes(bucket: int) -> int:
     return 1 << bucket
 
 
+# ---------------------------------------------------------------------------
+# Two-phase stage accounting (PR 5): every planned protocol is split into a
+# start phase (launched by the nonblocking arms, overlappable with compute)
+# and a wait phase (the remaining stages + finalization).
+# ---------------------------------------------------------------------------
+
+
+def protocol_stage_counts(protocol: str, p: int) -> Tuple[int, int]:
+    """(start stages, wait stages) of ``protocol``'s start/wait split on an
+    axis of size ``p`` — the pipeline-step counts plan entries carry so
+    schedulers know how much of a collective ``start`` puts in flight.
+    Protocols without a natural seam run entirely in the start phase."""
+    if p <= 1:
+        return (0, 0)
+    lg = (p - 1).bit_length()            # ceil(log2 p)
+    table = {
+        costmodel.RING: (p - 1, p - 1),                # RS | AG
+        costmodel.BIDIR_RING: (p - 1, p // 2),         # bidir RS | bidir AG
+        costmodel.RECURSIVE_HALVING: (lg, lg),         # halving RS | dbl AG
+        costmodel.RECURSIVE_DOUBLING: (lg, 0),
+        costmodel.XLA_DEFAULT: (1, 0),
+        costmodel.BRUCK: (lg, 0),
+        costmodel.PAIRWISE: (p - 1, 0),
+        costmodel.BINOMIAL_TREE: (lg, 0),
+        # van de Geijn broadcast: binomial scatter | ring all-gather
+        costmodel.TWO_PHASE_2D: (p - 1, 2 * (p - 1)),  # RS(ax0) | AR+AG
+        costmodel.HIERARCHICAL: (p - 1, 2 * (p - 1)),
+    }
+    return table.get(protocol, (1, 0))
+
+
+def phase_wire_bytes(protocol: str, p: int, nbytes: int) -> Tuple[int, int]:
+    """Per-device wire bytes each phase of the split moves for an
+    ``nbytes`` payload — what ``CommStats.record_phase`` attributes.
+    Ring-class protocols move (p-1)/p·n per phase; start-only protocols
+    put everything in flight at ``start``."""
+    if p <= 1:
+        return (0, 0)
+    n = int(nbytes)
+    share = (p - 1) * n // p
+    lg = (p - 1).bit_length()
+    table = {
+        costmodel.RING: (share, share),
+        costmodel.BIDIR_RING: (share, share),
+        costmodel.RECURSIVE_HALVING: (share, share),
+        costmodel.RECURSIVE_DOUBLING: (lg * n, 0),
+        costmodel.XLA_DEFAULT: (2 * share, 0),
+        costmodel.BRUCK: (share, 0),
+        costmodel.PAIRWISE: (share, 0),
+        costmodel.BINOMIAL_TREE: (lg * n, 0),
+        costmodel.TWO_PHASE_2D: (share, share + 2 * n // p),
+        costmodel.HIERARCHICAL: (share, share + 2 * n // p),
+    }
+    return table.get(protocol, (n, 0))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """One planned dispatch-table row: the cost-model choice plus the
+    two-phase stage counts of the chosen protocol on this axis."""
+
+    protocol: str
+    est_seconds: float
+    alternatives: Tuple[Tuple[str, float], ...]
+    start_stages: int
+    wait_stages: int
+
+    @classmethod
+    def from_choice(cls, choice: ProtocolChoice, p: int) -> "PlanEntry":
+        start, wait = protocol_stage_counts(choice.protocol, p)
+        return cls(protocol=choice.protocol, est_seconds=choice.est_seconds,
+                   alternatives=choice.alternatives,
+                   start_stages=start, wait_stages=wait)
+
+
 @dataclasses.dataclass
 class PlanStats:
     """Observability for the plan cache (asserted by tests)."""
@@ -102,7 +177,7 @@ class CommPlan:
         self.enabled = enabled
         self.warm_functions = tuple(warm_functions)
         self.stats = PlanStats()
-        self._table: Dict[Tuple[str, str, int], ProtocolChoice] = {}
+        self._table: Dict[Tuple[str, str, int], PlanEntry] = {}
         # hot-path mirror of _table holding only the protocol string
         self._protocols: Dict[Tuple[str, str, int], str] = {}
         if enabled and composed:
@@ -122,16 +197,19 @@ class CommPlan:
                 for b in range(MAX_SIZE_BUCKET + 1):
                     self._plan_key(fn, axis, b)
 
-    def _plan_key(self, fn: str, axis: str, bucket: int) -> ProtocolChoice:
+    def _plan_key(self, fn: str, axis: str, bucket: int) -> PlanEntry:
         key = (fn, axis, bucket)
-        choice = self._table.get(key)
-        if choice is None:
+        entry = self._table.get(key)
+        if entry is None:
             self.stats.computes[key] += 1
             choice = costmodel.choose_protocol(
                 fn, bucket_nbytes(bucket), self.topology, axis)
-            self._table[key] = choice
-            self._protocols[key] = choice.protocol
-        return choice
+            p = (self.topology.axis_sizes.get(axis, 1)
+                 if self.topology is not None else 1)
+            entry = PlanEntry.from_choice(choice, p)
+            self._table[key] = entry
+            self._protocols[key] = entry.protocol
+        return entry
 
     # -- hot path ------------------------------------------------------
 
@@ -157,6 +235,16 @@ class CommPlan:
             return self._plan_key(fn, axis, b).protocol
         self.stats.hits += 1
         return proto
+
+    def entry_for(self, fn: str, nbytes: float, axis: str) -> PlanEntry:
+        """The full plan entry (protocol + stage counts) for a call site —
+        what the nonblocking start/wait arms consult."""
+        if self.composed and self.enabled and fn not in self.force:
+            return self._plan_key(fn, axis, size_bucket(nbytes))
+        proto = self.protocol_for(fn, nbytes, axis)
+        p = (self.topology.axis_sizes.get(axis, 1)
+             if self.topology is not None else 1)
+        return PlanEntry.from_choice(ProtocolChoice(proto, 0.0, ()), p)
 
     # -- invalidation --------------------------------------------------
 

@@ -3,6 +3,20 @@
 Uni- and bidirectional variants.  The bidirectional ring splits the payload
 in half and drives both torus directions concurrently, halving the beta
 term — only valid when the axis has wraparound links (Topology.wraparound).
+
+Every ring all-reduce is two pipeline stages — reduce-scatter then
+all-gather — and the engine's nonblocking start/wait arms split exactly at
+that seam: ``start`` runs the RS stage and returns the in-flight shard,
+``wait`` runs the AG stage.  The blocking ``*_all_reduce_flat`` entry
+points are the composition of the two, so the overlapped and blocking
+paths are bit-identical by construction.
+
+The RS combine step (summing the received partial into the local chunk)
+optionally runs through the Pallas ``repro.kernels.local_reduce`` kernel
+(``use_kernel=True``, same gating ``compression.py`` uses for quantize):
+it streams VMEM tiles and accumulates in f32, which is a pure-bandwidth
+win on TPU but NOT bit-identical to the jnp ``a + b`` path for sub-f32
+dtypes — keep it off when exact blocking/overlap parity matters.
 """
 
 from __future__ import annotations
@@ -14,7 +28,21 @@ from jax import lax
 from repro.core.protocols import common as c
 
 
-def ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
+def _combine(acc: jax.Array, contrib: jax.Array,
+             use_kernel: bool = False) -> jax.Array:
+    """The RS combine step: acc + contrib, optionally via the Pallas
+    tiled chunk-reduction kernel (f32 accumulation, cast back)."""
+    if use_kernel:
+        # same gating contract as compression's quantize: the kernel path
+        # compiles on TPU and falls back to the jnp oracle elsewhere
+        # (interpret mode is test-only — see repro.kernels.local_reduce.ops).
+        from repro.kernels.local_reduce import ops as lr_ops
+        return lr_ops.sum_chunks(jnp.stack([acc, contrib]), dtype=acc.dtype)
+    return acc + contrib
+
+
+def ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str,
+                             use_kernel: bool = False) -> jax.Array:
     """x2d: (p, chunk) per device.  Returns this device's fully-reduced chunk.
 
     Device i ends with sum_j x2d[j-th device][i].  p-1 steps, (p-1)/p * n
@@ -28,7 +56,7 @@ def ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
     acc = c.dyn_chunk(x2d, i - 1)
     for s in range(1, p):
         acc = lax.ppermute(acc, axis_name, fwd)
-        acc = acc + c.dyn_chunk(x2d, i - s - 1)
+        acc = _combine(acc, c.dyn_chunk(x2d, i - s - 1), use_kernel)
     return acc  # == reduced chunk i
 
 
@@ -48,7 +76,8 @@ def ring_all_gather_flat(shard: jax.Array, axis_name: str) -> jax.Array:
     return buf
 
 
-def bidir_ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
+def bidir_ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str,
+                                   use_kernel: bool = False) -> jax.Array:
     """Split each chunk in half; forward ring reduces the low halves,
     backward ring the high halves. Both directions are active every step."""
     p = x2d.shape[0]
@@ -56,7 +85,7 @@ def bidir_ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
         return x2d[0]
     chunk = x2d.shape[1]
     if chunk % 2:
-        return ring_reduce_scatter_flat(x2d, axis_name)
+        return ring_reduce_scatter_flat(x2d, axis_name, use_kernel)
     i = c.axis_index(axis_name)
     half = chunk // 2
     lo, hi = x2d[:, :half], x2d[:, half:]
@@ -66,8 +95,8 @@ def bidir_ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
     for s in range(1, p):
         acc_f = lax.ppermute(acc_f, axis_name, fwd)
         acc_b = lax.ppermute(acc_b, axis_name, bwd)
-        acc_f = acc_f + c.dyn_chunk(lo, i - s - 1)
-        acc_b = acc_b + c.dyn_chunk(hi, i + s + 1)
+        acc_f = _combine(acc_f, c.dyn_chunk(lo, i - s - 1), use_kernel)
+        acc_b = _combine(acc_b, c.dyn_chunk(hi, i + s + 1), use_kernel)
     return jnp.concatenate([acc_f, acc_b])  # reduced chunk i (both halves)
 
 
@@ -95,12 +124,41 @@ def bidir_ring_all_gather_flat(shard: jax.Array, axis_name: str) -> jax.Array:
     return buf
 
 
-def ring_all_reduce_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
-    """RS + AG: the classic bandwidth-optimal all-reduce."""
-    shard = ring_reduce_scatter_flat(x2d, axis_name)
+# ---------------------------------------------------------------------------
+# Stage-split all-reduce: start = RS stage, finish = AG stage.  The blocking
+# entry points compose the two, so start/wait callers are bit-identical.
+# ---------------------------------------------------------------------------
+
+def ring_all_reduce_start(x2d: jax.Array, axis_name: str,
+                          use_kernel: bool = False) -> jax.Array:
+    """First pipeline stage of the ring all-reduce (the reduce-scatter):
+    returns the in-flight reduced shard."""
+    return ring_reduce_scatter_flat(x2d, axis_name, use_kernel)
+
+
+def ring_all_reduce_finish(shard: jax.Array, axis_name: str) -> jax.Array:
+    """Remaining stage (the all-gather) on an in-flight shard."""
     return ring_all_gather_flat(shard, axis_name)
 
 
-def bidir_ring_all_reduce_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
-    shard = bidir_ring_reduce_scatter_flat(x2d, axis_name)
+def bidir_ring_all_reduce_start(x2d: jax.Array, axis_name: str,
+                                use_kernel: bool = False) -> jax.Array:
+    return bidir_ring_reduce_scatter_flat(x2d, axis_name, use_kernel)
+
+
+def bidir_ring_all_reduce_finish(shard: jax.Array,
+                                 axis_name: str) -> jax.Array:
     return bidir_ring_all_gather_flat(shard, axis_name)
+
+
+def ring_all_reduce_flat(x2d: jax.Array, axis_name: str,
+                         use_kernel: bool = False) -> jax.Array:
+    """RS + AG: the classic bandwidth-optimal all-reduce."""
+    shard = ring_all_reduce_start(x2d, axis_name, use_kernel)
+    return ring_all_reduce_finish(shard, axis_name)
+
+
+def bidir_ring_all_reduce_flat(x2d: jax.Array, axis_name: str,
+                               use_kernel: bool = False) -> jax.Array:
+    shard = bidir_ring_all_reduce_start(x2d, axis_name, use_kernel)
+    return bidir_ring_all_reduce_finish(shard, axis_name)

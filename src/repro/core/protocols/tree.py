@@ -33,18 +33,12 @@ def binomial_broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array
     return x
 
 
-def scatter_allgather_broadcast(x2d: jax.Array, axis_name: str,
-                                root: int = 0) -> jax.Array:
-    """van de Geijn large-message broadcast: binomial scatter of root's
-    chunks (log p rounds, halving payload each round) + ring all-gather.
-
-    x2d: (p, chunk) — the root's rows are the payload; other devices' rows
-    are ignored.  Returns (p, chunk) == root's x2d on every device.
-    Requires pow2 p (callers fall back to ``binomial_broadcast``).
-    """
+def scatter_allgather_start(x2d: jax.Array, axis_name: str,
+                            root: int = 0) -> jax.Array:
+    """First pipeline stage of the van de Geijn broadcast: the binomial
+    scatter of root's chunks (log p rounds, halving payload each round).
+    Returns this device's in-flight chunk."""
     p = x2d.shape[0]
-    if p == 1:
-        return x2d
     assert c.is_pow2(p), p
     i = c.axis_index(axis_name)
     r = jnp.mod(i - root, p)  # effective rank; root -> 0, owns chunk r
@@ -67,13 +61,35 @@ def scatter_allgather_broadcast(x2d: jax.Array, axis_name: str,
         receiving = jnp.equal(jnp.mod(r, 2 * k), k)
         buf = jnp.where(receiving, updated, buf)
         k //= 2
+    return c.dyn_chunk(buf, r)
 
-    # All-gather the per-device chunks.  ring_all_gather_flat keys rows by
-    # absolute device index; device d holds chunk (d - root) mod p, so a
-    # static roll restores chunk order.
+
+def scatter_allgather_finish(chunk: jax.Array, axis_name: str,
+                             root: int = 0) -> jax.Array:
+    """Remaining stage: ring all-gather of the scattered chunks.
+    ``ring_all_gather_flat`` keys rows by absolute device index; device d
+    holds chunk (d - root) mod p, so a static roll restores chunk order."""
     from repro.core.protocols import ring
-    gathered = ring.ring_all_gather_flat(c.dyn_chunk(buf, r), axis_name)
+    gathered = ring.ring_all_gather_flat(chunk, axis_name)
     return jnp.roll(gathered, -root, axis=0)
+
+
+def scatter_allgather_broadcast(x2d: jax.Array, axis_name: str,
+                                root: int = 0) -> jax.Array:
+    """van de Geijn large-message broadcast: binomial scatter of root's
+    chunks (log p rounds, halving payload each round) + ring all-gather.
+
+    x2d: (p, chunk) — the root's rows are the payload; other devices' rows
+    are ignored.  Returns (p, chunk) == root's x2d on every device.
+    Requires pow2 p (callers fall back to ``binomial_broadcast``).
+    Stage-split: the blocking path composes ``scatter_allgather_start`` +
+    ``scatter_allgather_finish`` (the engine's start/wait arms call the
+    stages directly, so both paths are bit-identical).
+    """
+    if x2d.shape[0] == 1:
+        return x2d
+    chunk = scatter_allgather_start(x2d, axis_name, root)
+    return scatter_allgather_finish(chunk, axis_name, root)
 
 
 def binomial_reduce_to_root(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:

@@ -3,17 +3,42 @@
 These exist *because* protocol and network are one entity (paper §4): they
 read the mesh structure (two ICI dimensions; slow DCN pod axis) and schedule
 accordingly — a generic single-axis protocol cannot express them.
+
+Both schedules are stage-split for the engine's nonblocking start/wait
+arms: ``*_start`` runs the first pipeline phase (the intra reduce-scatter,
+whose output is the in-flight shard) and ``*_finish`` runs the rest.  The
+blocking entry points compose the two stages, so the overlapped and
+blocking paths are bit-identical by construction.
 """
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.protocols import common as c
 from repro.core.protocols import recursive, ring
+
+
+def two_phase_start(x2d: jax.Array, axis0: str) -> jax.Array:
+    """Phase 1 of the 2D two-phase all-reduce: RS along axis0.  Returns
+    the in-flight 1/p0 shard."""
+    return ring.bidir_ring_reduce_scatter_flat(x2d, axis0)
+
+
+def two_phase_finish(shard: jax.Array, axis0: str, axis1: str,
+                     p0: int, chunk: int) -> jax.Array:
+    """Phases 2+3: AR(axis1) on the shard, then AG(axis0).  Returns flat
+    (p0 * chunk,)."""
+    p1 = c.axis_size(axis1)
+    shard2d, n = c.pad_flat(shard, p1)
+    shard2d = shard2d.reshape(p1, -1)
+    reduced = ring.bidir_ring_all_reduce_flat(shard2d, axis1)
+    shard = c.unpad(reduced.reshape(-1), n, shard.shape)
+    gathered = ring.bidir_ring_all_gather_flat(shard, axis0)
+    return gathered.reshape(p0 * chunk)
 
 
 def two_phase_all_reduce_2d(
@@ -24,15 +49,46 @@ def two_phase_all_reduce_2d(
 
     x2d: (p0, chunk) view of the payload.  Returns flat (p0 * chunk,).
     """
-    p0 = x2d.shape[0]
-    shard = ring.bidir_ring_reduce_scatter_flat(x2d, axis0)
-    p1 = c.axis_size(axis1)
-    shard2d, n = c.pad_flat(shard, p1)
-    shard2d = shard2d.reshape(p1, -1)
-    reduced = ring.bidir_ring_all_reduce_flat(shard2d, axis1)
-    shard = c.unpad(reduced.reshape(-1), n, shard.shape)
-    gathered = ring.bidir_ring_all_gather_flat(shard, axis0)
-    return gathered.reshape(p0 * x2d.shape[1])
+    shard = two_phase_start(x2d, axis0)
+    return two_phase_finish(shard, axis0, axis1, x2d.shape[0], x2d.shape[1])
+
+
+def hierarchical_start(
+    x: jax.Array, intra_axes: Sequence[str]
+) -> Tuple[jax.Array, List[Tuple[int, int]]]:
+    """Phase 1 of the cross-pod all-reduce: reduce-scatter over each intra
+    axis in turn.  Returns (in-flight flat shard, per-level (p, n) padding
+    bookkeeping the finish phase unwinds)."""
+    flat = x.reshape(-1)
+    sizes: List[Tuple[int, int]] = []
+    for ax in intra_axes:
+        p = c.axis_size(ax)
+        padded, n = c.pad_flat(flat, p)
+        flat = ring.bidir_ring_reduce_scatter_flat(padded.reshape(p, -1), ax)
+        flat = flat.reshape(-1)
+        sizes.append((p, n))
+    return flat, sizes
+
+
+def hierarchical_finish(
+    flat: jax.Array, sizes: Sequence[Tuple[int, int]],
+    intra_axes: Sequence[str], pod_axis: str, shape
+) -> jax.Array:
+    """Phases 2+3: inter-pod AR of the shard (slow DCN moves p_intra-x
+    fewer bytes), then intra-pod AG in reverse axis order."""
+    p_pod = c.axis_size(pod_axis)
+    if p_pod > 1:
+        if c.is_pow2(p_pod):
+            flat = recursive.recursive_doubling_all_reduce(flat, pod_axis)
+        else:
+            padded, n = c.pad_flat(flat, p_pod)
+            flat = ring.ring_all_reduce_flat(
+                padded.reshape(p_pod, -1), pod_axis
+            )[:n]
+    for (ax, (p, n)) in zip(reversed(list(intra_axes)), reversed(list(sizes))):
+        gathered = ring.bidir_ring_all_gather_flat(flat, ax)
+        flat = gathered.reshape(-1)[:n]
+    return flat.reshape(shape)
 
 
 def hierarchical_all_reduce(
@@ -43,32 +99,5 @@ def hierarchical_all_reduce(
 
     x: any shape; returns the same shape, summed over intra_axes+pod_axis.
     """
-    shape = x.shape
-    # Phase 1: reduce-scatter over each intra axis in turn.
-    flat = x.reshape(-1)
-    sizes = []
-    for ax in intra_axes:
-        p = c.axis_size(ax)
-        sizes.append(p)
-        padded, n = c.pad_flat(flat, p)
-        flat = ring.bidir_ring_reduce_scatter_flat(padded.reshape(p, -1), ax)
-        # NOTE: padding must be tracked to unpad after the gather phase; we
-        # keep it implicit by remembering n at each level.
-        flat = flat.reshape(-1)
-        sizes[-1] = (p, n)
-    # Phase 2: all-reduce the shard across pods (recursive doubling — pod
-    # axes are tiny, latency dominates on DCN).
-    p_pod = c.axis_size(pod_axis)
-    if p_pod > 1:
-        if c.is_pow2(p_pod):
-            flat = recursive.recursive_doubling_all_reduce(flat, pod_axis)
-        else:
-            padded, n = c.pad_flat(flat, p_pod)
-            flat = ring.ring_all_reduce_flat(
-                padded.reshape(p_pod, -1), pod_axis
-            )[:n]
-    # Phase 3: all-gather back over intra axes (reverse order).
-    for (ax, (p, n)) in zip(reversed(list(intra_axes)), reversed(sizes)):
-        gathered = ring.bidir_ring_all_gather_flat(flat, ax)
-        flat = gathered.reshape(-1)[:n]
-    return flat.reshape(shape)
+    flat, sizes = hierarchical_start(x, intra_axes)
+    return hierarchical_finish(flat, sizes, intra_axes, pod_axis, x.shape)

@@ -54,7 +54,8 @@ def build_session(mesh, model, opt, ds, args) -> "comm_mod.Session":
                                  sync_mode=args.sync,
                                  data_axes=("data",),
                                  bucket_grads=args.bucket_grads,
-                                 bucket_bytes=args.bucket_bytes)
+                                 bucket_bytes=args.bucket_bytes,
+                                 overlap=args.overlap)
     probe_step = trainer.make_train_step(model, opt, probe_cfg,
                                          mesh=probe.mesh, comm=probe.world)
     abstate = trainer.make_train_state(model, opt, abstract=True,
@@ -82,6 +83,13 @@ def main() -> None:
                     default=DEFAULT_BUCKET_BYTES,
                     help="size cap per fused dtype-grouped "
                          "gradient bucket")
+    ap.add_argument("--overlap", action="store_true", default=False,
+                    help="nonblocking start/wait gradient sync: bucket "
+                         "transfers overlap the peeled last microbatch's "
+                         "backward and each other (composed/compressed "
+                         "modes; bit-identical losses to blocking)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="force the blocking gradient-sync path")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
@@ -118,7 +126,8 @@ def main() -> None:
     tcfg = trainer.TrainCfg(microbatches=args.microbatches,
                             sync_mode=args.sync,
                             bucket_grads=args.bucket_grads,
-                            bucket_bytes=args.bucket_bytes)
+                            bucket_bytes=args.bucket_bytes,
+                            overlap=args.overlap)
 
     ds = SyntheticLMDataset(vocab_size=cfg.vocab_size,
                             seq_len=args.seq_len,

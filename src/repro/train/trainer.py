@@ -26,6 +26,15 @@ and fused into buckets of at most ``TrainCfg.bucket_bytes``, each an
 independent cost-model-planned collective (``comm.
 sync_gradients_bucketed``) so the alpha term amortizes and XLA overlaps
 the buckets.
+
+``TrainCfg.overlap`` (``--overlap`` on the launch CLI) switches the sync
+to the nonblocking start/wait protocol (MPI Advance's MPIX_Start/Wait
+analogue): the last microbatch is peeled out of the accumulation scan,
+buckets (or leaves) are synced in reverse layout order through persistent
+handles / two-phase communicator arms, and each unit's start phase is in
+flight while its neighbour reduces and the peeled backward runs.  The
+overlapped path performs the exact same arithmetic as the blocking one —
+losses are bit-identical (tests/test_overlap.py).
 """
 
 from __future__ import annotations
@@ -54,6 +63,12 @@ class TrainCfg:
     bucket_grads: bool = False           # beyond-paper: fused dtype buckets
     bucket_bytes: int = plan_mod.DEFAULT_BUCKET_BYTES  # size cap per bucket
     grad_dtype: Any = jnp.float32        # accumulation dtype
+    overlap: bool = False                # nonblocking start/wait grad sync
+    # peel the last microbatch out of the accumulation scan so bucket
+    # starts overlap its backward.  None = auto: peel on accelerator
+    # backends, skip on CPU hosts (no async dispatch to overlap with —
+    # inlining a second copy of the model body only slows the step).
+    overlap_peel: Any = None             # True | False | None (auto)
 
 
 def _tree_size(tree) -> int:
@@ -141,7 +156,17 @@ def _split_micro(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
 
 
 def _accumulate_grads(loss_fn: Callable, params, batch, n_micro: int,
-                      grad_dtype) -> Tuple[jax.Array, Params]:
+                      grad_dtype, peel_last: bool = False
+                      ) -> Tuple[jax.Array, Params]:
+    """Microbatched gradient accumulation.
+
+    ``peel_last=True`` peels the final microbatch out of the scan body
+    into straight-line code: a collective started right after the scan
+    then overlaps the peeled backward pass (XLA cannot interleave ops
+    into a scan, so without the peel every gradient sync waits for the
+    whole accumulation loop).  The peeled iteration performs the exact
+    same op sequence as the in-scan one, so losses stay bit-identical.
+    """
     if n_micro == 1:
         (loss, _), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch)
@@ -159,8 +184,14 @@ def _accumulate_grads(loss_fn: Callable, params, batch, n_micro: int,
 
     zeros = jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, grad_dtype), params)
-    (loss_sum, grads_sum), _ = jax.lax.scan(
-        body, (jnp.zeros((), jnp.float32), zeros), micro)
+    init = (jnp.zeros((), jnp.float32), zeros)
+    if peel_last:
+        head = jax.tree_util.tree_map(lambda x: x[:-1], micro)
+        tail = jax.tree_util.tree_map(lambda x: x[-1], micro)
+        carry, _ = jax.lax.scan(body, init, head)
+        (loss_sum, grads_sum), _ = body(carry, tail)
+    else:
+        (loss_sum, grads_sum), _ = jax.lax.scan(body, init, micro)
     inv = 1.0 / n_micro
     grads = jax.tree_util.tree_map(lambda g: g * inv, grads_sum)
     return loss_sum * inv, grads
@@ -194,6 +225,113 @@ def _leaf_sync(dcomm: "comm_mod.Communicator", axis_comms, grads, compress,
         lambda s: s.residual, new_states,
         is_leaf=lambda x: isinstance(x, EFState))
     return synced, new_ef
+
+
+# ---------------------------------------------------------------------------
+# Overlapped (nonblocking start/wait) gradient sync
+#
+# Both schedulers walk the work units in REVERSE layout order — backprop
+# produces the last layers' gradients first, so with the final microbatch
+# peeled out of the accumulation scan, XLA can issue the late-layer
+# buckets' start phases while the early layers' backward is still running.
+# The schedule is software-pipelined at depth 2: unit i's start is issued,
+# THEN unit i+1 (the previously started one) is waited and finalized, so
+# at every point one transfer is in flight behind the reduce/finalize work
+# of its neighbour.  Per-unit arithmetic is identical to the blocking
+# paths (same stage split, same scale, same EF update), so losses are
+# bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def _pipelined(units, start_one, finish_one):
+    """Reverse-order depth-2 software pipeline over ``units``."""
+    inflight = []
+    for u in reversed(units):
+        inflight.append((u, start_one(u)))
+        if len(inflight) > 1:
+            v, tok = inflight.pop(0)
+            finish_one(v, tok)
+    for v, tok in inflight:
+        finish_one(v, tok)
+
+
+def _bucket_sync_overlapped(dcomm, axis_comms, handles, buckets, grads,
+                            compress, ef):
+    """Overlapped twin of ``_bucket_sync``: uncompressed buckets go
+    through pre-bound persistent handles (one revocation check per start),
+    compressed buckets through the communicator's planned two-phase sync
+    (the EF residual mutates in its wait arm, nowhere else)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    out = [None] * len(leaves)
+    new_ef = [None] * len(buckets)
+    if compress:
+        # same layout contract (and the same actionable error) as the
+        # blocking engine.sync_gradients_bucketed path
+        if ef is None:
+            ef = bucket_ef_zeros(buckets)
+        elif (len(ef) != len(buckets)
+              or any(e.shape[-1] != b.size for e, b in zip(ef, buckets))):
+            raise ValueError(
+                f"ef_state layout {[e.shape[-1] for e in ef]} does not "
+                f"match the bucket plan {[b.size for b in buckets]} — was "
+                f"it built with the same bucket_bytes?")
+
+    def start_one(bi):
+        flat = plan_mod.gather_bucket(leaves, buckets[bi])
+        if compress:
+            # mean=False: the blocking bucketed path applies ONE full-axes
+            # scale after the cross-axis reductions — replicated below so
+            # the float op order (and hence the loss bits) match exactly.
+            return axis_comms[0].sync_gradient_start(
+                flat, mean=False, compress=True, ef_residual=ef[bi])
+        return handles[bi].start(flat)
+
+    def finish_one(bi, tok):
+        if compress:
+            y, res = axis_comms[0].sync_gradient_wait(tok)
+            for acomm in axis_comms[1:]:
+                y = acomm.all_reduce(y)
+            y = y * jnp.asarray(dcomm.mean_scale(), y.dtype)
+            new_ef[bi] = res
+        else:
+            y = handles[bi].wait(tok)
+        plan_mod.scatter_bucket(y, buckets[bi], out)
+
+    _pipelined(list(range(len(buckets))), start_one, finish_one)
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            tuple(new_ef) if compress else ef)
+
+
+def _leaf_sync_overlapped(dcomm, axis_comms, grads, compress, ef_tree):
+    """Overlapped twin of ``_leaf_sync``: one two-phase sync per leaf,
+    reverse layout order."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    out = [None] * len(leaves)
+    if compress:
+        ef_leaves = treedef.flatten_up_to(ef_tree)
+        new_ef = [None] * len(leaves)
+
+    def start_one(i):
+        if compress:
+            return axis_comms[0].sync_gradient_start(
+                leaves[i], compress=True, ef_residual=ef_leaves[i])
+        return dcomm.sync_gradient_start(leaves[i])
+
+    def finish_one(i, tok):
+        if compress:
+            y, res = axis_comms[0].sync_gradient_wait(tok)
+            for acomm in axis_comms[1:]:
+                y = acomm.all_reduce(y, mean=True)
+            new_ef[i] = res
+        else:
+            y, _ = dcomm.sync_gradient_wait(tok)
+        out[i] = y
+
+    _pipelined(list(range(len(leaves))), start_one, finish_one)
+    synced = jax.tree_util.tree_unflatten(treedef, out)
+    if not compress:
+        return synced, ef_tree
+    return synced, jax.tree_util.tree_unflatten(treedef, new_ef)
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +389,27 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
     # path's cross-axis stage are sequential single-axis collectives.
     axis_comms = tuple(comm.split(a) for a in data_axes)
 
+    # Overlapped mode: the bucket layout is static in (param shapes,
+    # dtypes, bucket_bytes), so uncompressed buckets get persistent
+    # handles bound ONCE here — protocol + tier + mean scale resolved at
+    # build time, a start is one revocation check.  sync_stats=True makes
+    # each start record its wire bytes under the engine's sync key
+    # exactly like the blocking planned path (the CommStats parity fix).
+    overlap = bool(cfg.overlap)
+    peel = cfg.overlap_peel
+    if peel is None:
+        peel = jax.default_backend() != "cpu"
+    peel = overlap and bool(peel)
+    buckets = ()
+    bucket_handles = ()
+    if overlap and cfg.bucket_grads:
+        buckets = grad_bucket_plan(model.abstract_params(), cfg)
+        if not compress:
+            bucket_handles = tuple(
+                dcomm.persistent("all_reduce", (b.size,), b.wire_dtype,
+                                 mean=True, sync_stats=True)
+                for b in buckets)
+
     def train_step(state, batch):
         bspecs = batch_specs(batch, data_axes)
 
@@ -260,13 +419,23 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
             out_specs=(P(), P()),
             axis_names=manual, check_vma=False)
         def inner(st, local_batch):
+            # overlap: peel the last microbatch out of the scan so the
+            # reverse-order bucket starts interleave with its backward.
             loss, grads = _accumulate_grads(
                 loss_fn, st["params"], local_batch, cfg.microbatches,
-                cfg.grad_dtype)
+                cfg.grad_dtype, peel_last=peel)
             ef = st.get("ef")
             if cfg.bucket_grads:
-                grads, new_ef = _bucket_sync(dcomm, grads, compress, ef,
-                                             cfg.bucket_bytes)
+                if overlap:
+                    grads, new_ef = _bucket_sync_overlapped(
+                        dcomm, axis_comms, bucket_handles, buckets, grads,
+                        compress, ef)
+                else:
+                    grads, new_ef = _bucket_sync(dcomm, grads, compress,
+                                                 ef, cfg.bucket_bytes)
+            elif overlap:
+                grads, new_ef = _leaf_sync_overlapped(
+                    dcomm, axis_comms, grads, compress, ef)
             else:
                 grads, new_ef = _leaf_sync(dcomm, axis_comms, grads,
                                            compress, ef)

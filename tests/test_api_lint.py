@@ -46,6 +46,24 @@ def test_lint_catches_lax_collectives():
     assert not check_api.check_source(ok, "x.py")
 
 
+def test_lint_catches_private_phase_arms():
+    """PR 5: engine-internal _start/_wait arms are implementation
+    surface; applications go through handles / Communicator methods."""
+    for snippet in ("y = eng._allreduce_1d_start(x, 'data')\n",
+                    "tok = self._compressed_start(x, 'data')\n",
+                    "y = eng._wait_inflight(tok)\n"):
+        out = check_api.check_source(snippet, "x.py")
+        assert out and "two-phase arm" in out[0], snippet
+    # public start/wait surface stays allowed; start/wait must be a
+    # whole name word (no _startup/_restart false positives)
+    ok = ("tok = handle.start(x)\ny = handle.wait(tok)\n"
+          "t2 = comm.all_reduce_start(x)\ny2 = comm.all_reduce_wait(t2)\n"
+          "t3 = comm.sync_gradient_start(g)\n"
+          "wd.start()\nckpt.wait()\n"
+          "srv._startup()\nloop._restart_watchdog()\n")
+    assert not check_api.check_source(ok, "x.py")
+
+
 def test_lint_exempts_core_and_comm():
     core = [v for v in check_api.check_paths(["src/repro/core"])]
     assert core == []          # exempt prefix: nothing reported

@@ -1,0 +1,475 @@
+"""Nonblocking persistent collectives (PR 5): start/wait stage splits,
+overlapped-vs-blocking bit-identity, CommStats phase/sync accounting,
+persistent-handle in-flight lifecycle across re-mesh, and the local_reduce
+kernel wiring in the ring reduce-scatter combine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_script
+from repro import comm as comm_mod
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        costmodel, registry, topology_from_mesh_shape)
+from repro.core import compression
+from repro.core import plan as plan_mod
+from repro.core.engine import SYNC_STATS_KEY
+from repro.core.protocols import ring
+from repro.runtime import substrate
+from repro.train import trainer
+
+AX = "data"
+P_AX = 8
+
+
+def full_engine(topo=None, **cfg_kw):
+    return CollectiveEngine(
+        topo or topology_from_mesh_shape((AX, "model"), (P_AX, 2)),
+        library=compose_library(registry.ALL_FUNCTIONS),
+        config=EngineConfig(**cfg_kw))
+
+
+# ---------------------------------------------------------------------------
+# Stage-split protocols: start∘finish must equal the blocking path EXACTLY
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proto", ["ring", "bidir_ring",
+                                   "recursive_halving",
+                                   "recursive_doubling", "xla_default"])
+def test_allreduce_start_wait_bit_identical(proto, rng):
+    eng = full_engine(force_protocol={"all_reduce": proto})
+    x = rng.randn(P_AX, 100).astype(np.float32)
+    blocking = jax.vmap(lambda v: eng.all_reduce(v, AX), axis_name=AX)(x)
+    split = jax.vmap(
+        lambda v: eng.all_reduce_wait(eng.all_reduce_start(v, AX)),
+        axis_name=AX)(x)
+    assert (np.asarray(blocking) == np.asarray(split)).all()
+    want = np.broadcast_to(x.sum(0), x.shape)
+    np.testing.assert_allclose(np.asarray(split), want, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_allreduce_start_wait_mean_scale_in_wait(rng):
+    eng = full_engine()
+    x = rng.randn(P_AX, 33).astype(np.float32)
+    got = jax.vmap(
+        lambda v: eng.all_reduce_wait(eng.all_reduce_start(v, AX,
+                                                           mean=True)),
+        axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.broadcast_to(x.mean(0), x.shape),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_multiaxis_start_wait_bit_identical(rng):
+    # 2-axis (two-phase) and pod (hierarchical) splits
+    topo2 = topology_from_mesh_shape(("pod", AX), (2, 4))
+    eng = full_engine(topo2)
+    x = rng.randn(2, 4, 50).astype(np.float32)
+    f_b = jax.vmap(jax.vmap(lambda v: eng.all_reduce(v, ("pod", AX)),
+                            axis_name=AX), axis_name="pod")(x)
+    f_o = jax.vmap(jax.vmap(
+        lambda v: eng.all_reduce_wait(eng.all_reduce_start(v, ("pod", AX))),
+        axis_name=AX), axis_name="pod")(x)
+    assert (np.asarray(f_b) == np.asarray(f_o)).all()
+
+    topo3 = topology_from_mesh_shape((AX, "aux"), (4, 2))
+    eng3 = full_engine(topo3)
+    f_b = jax.vmap(jax.vmap(lambda v: eng3.all_reduce(v, (AX, "aux")),
+                            axis_name="aux"), axis_name=AX)(x.reshape(4, 2, 50))
+    f_o = jax.vmap(jax.vmap(
+        lambda v: eng3.all_reduce_wait(eng3.all_reduce_start(v, (AX, "aux"))),
+        axis_name="aux"), axis_name=AX)(x.reshape(4, 2, 50))
+    assert (np.asarray(f_b) == np.asarray(f_o)).all()
+
+
+def test_monolithic_start_wait_bit_identical(rng):
+    topo = topology_from_mesh_shape(("pod", AX), (2, 4))
+    mono = comm_mod.Session(topology=topo, mode="monolithic").engine
+    x = rng.randn(2, 4, 17).astype(np.float32)
+    f_b = jax.vmap(jax.vmap(lambda v: mono.all_reduce(v, ("pod", AX)),
+                            axis_name=AX), axis_name="pod")(x)
+    f_o = jax.vmap(jax.vmap(
+        lambda v: mono.all_reduce_wait(
+            mono.all_reduce_start(v, ("pod", AX))),
+        axis_name=AX), axis_name="pod")(x)
+    assert (np.asarray(f_b) == np.asarray(f_o)).all()
+
+
+def test_checked_tier_runs_on_start_wait_path(rng):
+    """The L2 checked layer (finite-sanitize, CommStats calls) must run
+    on the nonblocking arms exactly as on the blocking tier-wrapped
+    dispatch — regression for the start arms skipping the tier stack."""
+    topo = topology_from_mesh_shape((AX,), (4,))
+    eng = comm_mod.Session(
+        topology=topo, mode="monolithic",
+        config=EngineConfig(mode="monolithic",
+                            sanitize_checked=True)).engine
+    x = rng.randn(4, 8).astype(np.float32)
+    x[0, 0] = np.nan
+    blocking = jax.vmap(lambda v: eng.all_reduce(v, AX), axis_name=AX)(x)
+    split = jax.vmap(
+        lambda v: eng.all_reduce_wait(eng.all_reduce_start(v, AX)),
+        axis_name=AX)(x)
+    assert np.isfinite(np.asarray(blocking)).all()
+    assert (np.asarray(blocking) == np.asarray(split)).all()
+    # ... and the checked tier counted BOTH calls in CommStats
+    assert eng.stats.calls["all_reduce"] == 2
+
+    # same contract for persistent bindings on a checked-tier engine
+    b = eng.bind_persistent("all_reduce", (8,), jnp.float32, AX)
+    c1 = jax.vmap(b.call, axis_name=AX)(x)
+    c2 = jax.vmap(lambda v: b.wait(b.start(v)), axis_name=AX)(x)
+    assert np.isfinite(np.asarray(c2)).all()
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+
+
+def test_overlapped_bucket_sync_validates_ef_layout(rng):
+    """The overlapped compressed path raises the same actionable bucket-
+    layout error as the blocking path, not an opaque broadcast error."""
+    sess = comm_mod.Session(
+        topology=topology_from_mesh_shape((AX,), (4,)))
+    dcomm = sess.split(AX)
+    acomms = (dcomm,)
+    leaves = [jax.ShapeDtypeStruct((600,), jnp.float32)]
+    buckets = plan_mod.plan_buckets(leaves)
+    bad_ef = (np.zeros((13,), np.float32),)
+    with pytest.raises(ValueError, match="bucket_bytes"):
+        jax.eval_shape(lambda g: jax.vmap(
+            lambda v: trainer._bucket_sync_overlapped(
+                dcomm, acomms, (), buckets, {"a": v}, True, bad_ef)[0],
+            axis_name=AX)(g),
+            {"a": jax.ShapeDtypeStruct((4, 600), jnp.float32)})
+
+
+def test_compressed_start_wait_bit_identical(rng):
+    eng = full_engine()
+    g = rng.randn(P_AX, 700).astype(np.float32)
+    ef = np.zeros((700,), np.float32)
+
+    def blocking(v):
+        y, st = eng.compressed_all_reduce(v, AX,
+                                          compression.EFState(residual=ef))
+        return y, st.residual
+
+    def split(v):
+        tok = eng.compressed_all_reduce_start(
+            v, AX, compression.EFState(residual=ef))
+        y, st = eng.compressed_all_reduce_wait(tok)
+        return y, st.residual
+
+    yb, rb = jax.vmap(blocking, axis_name=AX)(g)
+    yo, ro = jax.vmap(split, axis_name=AX)(g)
+    assert (np.asarray(yb) == np.asarray(yo)).all()
+    assert (np.asarray(rb) == np.asarray(ro)).all()
+
+
+def test_sync_gradient_start_wait_matches_bucketed(rng):
+    eng = full_engine()
+    g = rng.randn(P_AX, 600).astype(np.float32)
+    blk = jax.vmap(lambda v: eng.sync_gradients_bucketed(
+        {"a": v}, AX)[0]["a"], axis_name=AX)(g)
+    ovl = jax.vmap(lambda v: eng.sync_gradient_wait(
+        eng.sync_gradient_start(v, AX))[0], axis_name=AX)(g)
+    assert (np.asarray(blk) == np.asarray(ovl)).all()
+
+
+def test_inflight_token_single_use(rng):
+    eng = full_engine()
+
+    def double_wait(v):
+        tok = eng.all_reduce_start(v, AX)
+        y = eng.all_reduce_wait(tok)
+        eng.all_reduce_wait(tok)          # must raise
+        return y
+
+    with pytest.raises(RuntimeError, match="already waited"):
+        jax.eval_shape(lambda a: jax.vmap(double_wait, axis_name=AX)(a),
+                       jax.ShapeDtypeStruct((P_AX, 8), jnp.float32))
+
+    def double_wait_compressed(v):
+        tok = eng.compressed_all_reduce_start(v, AX)
+        y, _ = eng.compressed_all_reduce_wait(tok)
+        eng.compressed_all_reduce_wait(tok)   # must raise
+        return y
+
+    with pytest.raises(RuntimeError, match="already waited"):
+        jax.eval_shape(
+            lambda a: jax.vmap(double_wait_compressed, axis_name=AX)(a),
+            jax.ShapeDtypeStruct((P_AX, 8), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Plan entries carry stage counts; CommStats attributes bytes per phase
+# ---------------------------------------------------------------------------
+
+def test_plan_entries_carry_stage_counts():
+    eng = full_engine()
+    e = eng.plan.entry_for("all_reduce", 1 << 20, AX)
+    assert e.protocol in (costmodel.RING, costmodel.BIDIR_RING,
+                          costmodel.RECURSIVE_HALVING)
+    assert e.start_stages > 0 and e.wait_stages > 0
+    # latency-optimal protocols have no wait stage (nothing to overlap)
+    small = eng.plan.entry_for("all_reduce", 8, AX)
+    if small.protocol == costmodel.RECURSIVE_DOUBLING:
+        assert small.wait_stages == 0
+    assert plan_mod.protocol_stage_counts(costmodel.RING, 8) == (7, 7)
+    assert plan_mod.protocol_stage_counts(costmodel.RECURSIVE_HALVING,
+                                          8) == (3, 3)
+    assert plan_mod.protocol_stage_counts(costmodel.XLA_DEFAULT, 8) == (1, 0)
+    assert plan_mod.protocol_stage_counts(costmodel.RING, 1) == (0, 0)
+
+
+def test_phase_bytes_attribution(rng):
+    eng = full_engine(force_protocol={"all_reduce": "ring"})
+    x = jax.ShapeDtypeStruct((P_AX, 1 << 12), jnp.float32)
+    jax.eval_shape(lambda a: jax.vmap(
+        lambda v: eng.all_reduce_wait(eng.all_reduce_start(v, AX)),
+        axis_name=AX)(a), x)
+    nb = (1 << 12) * 4
+    share = (P_AX - 1) * nb // P_AX
+    assert eng.stats.phase_bytes["all_reduce.start"] == share
+    assert eng.stats.phase_bytes["all_reduce.wait"] == share
+
+
+# ---------------------------------------------------------------------------
+# CommStats SYNC accounting: handle-covered syncs == planned path (the
+# under-reporting regression)
+# ---------------------------------------------------------------------------
+
+def test_handle_sync_stats_match_planned_path(rng):
+    grads = {"w": jax.ShapeDtypeStruct((256, 12), jnp.float32),
+             "b": jax.ShapeDtypeStruct((37,), jnp.bfloat16)}
+    leaves = jax.tree_util.tree_leaves(grads)
+    buckets = plan_mod.plan_buckets(leaves)
+
+    # planned (blocking) path
+    eng_a = full_engine()
+    jax.eval_shape(lambda g: jax.vmap(
+        lambda v: eng_a.sync_gradients_bucketed(v, AX)[0],
+        axis_name=AX)(g),
+        {k: jax.ShapeDtypeStruct((P_AX,) + v.shape, v.dtype)
+         for k, v in grads.items()})
+    planned_bytes = int(eng_a.stats.bytes[SYNC_STATS_KEY])
+    assert planned_bytes == sum(b.nbytes for b in buckets)
+
+    # persistent-handle path on the same tree
+    sess = comm_mod.Session(
+        topology=topology_from_mesh_shape((AX, "model"), (P_AX, 2)))
+    dcomm = sess.split(AX)
+    handles = [dcomm.persistent("all_reduce", (b.size,), b.wire_dtype,
+                                mean=True, sync_stats=True)
+               for b in buckets]
+
+    def handle_sync(g):
+        ls = jax.tree_util.tree_leaves(g)
+        out = [None] * len(ls)
+        for h, b in zip(handles, buckets):
+            y = h(plan_mod.gather_bucket(ls, b))
+            plan_mod.scatter_bucket(y, b, out)
+        return out
+
+    jax.eval_shape(lambda g: jax.vmap(handle_sync, axis_name=AX)(g),
+                   {k: jax.ShapeDtypeStruct((P_AX,) + v.shape, v.dtype)
+                    for k, v in grads.items()})
+    handle_bytes = int(sess.engine.stats.bytes[SYNC_STATS_KEY])
+    assert handle_bytes == planned_bytes
+
+    # ... and the start/wait arms record the same as the call arm
+    sess.engine.stats.bytes.clear()
+
+    def handle_sync_overlapped(g):
+        ls = jax.tree_util.tree_leaves(g)
+        toks = [h.start(plan_mod.gather_bucket(ls, b))
+                for h, b in zip(handles, buckets)]
+        out = [None] * len(ls)
+        for h, b, t in zip(handles, buckets, toks):
+            plan_mod.scatter_bucket(h.wait(t), b, out)
+        return out
+
+    jax.eval_shape(lambda g: jax.vmap(handle_sync_overlapped,
+                                      axis_name=AX)(g),
+                   {k: jax.ShapeDtypeStruct((P_AX,) + v.shape, v.dtype)
+                    for k, v in grads.items()})
+    assert int(sess.engine.stats.bytes[SYNC_STATS_KEY]) == planned_bytes
+
+
+def test_handle_start_wait_matches_call(rng):
+    sess = comm_mod.Session(
+        topology=topology_from_mesh_shape((AX, "model"), (P_AX, 2)))
+    d = sess.split(AX)
+    h = d.persistent("all_reduce", (33,), jnp.float32, mean=True)
+    x = rng.randn(P_AX, 33).astype(np.float32)
+    a = jax.vmap(h, axis_name=AX)(x)
+    b = jax.vmap(lambda v: h.wait(h.start(v)), axis_name=AX)(x)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    assert h.inflight == 0
+
+
+# ---------------------------------------------------------------------------
+# Handle lifecycle across a GROW re-mesh + in-flight protection
+# ---------------------------------------------------------------------------
+
+def test_handle_grow_remesh_and_inflight_errors(rng):
+    sess = comm_mod.Session(
+        topology=topology_from_mesh_shape((AX,), (2,)))
+    d = sess.split(AX)
+    h = d.persistent("all_reduce", (33,), jnp.float32, mean=True)
+
+    # a start that is never waited blocks the re-mesh with a clear error
+    jax.eval_shape(
+        lambda v: jax.vmap(lambda u: (h.start(u), u)[1], axis_name=AX)(v),
+        jax.ShapeDtypeStruct((2, 33), jnp.float32))
+    assert h.inflight == 1
+    grown = substrate.abstract_mesh((4,), (AX,))
+    with pytest.raises(comm_mod.InFlightHandleError, match="never waited"):
+        sess.remesh(grown)
+    assert h.abandon_inflight() == 1
+
+    # grow 2 -> 4: the rebound handle dispatches on the NEW topology
+    assert sess.remesh(grown)
+    assert h.epoch == 2 and h.revocations == 1 and not h.revoked
+    x4 = rng.randn(4, 33).astype(np.float32)
+    y = jax.vmap(h, axis_name=AX)(x4)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.broadcast_to(x4.mean(0), x4.shape),
+                               rtol=1e-4, atol=1e-6)
+    # the mean scale followed the grown axis (1/4, not the bound-time 1/2)
+    assert h.binding.mean_scale == pytest.approx(0.25)
+
+    # a token started under a previous epoch is refused at wait, loudly —
+    # the reduction was dropped by the re-mesh, not silently completed
+    import repro.comm.session as sess_mod
+    stale = sess_mod.HandleInFlight(handle=h, epoch=1, inner=None)
+    with pytest.raises(comm_mod.HandleRevokedError, match="dropped"):
+        h.wait(stale)
+
+
+# ---------------------------------------------------------------------------
+# local_reduce kernel in the ring RS combine (use_kernel gating + parity)
+# ---------------------------------------------------------------------------
+
+def test_ring_combine_kernel_parity(rng):
+    x = rng.randn(P_AX, P_AX, 64).astype(np.float32)
+    plain = jax.vmap(lambda v: ring.ring_reduce_scatter_flat(v, AX),
+                     axis_name=AX)(x)
+    gated = jax.vmap(lambda v: ring.ring_reduce_scatter_flat(v, AX, True),
+                     axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(gated),
+                               rtol=1e-6, atol=1e-6)
+    bidir = jax.vmap(
+        lambda v: ring.bidir_ring_reduce_scatter_flat(v, AX, True),
+        axis_name=AX)(x)
+    np.testing.assert_allclose(
+        np.asarray(bidir),
+        np.asarray(jax.vmap(
+            lambda v: ring.bidir_ring_reduce_scatter_flat(v, AX),
+            axis_name=AX)(x)), rtol=1e-6, atol=1e-6)
+
+
+def test_engine_local_reduce_kernel_gating(rng):
+    eng = full_engine(use_local_reduce_kernel=True,
+                      force_protocol={"all_reduce": "ring"})
+    ref = full_engine(force_protocol={"all_reduce": "ring"})
+    x = rng.randn(P_AX, 128).astype(np.float32)
+    a = jax.vmap(lambda v: eng.all_reduce(v, AX), axis_name=AX)(x)
+    b = jax.vmap(lambda v: ref.all_reduce(v, AX), axis_name=AX)(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Peeled last microbatch: bit-identical accumulation
+# ---------------------------------------------------------------------------
+
+def test_peeled_accumulation_bit_identical(rng):
+    params = {"w": jnp.asarray(rng.randn(4, 3), jnp.float32)}
+    batch = {"tokens": jnp.asarray(rng.randn(6, 4), jnp.float32)}
+
+    def loss_fn(p, b):
+        return jnp.sum((b["tokens"] @ p["w"]) ** 2), None
+
+    for n in (2, 3, 6):
+        l0, g0 = trainer._accumulate_grads(loss_fn, params, batch, n,
+                                           jnp.float32, peel_last=False)
+        l1, g1 = trainer._accumulate_grads(loss_fn, params, batch, n,
+                                           jnp.float32, peel_last=True)
+        assert (np.asarray(l0) == np.asarray(l1)).all(), n
+        assert (np.asarray(g0["w"]) == np.asarray(g1["w"])).all(), n
+
+
+# ---------------------------------------------------------------------------
+# BENCH_plan.json schema guard
+# ---------------------------------------------------------------------------
+
+def test_bench_payload_schema_guard(tmp_path):
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import run as bench_run
+    errors = bench_run.validate_payload({"overlap": {"overlap_speedup": 1}})
+    assert any("step_us_blocking" in e for e in errors)
+    assert any("dispatch" in e for e in errors)
+    out = tmp_path / "BENCH_plan.json"
+    with pytest.raises(RuntimeError, match="partial"):
+        bench_run.write_plan_json({"dispatch": {}}, str(out))
+    assert not out.exists()
+
+
+# ---------------------------------------------------------------------------
+# The acceptance test: overlapped vs blocking train steps are
+# bit-identical — compressed and uncompressed, bucketed and leaf sync —
+# with the peel forced on (the CPU auto-gate would skip it)
+# ---------------------------------------------------------------------------
+
+def test_overlapped_train_step_bit_identical_losses():
+    run_subprocess_script("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, make_train_state, make_train_step, trainer
+from repro import comm as comm_mod
+from repro.data import SyntheticLMDataset
+from repro.parallel.sharding import named_shardings
+from repro.runtime import substrate
+
+mesh = substrate.make_mesh((8,), ("data",))
+cfg = get_config("granite-34b", reduced=True)
+model = build_model(cfg)
+opt = make_optimizer("adamw", lr=1e-3)
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=16)
+sess = comm_mod.Session(mesh=mesh)
+
+for bucket in (True, False):
+    for sync in ("composed", "compressed"):
+        results = {}
+        for overlap in (False, True):
+            tcfg = TrainCfg(sync_mode=sync, data_axes=("data",),
+                            microbatches=2, bucket_grads=bucket,
+                            overlap=overlap, overlap_peel=overlap)
+            step = make_train_step(model, opt, tcfg, comm=sess.world)
+            with substrate.set_mesh(mesh):
+                state = make_train_state(model, opt, jax.random.PRNGKey(0),
+                                         cfg=tcfg)
+                state = jax.device_put(state, named_shardings(
+                    mesh, trainer.state_specs(model, opt, tcfg)))
+                jstep = jax.jit(step)
+                losses = []
+                for i in range(2):
+                    state, metrics = jstep(
+                        state, ds.sharded_batch(i, mesh,
+                                                batch_axes=("data",)))
+                    losses.append(float(metrics["loss"]))
+            results[overlap] = (losses, [
+                np.asarray(l)
+                for l in jax.tree_util.tree_leaves(state["params"])])
+        (lb, pb), (lo, po) = results[False], results[True]
+        assert lb == lo, (bucket, sync, lb, lo)
+        assert all((a == b).all() for a, b in zip(pb, po)), (bucket, sync)
+        print(f"bucket={bucket} sync={sync} bit-identical OK", flush=True)
+print("OK")
+""", timeout=420)

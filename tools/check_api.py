@@ -11,7 +11,13 @@ EXCEPT the implementation layers ``src/repro/core`` and ``src/repro/comm``:
   2. no direct ``jax.lax`` collective calls (``psum``, ``all_gather``,
      ``ppermute``, ``axis_index``, ...) — model-internal collectives go
      through ``repro.comm.collectives``, application collectives through
-     a ``Communicator``.
+     a ``Communicator``;
+
+  3. no calls to ``_start``/``_wait``-suffixed engine internals
+     (``_allreduce_1d_start``, ``_compressed_wait``, ...) — the
+     nonblocking two-phase protocol's public surface is
+     ``PersistentHandle.start/wait`` and the Communicator's
+     ``all_reduce_start/wait`` / ``sync_gradient_start/wait``.
 
 Pure AST walk, no imports of the checked code.  Wired into tier-1 via
 ``tests/test_api_lint.py``; also runnable standalone:
@@ -37,6 +43,17 @@ LAX_COLLECTIVES = frozenset({
 
 #: deprecated CollectiveEngine constructors (classmethod spellings).
 ENGINE_CTORS = frozenset({"for_mesh", "from_application", "monolithic"})
+
+
+def _is_private_phase_arm(attr: str) -> bool:
+    """Underscore-prefixed attribute with ``start``/``wait`` as a name
+    word — an engine-internal arm of the two-phase split (rule 3).
+    Matches ``_allreduce_1d_start``, ``_compressed_wait``, and
+    ``_wait_inflight`` alike; ``_startup``/``_restart`` do not count
+    (the word must be exactly start/wait)."""
+    if not attr.startswith("_") or attr.startswith("__"):
+        return False
+    return bool({"start", "wait"} & set(attr.strip("_").split("_")))
 
 #: path prefixes (relative to repo root, "/"-separated) that ARE the
 #: implementation and may touch engines/lax freely.
@@ -108,6 +125,12 @@ def check_source(src: str, relpath: str) -> List[str]:
                 out.append(f"{relpath}:{node.lineno}: direct jax.lax."
                            f"{fn.attr} — route through repro.comm "
                            f"(Communicator or repro.comm.collectives)")
+            # engine._allreduce_1d_start(...) etc. — private phase arms
+            elif _is_private_phase_arm(fn.attr):
+                out.append(f"{relpath}:{node.lineno}: calls private "
+                           f"two-phase arm {fn.attr} — use "
+                           f"PersistentHandle.start/wait or the "
+                           f"Communicator's *_start/*_wait methods")
     return out
 
 
