@@ -73,7 +73,12 @@ def layer_numbers() -> dict:
     mono = comm_mod.Session(topology=topo, mode="monolithic")
     sess = comm_mod.Session(topology=topo, library=lib)
     dcomm = sess.split("data")
-    handles = [dcomm.persistent(fn, (1 << 18,), jnp.float32)
+    # send_recv handles bind a fixed pair list (the persistent analogue
+    # of MPI_Send_init's peer argument)
+    extra = {"send_recv": {"pairs": tuple((i, (i + 1) % 16)
+                                          for i in range(16))}}
+    handles = [dcomm.persistent(fn, (1 << 18,), jnp.float32,
+                                **extra.get(fn, {}))
                for fn in costmodel.protocol_functions()]
     return {
         "monolithic": mono.average_layer_number(),

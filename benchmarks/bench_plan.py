@@ -70,12 +70,14 @@ def payload(smoke: bool = False) -> dict:
     from benchmarks.bench_elastic import recovery_latency
     from benchmarks.bench_layers import dispatch_overhead, layer_numbers
     from benchmarks.bench_overlap import overlap_metrics
+    ov = overlap_metrics(smoke=smoke)
     return {
         "dispatch": dispatch_overhead(repeat=100 if smoke else 300),
         "average_layer_number": layer_numbers(),
         "wire_bytes": wire_bytes(scale=1 if smoke else 4),
         "recovery": recovery_latency(smoke=smoke),
-        "overlap": overlap_metrics(smoke=smoke),
+        "overlap": ov["overlap"],
+        "schedule": ov["schedule"],
     }
 
 
@@ -112,7 +114,19 @@ def run(smoke: bool = False):
     t4.add("overlapped step", f"{o['step_us_overlapped'] / 1e3:.2f} ms")
     t4.add("overlap speedup", f"{o['overlap_speedup']:.3f}x")
     t4.add("exposed comm frac", f"{o['exposed_comm_frac']:.3f}")
-    return [t, t2, t3, t4], p
+    s = p["schedule"]
+    t5 = Table(f"bench_plan: schedule IR (depth-{s['depth']} rewrite of "
+               f"{s['n_units']} sync units)", ["metric", "value"])
+    t5.add("pass pipeline",
+           " + ".join(f"{k} {v:.0f}us" for k, v in s["pass_us"].items()))
+    t5.add("progress ops emitted", f"{s['n_progress_ops']}")
+    pred = sum(s["predicted_phase_bytes"].values())
+    meas = sum(s["measured_phase_bytes"].values())
+    t5.add("phase bytes predicted/measured", f"{pred:,d} / {meas:,d}")
+    t5.add(f"modeled exposed frac depth 2 -> {s['depth']}",
+           f"{s['exposed_comm_frac_depth2']:.3f} -> "
+           f"{s['exposed_comm_frac_depthN']:.3f}")
+    return [t, t2, t3, t4, t5], p
 
 
 def main():

@@ -32,6 +32,9 @@ REQUIRED_KEYS = {
     "recovery": ("restore_s", "remesh_s", "replan_s", "total_s"),
     "overlap": ("exposed_comm_frac", "step_us_blocking",
                 "step_us_overlapped", "overlap_speedup"),
+    "schedule": ("depth", "pass_us", "predicted_phase_bytes",
+                 "measured_phase_bytes", "exposed_comm_frac_depth2",
+                 "exposed_comm_frac_depthN"),
 }
 
 

@@ -39,15 +39,17 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import weakref
-from typing import Callable, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
 from repro.core import compose as compose_mod
-from repro.core import layers, registry, trace
+from repro.core import costmodel, layers, registry, trace
 from repro.core import plan as plan_mod
+from repro.core import schedule as schedule_mod
 from repro.core.compose import ComposedLibrary
-from repro.core.engine import CollectiveEngine, EngineConfig, PersistentBinding
+from repro.core.engine import (CollectiveEngine, EngineConfig,
+                               PersistentBinding, _compressed_wire_bytes)
 from repro.core.topology import (Topology, topology_from_mesh,
                                  topology_from_mesh_shape)
 from repro.runtime import substrate
@@ -187,6 +189,28 @@ class PersistentHandle:
         self._pending += 1
         return HandleInFlight(handle=self, epoch=self.epoch, inner=inner)
 
+    def progress(self, token: HandleInFlight, stages: int = 1) -> int:
+        """Advance the in-flight collective by up to ``stages`` wait-phase
+        protocol stages without completing it (*MPI Progress For All* —
+        the schedule IR's ``progress`` op).  Non-consuming: the token
+        stays waitable, and stale-epoch tokens raise exactly like
+        ``wait`` — progressing a reduction a re-mesh already dropped
+        would move garbage.  Returns stages actually retired (0 for
+        seamless protocols or a drained wait phase)."""
+        if token.handle is not self:
+            raise ValueError(f"token for {token.handle.fn} handle "
+                             f"progressed on a different handle ({self.fn})")
+        if self.revoked or token.epoch != self.epoch:
+            raise HandleRevokedError(
+                f"in-flight {self.fn} collective was started under binding "
+                f"epoch {token.epoch} but the handle is now "
+                + (f"revoked ({self._stale_reason})" if self.revoked else
+                   f"at epoch {self.epoch}") + " — cannot progress a "
+                "dropped reduction")
+        if self.binding.progress is None:
+            return 0
+        return self.binding.progress(token.inner, stages)
+
     def wait(self, token: HandleInFlight):
         """Run the remaining stages and finalize (unpad + mean scale).
         A token started under a previous binding epoch raises — its
@@ -309,6 +333,12 @@ class Communicator:
     def all_reduce_wait(self, token):
         return self._engine.all_reduce_wait(token)
 
+    def all_reduce_progress(self, token, stages: int = 1) -> int:
+        """Retire up to ``stages`` wait-phase protocol stages (ring hops,
+        doubling rounds) of an in-flight all-reduce without completing it
+        — the schedule IR's ``progress`` op.  Returns stages taken."""
+        return self._engine.all_reduce_progress(token, stages)
+
     def sync_gradient_start(self, g, *, mean: bool = True,
                             compress: bool = False, ef_residual=None):
         """Two-phase arm of one gradient tensor's sync (a fused bucket or
@@ -317,6 +347,12 @@ class Communicator:
         return self._engine.sync_gradient_start(
             g, self._axis_arg, mean=mean, compress=compress,
             ef_residual=ef_residual)
+
+    def sync_gradient_progress(self, token, stages: int = 1) -> int:
+        """Advance one in-flight gradient sync by up to ``stages``
+        wait-phase stages without finalizing (no mean scale, no EF
+        mutation — those belong to wait).  Returns stages taken."""
+        return self._engine.sync_gradient_progress(token, stages)
 
     def sync_gradient_wait(self, token):
         """Finalize one in-flight gradient sync — remaining stages, mean
@@ -380,6 +416,66 @@ class Communicator:
         return self._engine.sync_gradients_bucketed(
             grads, self._axis_arg, mean=mean, bucket_bytes=bucket_bytes,
             compress=compress, ef_state=ef_state, dtype_aware=dtype_aware)
+
+    # -- schedule IR (PR 6) --------------------------------------------
+
+    def sync_schedule(self, specs, *, compress: bool = False,
+                      compute=(), meta=None) -> schedule_mod.Schedule:
+        """Build the canonical *blocking* gradient-sync schedule over this
+        communicator's axes — the ONLY place sync programs construct IR
+        nodes (``tools/check_api.py`` forbids node construction outside
+        ``repro/core``/``repro/comm``, so the trainer asks the
+        communicator for its program and rewrites it with passes).
+
+        ``specs`` is a sequence of ``(name, n_elems, dtype)`` triples —
+        one per work unit (a fused bucket or a leaf), in layout order.
+        Each unit is annotated with the planner's protocol choice, its
+        honest (start, wait) stage split, and the cost model's per-phase
+        wire bytes, so ``predicted_phase_bytes`` is directly comparable
+        to ``CommStats.phase_bytes``.  ``compute`` entries (``tag`` or
+        ``(tag, overlappable)``) become opaque compute barriers ahead of
+        the comm region — the peeled microbatch the hoist pass targets.
+        """
+        eng = self._engine
+        topo = eng.topology
+        p0 = topo.axis_sizes.get(self.axes[0], 1)
+        units = []
+        for idx, (name, n_elems, dtype) in enumerate(specs):
+            n_elems = int(n_elems)
+            nbytes = n_elems * jnp.dtype(dtype).itemsize
+            if compress:
+                # int8 ring over the first axis; cross-axis reductions run
+                # blocking inside wait (not phase-attributed)
+                fn = registry.COMPRESSED_ALL_REDUCE
+                proto = costmodel.RING
+                wire = _compressed_wire_bytes(n_elems)
+                ss, ws = plan_mod.protocol_stage_counts(proto, p0)
+                sb, wb = plan_mod.phase_wire_bytes(proto, p0, wire)
+            elif len(self.axes) > 1:
+                # multi-axis schedules are fixed by the axis set
+                fn = registry.ALL_REDUCE
+                proto = (costmodel.HIERARCHICAL if "pod" in self.axes
+                         else costmodel.TWO_PHASE_2D)
+                ss, ws = plan_mod.protocol_stage_counts(proto, p0)
+                sb, wb = plan_mod.phase_wire_bytes(proto, p0, nbytes)
+            else:
+                fn = registry.ALL_REDUCE
+                entry = eng.plan.entry_for(fn, nbytes, self.axes[0])
+                proto = entry.protocol
+                ss, ws = entry.start_stages, entry.wait_stages
+                sb, wb = plan_mod.phase_wire_bytes(proto, p0, nbytes, fn)
+            units.append(schedule_mod.sync_unit(
+                name=str(name), index=idx, fn=fn, axes=self.axes,
+                protocol=proto, start_stages=ss, wait_stages=ws,
+                start_bytes=sb, wait_bytes=wb))
+        comp_ops = []
+        for entry in compute:
+            tag, overlappable = (entry if isinstance(entry, tuple)
+                                 else (entry, True))
+            comp_ops.append(schedule_mod.ComputeOp(
+                tag=str(tag), overlappable=bool(overlappable)))
+        return schedule_mod.build_sync_schedule(units, compute=comp_ops,
+                                                meta=meta)
 
     # -- persistent handles --------------------------------------------
 
@@ -557,6 +653,38 @@ class Session:
     def split(self, *axes: str) -> Communicator:
         return Communicator(self, axes)
 
+    # -- schedule IR (PR 6) --------------------------------------------
+
+    def schedule_for(self, step_fn: Callable, *abstract_args,
+                     passes=None, **abstract_kwargs
+                     ) -> schedule_mod.Schedule:
+        """The application's comm/compute program as a schedule: trace
+        ``step_fn`` with abstract inputs over this session's mesh, lift
+        the collective sites into schedule IR, and re-annotate every unit
+        through the session's ``CommPlan`` (planned protocol, honest
+        stage split, cost-model phase bytes).  ``passes`` — ``(name,
+        pass)`` pairs, e.g. ``plan.canonical_overlap_passes(depth)`` —
+        are applied with per-pass timings recorded in
+        ``schedule.meta["pass_us"]``.  Nothing executes."""
+        with self.activate():
+            report = trace.scan_step(step_fn, *abstract_args,
+                                     **abstract_kwargs)
+        sched = report.to_schedule(plan=self._engine.plan,
+                                   topology=self._engine.topology)
+        if passes:
+            sched, timings = plan_mod.run_passes(sched, passes)
+            sched.meta["pass_us"] = timings
+        return sched
+
+    def timeline_diff(self, schedule: schedule_mod.Schedule
+                      ) -> Dict[str, Dict[str, int]]:
+        """Predicted-vs-measured phase-byte diff: the schedule's cost-model
+        prediction against what this session's engine actually recorded
+        (``CommStats.phase_bytes``) — per ``"<fn>.<phase>"`` key, with
+        ``predicted``, ``measured``, and ``delta``."""
+        return schedule_mod.timeline_diff(
+            schedule, dict(self._engine.stats.phase_bytes))
+
     # -- lifecycle ------------------------------------------------------
 
     def _register(self, handle: PersistentHandle) -> None:
@@ -585,7 +713,8 @@ class Session:
         if pending:
             raise InFlightHandleError(
                 "remesh would drop in-flight collectives: "
-                + "; ".join(f"{h.fn} handle has {h.inflight} start(s) "
+                + "; ".join(f"{h.fn}{list(h.shape)} handle (epoch "
+                            f"{h.epoch}) has {h.inflight} start(s) "
                             f"never waited" for h in pending)
                 + " — wait() the outstanding tokens (or "
                 "handle.abandon_inflight() if their trace was discarded) "

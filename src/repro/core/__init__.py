@@ -3,7 +3,7 @@ protocol collective engine for JAX meshes (Xiong, "Some New Approaches to
 MPI Implementations")."""
 
 from repro.core import (compose, compression, costmodel, layers, plan,
-                        registry, topology, trace)
+                        registry, schedule, topology, trace)
 from repro.core.compose import (ComposedLibrary, NotComposedError,
                                 compose as compose_library)
 from repro.core.engine import CollectiveEngine, EngineConfig
@@ -16,6 +16,6 @@ __all__ = [
     "CollectiveEngine", "CommPlan", "EngineConfig", "ComposedLibrary",
     "NotComposedError", "Topology", "TraceReport", "compose",
     "compose_library", "compression", "costmodel", "layers", "plan",
-    "plan_buckets", "registry", "scan_step", "topology",
+    "plan_buckets", "registry", "scan_step", "schedule", "topology",
     "topology_from_mesh", "topology_from_mesh_shape", "trace",
 ]

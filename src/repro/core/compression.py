@@ -12,7 +12,7 @@ protocol schedule and the pure-jnp path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -114,28 +114,63 @@ def compressed_ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str,
     return acc
 
 
+class CompressedAllGatherRun:
+    """Steppable int8 ring all-gather: one ``step()`` circulates the
+    quantized payload one ring hop (q + block scales on the wire) — the
+    per-stage ``progress()`` unit of the compressed sync.  ``result()``
+    drains the remaining hops; never stepping early reproduces the old
+    straight-line loop exactly."""
+
+    def __init__(self, acc: jax.Array, axis_name: str, p: int,
+                 block: int = QBLOCK, use_kernel: bool = False,
+                 out_dtype=jnp.float32):
+        chunk = acc.shape[0]
+        self.axis_name = axis_name
+        self.p = p
+        self.block = block
+        self.use_kernel = use_kernel
+        self.out_dtype = out_dtype
+        self.done = 0
+        self.total = max(0, p - 1)
+        self.i = c.axis_index(axis_name)
+        self.fwd = c.fwd_perm(p)
+        self.q, self.scale = _maybe_kernel_quantize(acc, block, use_kernel)
+        buf = jnp.zeros((p, chunk), jnp.float32)
+        self.buf = c.dyn_put(
+            buf, _maybe_kernel_dequantize(self.q, self.scale, block,
+                                          jnp.float32, use_kernel), self.i)
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.done
+
+    def step(self, stages: int = 1) -> int:
+        stages = min(int(stages), self.remaining)
+        for _ in range(stages):
+            self.done += 1
+            self.q = lax.ppermute(self.q, self.axis_name, self.fwd)
+            self.scale = lax.ppermute(self.scale, self.axis_name, self.fwd)
+            self.buf = c.dyn_put(
+                self.buf,
+                _maybe_kernel_dequantize(self.q, self.scale, self.block,
+                                         jnp.float32, self.use_kernel),
+                self.i - self.done,
+            )
+        return stages
+
+    def result(self) -> jax.Array:
+        self.step(self.remaining)
+        return self.buf.astype(self.out_dtype)
+
+
 def compressed_ring_all_gather_flat(acc: jax.Array, axis_name: str, p: int,
                                     block: int = QBLOCK,
                                     use_kernel: bool = False,
                                     out_dtype=jnp.float32) -> jax.Array:
     """The int8 ring's remaining stage: circulate the reduced chunks,
     still int8 on the wire.  acc: (chunk,) f32 -> (p, chunk) out_dtype."""
-    chunk = acc.shape[0]
-    i = c.axis_index(axis_name)
-    fwd = c.fwd_perm(p)
-    q, scale = _maybe_kernel_quantize(acc, block, use_kernel)
-    buf = jnp.zeros((p, chunk), jnp.float32)
-    buf = c.dyn_put(buf, _maybe_kernel_dequantize(q, scale, block, jnp.float32,
-                                                  use_kernel), i)
-    for s in range(1, p):
-        q = lax.ppermute(q, axis_name, fwd)
-        scale = lax.ppermute(scale, axis_name, fwd)
-        buf = c.dyn_put(
-            buf,
-            _maybe_kernel_dequantize(q, scale, block, jnp.float32, use_kernel),
-            i - s,
-        )
-    return buf.astype(out_dtype)
+    return CompressedAllGatherRun(acc, axis_name, p, block, use_kernel,
+                                  out_dtype).result()
 
 
 def compressed_ring_all_reduce_flat(x2d: jax.Array, axis_name: str,
@@ -179,6 +214,12 @@ class CompressedInFlight:
     use_kernel: bool
     has_state: bool
     waited: bool = False
+    #: lazily-created steppable AG (progress() instantiates it; wait
+    #: drains whatever remains, so never-progressed tokens keep the
+    #: exact blocking stage order)
+    ag_run: Any = None
+    #: wire bytes the wait phase still owes (engine progress accounting)
+    wait_bytes_left: Any = None
 
 
 def compressed_all_reduce_start(x: jax.Array, axis_name: str,
@@ -207,6 +248,23 @@ def compressed_all_reduce_start(x: jax.Array, axis_name: str,
         use_kernel=use_kernel, has_state=state is not None)
 
 
+def compressed_all_reduce_progress(tok: CompressedInFlight,
+                                   stages: int = 1) -> int:
+    """Advance the in-flight compressed all-reduce by up to ``stages``
+    int8 ring hops without completing it.  Returns hops actually taken
+    (0 once the AG is drained or on a single-rank axis)."""
+    if tok.waited:
+        raise RuntimeError(
+            "cannot progress an already-waited compressed_all_reduce token")
+    if tok.p == 1:
+        return 0
+    if tok.ag_run is None:
+        tok.ag_run = CompressedAllGatherRun(
+            tok.acc, tok.axis_name, tok.p, tok.block, tok.use_kernel,
+            out_dtype=jnp.float32)
+    return tok.ag_run.step(stages)
+
+
 def compressed_all_reduce_wait(tok: CompressedInFlight
                                ) -> Tuple[jax.Array, EFState | None]:
     """Run the remaining stage (int8 ring all-gather), unpad, and update
@@ -219,6 +277,8 @@ def compressed_all_reduce_wait(tok: CompressedInFlight
     tok.waited = True
     if tok.p == 1:
         reduced = tok.acc
+    elif tok.ag_run is not None:
+        reduced = tok.ag_run.result()   # drain hops progress() left over
     else:
         reduced = compressed_ring_all_gather_flat(
             tok.acc, tok.axis_name, tok.p, tok.block, tok.use_kernel,

@@ -31,6 +31,7 @@ PAIRWISE = "pairwise"
 BINOMIAL_TREE = "binomial_tree"
 TWO_PHASE_2D = "two_phase_2d"
 HIERARCHICAL = "hierarchical"          # cross-pod: intra-pod RS, inter-pod AR, intra-pod AG
+PIPELINE = "pipeline"                  # p2p shift: one ppermute hop
 
 
 def _axis(topo: Topology, axis: str) -> Tuple[int, float, float]:
@@ -164,6 +165,15 @@ def cost_broadcast_scatter_allgather(n: float, topo: Topology, axis: str) -> flo
 
 
 # ---------------------------------------------------------------------------
+# Point-to-point (pipeline send/recv: one ppermute hop)
+# ---------------------------------------------------------------------------
+
+def cost_p2p_hop(n: float, topo: Topology, axis: str) -> float:
+    _, a, bw = _axis(topo, axis)
+    return a + n / bw
+
+
+# ---------------------------------------------------------------------------
 # Hierarchical (cross-pod) all-reduce
 # ---------------------------------------------------------------------------
 
@@ -217,6 +227,12 @@ _MENU: Dict[str, Dict[str, Callable]] = {
     "broadcast": {
         BINOMIAL_TREE: cost_broadcast_binomial,
         RING: cost_broadcast_scatter_allgather,
+    },
+    "permute": {
+        PIPELINE: cost_p2p_hop,
+    },
+    "send_recv": {
+        PIPELINE: cost_p2p_hop,
     },
 }
 

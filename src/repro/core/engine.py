@@ -91,6 +91,9 @@ class InFlight:
     wait_bytes: int = 0         # wire bytes the wait phase will move
     scale: Optional[float] = None
     waited: bool = False
+    #: steppable wait-phase stage machine (a protocol *Run object) when
+    #: the protocol supports per-stage progress; None = wait-only seam.
+    stepper: Any = None
 
 
 @dataclasses.dataclass
@@ -383,24 +386,22 @@ class CollectiveEngine:
             return InFlight(fn, (axis,), lambda: y, proto, sb, wb)
         x2d, n, shape = self._chunked(x, p)
         uk = self.config.use_local_reduce_kernel
+        # the wait phase is held as a steppable Run object so progress()
+        # can retire individual AG stages; result() drains the rest, and
+        # a never-progressed token runs the exact blocking stage order
         if proto == costmodel.RING:
             shard = ring.ring_all_reduce_start(x2d, axis, uk)
-            fin = lambda: c.unpad(
-                ring.ring_all_reduce_finish(shard, axis).reshape(-1),
-                n, shape)
+            run = ring.RingAllGatherRun(shard, axis)
         elif proto == costmodel.BIDIR_RING:
             shard = ring.bidir_ring_all_reduce_start(x2d, axis, uk)
-            fin = lambda: c.unpad(
-                ring.bidir_ring_all_reduce_finish(shard, axis).reshape(-1),
-                n, shape)
+            run = ring.BidirRingAllGatherRun(shard, axis)
         elif proto == costmodel.RECURSIVE_HALVING:
             shard = recursive.halving_reduce_scatter_flat(x2d, axis)
-            fin = lambda: c.unpad(
-                recursive.doubling_all_gather_flat(shard, axis).reshape(-1),
-                n, shape)
+            run = recursive.DoublingAllGatherRun(shard, axis)
         else:
             raise ValueError(f"no all_reduce impl for protocol {proto!r}")
-        return InFlight(fn, (axis,), fin, proto, sb, wb)
+        fin = lambda: c.unpad(run.result().reshape(-1), n, shape)
+        return InFlight(fn, (axis,), fin, proto, sb, wb, stepper=run)
 
     def _allreduce_multiaxis(self, x: jax.Array, axes: Tuple[str, ...]
                              ) -> jax.Array:
@@ -684,6 +685,33 @@ class CollectiveEngine:
     def all_reduce_wait(self, token: InFlight) -> jax.Array:
         return self._wait_inflight(token)
 
+    def all_reduce_progress(self, token: InFlight, stages: int = 1) -> int:
+        return self._progress_inflight(token, stages)
+
+    def _progress_inflight(self, token: InFlight, stages: int = 1) -> int:
+        """The per-stage progression hop (*MPI Progress For All*): retire
+        up to ``stages`` wait-phase protocol stages of an in-flight
+        collective without completing it.  Returns stages actually taken
+        (0 for seamless protocols or a drained wait phase).
+
+        Byte conservation: each hop moves ``wait_bytes * k / remaining``
+        and decrements the token's wait budget, so start + progress +
+        wait phase bytes always sum to the blocking path's wire bytes.
+        """
+        if token.waited:
+            raise RuntimeError(
+                f"cannot progress an already-waited {token.fn} token")
+        run = token.stepper
+        if run is None or run.remaining <= 0:
+            return 0
+        remaining_before = run.remaining
+        k = run.step(stages)
+        if k:
+            moved = token.wait_bytes * k // remaining_before
+            token.wait_bytes -= moved
+            self.stats.record_phase(token.fn, "progress", moved)
+        return k
+
     def _wait_inflight(self, token: InFlight) -> jax.Array:
         if token.waited:
             raise RuntimeError(
@@ -712,11 +740,36 @@ class CollectiveEngine:
         self.stats.record_phase(fn, "start", sb)
         return tok
 
+    def compressed_all_reduce_progress(self, token, stages: int = 1) -> int:
+        """Per-stage progression of an in-flight compressed all-reduce
+        (same byte-conservation contract as ``_progress_inflight``)."""
+        fn = registry.COMPRESSED_ALL_REDUCE
+        if token.p == 1:
+            return 0
+        if token.wait_bytes_left is None:
+            _, wb = plan_mod.phase_wire_bytes(
+                costmodel.RING, token.p,
+                _compressed_wire_bytes(int(token.n)))
+            token.wait_bytes_left = wb
+        remaining_before = (token.ag_run.remaining
+                            if token.ag_run is not None else token.p - 1)
+        if remaining_before <= 0:
+            return 0
+        k = compression.compressed_all_reduce_progress(token, stages)
+        if k:
+            moved = token.wait_bytes_left * k // remaining_before
+            token.wait_bytes_left -= moved
+            self.stats.record_phase(fn, "progress", moved)
+        return k
+
     def compressed_all_reduce_wait(self, token):
         fn = registry.COMPRESSED_ALL_REDUCE
-        _, wb = plan_mod.phase_wire_bytes(
-            costmodel.RING, token.p,
-            _compressed_wire_bytes(int(token.n)))
+        if token.wait_bytes_left is not None:
+            wb = token.wait_bytes_left   # progress() already billed the rest
+        else:
+            _, wb = plan_mod.phase_wire_bytes(
+                costmodel.RING, token.p,
+                _compressed_wire_bytes(int(token.n)))
         self.stats.record_phase(fn, "wait", wb)
         return layers.tier_output(self.tier(fn),
                                   compression.compressed_all_reduce_wait(
@@ -746,6 +799,19 @@ class CollectiveEngine:
                 g, axes if len(axes) > 1 else axes[0])
         return SyncInFlight(inner=inner, compress=compress, axes=axes,
                             scale=scale)
+
+    def sync_gradient_progress(self, token: SyncInFlight,
+                               stages: int = 1) -> int:
+        """Advance one in-flight gradient sync by up to ``stages``
+        wait-phase protocol stages (ring hops / doubling rounds) without
+        finalizing it — the schedule IR's ``progress`` op.  EF residuals
+        and mean scaling remain untouched (they belong to wait)."""
+        if token.waited:
+            raise RuntimeError(
+                "cannot progress an already-waited gradient sync")
+        if token.compress:
+            return self.compressed_all_reduce_progress(token.inner, stages)
+        return self._progress_inflight(token.inner, stages)
 
     def sync_gradient_wait(self, token: SyncInFlight):
         """Finalize one in-flight gradient sync: remaining stages, the
@@ -1036,7 +1102,8 @@ class CollectiveEngine:
             fn=fn, axes=axes, protocols=protocols, tier=tier,
             nbytes=nbytes, mean_scale=scale,
             fingerprint=self.topology.fingerprint(), call=call,
-            start=start, wait=wait, sync_stats=sync_stats)
+            start=start, wait=wait, progress=self._progress_inflight,
+            sync_stats=sync_stats)
 
     # ------------------------------------------------------------------
     # Gradient synchronisation (the application-facing convenience API)
@@ -1164,6 +1231,7 @@ class PersistentBinding:
     call: Callable
     start: Optional[Callable] = None      # x -> InFlight
     wait: Optional[Callable] = None       # InFlight -> array
+    progress: Optional[Callable] = None   # (InFlight, stages) -> int
     sync_stats: bool = False              # records SYNC_STATS_KEY per call
 
     def describe(self) -> str:

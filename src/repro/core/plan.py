@@ -33,8 +33,11 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import costmodel
+from repro.core import costmodel, registry, schedule as schedule_mod
 from repro.core.costmodel import ProtocolChoice
+from repro.core.protocols import bruck as bruck_proto
+from repro.core.protocols import pipeline as pipeline_proto
+from repro.core.protocols import recursive as recursive_proto
 from repro.core.topology import Topology
 
 #: default size cap per gradient bucket (bytes on the wire).
@@ -64,23 +67,36 @@ def bucket_nbytes(bucket: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def protocol_stage_counts(protocol: str, p: int) -> Tuple[int, int]:
+def protocol_stage_counts(protocol: str, p: int,
+                          fn: str = registry.ALL_REDUCE) -> Tuple[int, int]:
     """(start stages, wait stages) of ``protocol``'s start/wait split on an
     axis of size ``p`` — the pipeline-step counts plan entries carry so
     schedulers know how much of a collective ``start`` puts in flight.
-    Protocols without a natural seam run entirely in the start phase."""
+    Protocols without a natural seam run entirely in the start phase.
+
+    The split depends on the *function*, not just the protocol: a ring
+    all-reduce is RS | AG, but a ring all-gather has no reduce half — all
+    p-1 hops run in start.  The base table is the all-reduce split (the
+    historical 2-arg contract); per-function overrides delegate to the
+    protocol modules' own stage-count helpers.
+    """
     if p <= 1:
         return (0, 0)
     lg = (p - 1).bit_length()            # ceil(log2 p)
+    if fn != registry.ALL_REDUCE:
+        override = _FN_STAGE_OVERRIDES.get((fn, protocol))
+        if override is not None:
+            return override(p)
     table = {
         costmodel.RING: (p - 1, p - 1),                # RS | AG
         costmodel.BIDIR_RING: (p - 1, p // 2),         # bidir RS | bidir AG
-        costmodel.RECURSIVE_HALVING: (lg, lg),         # halving RS | dbl AG
-        costmodel.RECURSIVE_DOUBLING: (lg, 0),
+        costmodel.RECURSIVE_HALVING: recursive_proto.rabenseifner_stage_counts(p),
+        costmodel.RECURSIVE_DOUBLING: recursive_proto.doubling_stage_counts(p),
         costmodel.XLA_DEFAULT: (1, 0),
-        costmodel.BRUCK: (lg, 0),
-        costmodel.PAIRWISE: (p - 1, 0),
+        costmodel.BRUCK: bruck_proto.bruck_stage_counts(p),
+        costmodel.PAIRWISE: bruck_proto.pairwise_stage_counts(p),
         costmodel.BINOMIAL_TREE: (lg, 0),
+        costmodel.PIPELINE: pipeline_proto.p2p_stage_counts(p),
         # van de Geijn broadcast: binomial scatter | ring all-gather
         costmodel.TWO_PHASE_2D: (p - 1, 2 * (p - 1)),  # RS(ax0) | AR+AG
         costmodel.HIERARCHICAL: (p - 1, 2 * (p - 1)),
@@ -88,16 +104,49 @@ def protocol_stage_counts(protocol: str, p: int) -> Tuple[int, int]:
     return table.get(protocol, (1, 0))
 
 
-def phase_wire_bytes(protocol: str, p: int, nbytes: int) -> Tuple[int, int]:
+#: honest per-(function, protocol) stage splits where the all-reduce table
+#: is wrong: one-stage collectives (RS, AG, A2A, p2p) have no wait half;
+#: van de Geijn broadcast waits on the ring-AG stage.
+_FN_STAGE_OVERRIDES = {
+    (registry.REDUCE_SCATTER, costmodel.RING): lambda p: (p - 1, 0),
+    (registry.REDUCE_SCATTER, costmodel.BIDIR_RING): lambda p: (p - 1, 0),
+    (registry.REDUCE_SCATTER, costmodel.RECURSIVE_HALVING):
+        lambda p: ((p - 1).bit_length(), 0),
+    (registry.ALL_GATHER, costmodel.RING): lambda p: (p - 1, 0),
+    (registry.ALL_GATHER, costmodel.BIDIR_RING): lambda p: (p // 2, 0),
+    (registry.ALL_GATHER, costmodel.BRUCK): bruck_proto.bruck_stage_counts,
+    (registry.ALL_GATHER, costmodel.RECURSIVE_DOUBLING):
+        recursive_proto.doubling_stage_counts,
+    (registry.ALL_TO_ALL, costmodel.BRUCK): bruck_proto.bruck_stage_counts,
+    (registry.ALL_TO_ALL, costmodel.PAIRWISE):
+        bruck_proto.pairwise_stage_counts,
+    # van de Geijn: binomial scatter in start | ring all-gather in wait
+    (registry.BROADCAST, costmodel.RING):
+        lambda p: ((p - 1).bit_length(), p - 1),
+    (registry.BROADCAST, costmodel.BINOMIAL_TREE):
+        lambda p: ((p - 1).bit_length(), 0),
+    (registry.PERMUTE, costmodel.PIPELINE): pipeline_proto.p2p_stage_counts,
+    (registry.SEND_RECV, costmodel.PIPELINE): pipeline_proto.p2p_stage_counts,
+}
+
+
+def phase_wire_bytes(protocol: str, p: int, nbytes: int,
+                     fn: str = registry.ALL_REDUCE) -> Tuple[int, int]:
     """Per-device wire bytes each phase of the split moves for an
     ``nbytes`` payload — what ``CommStats.record_phase`` attributes.
     Ring-class protocols move (p-1)/p·n per phase; start-only protocols
-    put everything in flight at ``start``."""
+    put everything in flight at ``start``.  Like the stage counts, the
+    split is per-function: one-phase collectives bill all their bytes
+    to start."""
     if p <= 1:
         return (0, 0)
     n = int(nbytes)
     share = (p - 1) * n // p
     lg = (p - 1).bit_length()
+    if fn != registry.ALL_REDUCE:
+        override = _FN_BYTE_OVERRIDES.get((fn, protocol))
+        if override is not None:
+            return override(p, n)
     table = {
         costmodel.RING: (share, share),
         costmodel.BIDIR_RING: (share, share),
@@ -107,10 +156,38 @@ def phase_wire_bytes(protocol: str, p: int, nbytes: int) -> Tuple[int, int]:
         costmodel.BRUCK: (share, 0),
         costmodel.PAIRWISE: (share, 0),
         costmodel.BINOMIAL_TREE: (lg * n, 0),
+        costmodel.PIPELINE: (n, 0),
         costmodel.TWO_PHASE_2D: (share, share + 2 * n // p),
         costmodel.HIERARCHICAL: (share, share + 2 * n // p),
     }
     return table.get(protocol, (n, 0))
+
+
+def _one_phase(p: int, n: int) -> Tuple[int, int]:
+    return ((p - 1) * n // p, 0)
+
+
+#: per-(function, protocol) wire-byte splits matching _FN_STAGE_OVERRIDES.
+_FN_BYTE_OVERRIDES = {
+    (registry.REDUCE_SCATTER, costmodel.RING): _one_phase,
+    (registry.REDUCE_SCATTER, costmodel.BIDIR_RING): _one_phase,
+    (registry.REDUCE_SCATTER, costmodel.RECURSIVE_HALVING): _one_phase,
+    (registry.ALL_GATHER, costmodel.RING): _one_phase,
+    (registry.ALL_GATHER, costmodel.BIDIR_RING): _one_phase,
+    (registry.ALL_GATHER, costmodel.BRUCK):
+        lambda p, n: ((p - 1).bit_length() * n // 2, 0),
+    (registry.ALL_GATHER, costmodel.RECURSIVE_DOUBLING): _one_phase,
+    (registry.ALL_TO_ALL, costmodel.BRUCK):
+        lambda p, n: ((p - 1).bit_length() * n // 2, 0),
+    (registry.ALL_TO_ALL, costmodel.PAIRWISE): _one_phase,
+    # van de Geijn: scatter moves n(p-1)/p in start, ring AG the same in wait
+    (registry.BROADCAST, costmodel.RING):
+        lambda p, n: ((p - 1) * n // p, (p - 1) * n // p),
+    (registry.BROADCAST, costmodel.BINOMIAL_TREE):
+        lambda p, n: ((p - 1).bit_length() * n, 0),
+    (registry.PERMUTE, costmodel.PIPELINE): lambda p, n: (n, 0),
+    (registry.SEND_RECV, costmodel.PIPELINE): lambda p, n: (n, 0),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,8 +202,9 @@ class PlanEntry:
     wait_stages: int
 
     @classmethod
-    def from_choice(cls, choice: ProtocolChoice, p: int) -> "PlanEntry":
-        start, wait = protocol_stage_counts(choice.protocol, p)
+    def from_choice(cls, choice: ProtocolChoice, p: int,
+                    fn: str = registry.ALL_REDUCE) -> "PlanEntry":
+        start, wait = protocol_stage_counts(choice.protocol, p, fn)
         return cls(protocol=choice.protocol, est_seconds=choice.est_seconds,
                    alternatives=choice.alternatives,
                    start_stages=start, wait_stages=wait)
@@ -206,7 +284,7 @@ class CommPlan:
                 fn, bucket_nbytes(bucket), self.topology, axis)
             p = (self.topology.axis_sizes.get(axis, 1)
                  if self.topology is not None else 1)
-            entry = PlanEntry.from_choice(choice, p)
+            entry = PlanEntry.from_choice(choice, p, fn)
             self._table[key] = entry
             self._protocols[key] = entry.protocol
         return entry
@@ -244,7 +322,7 @@ class CommPlan:
         proto = self.protocol_for(fn, nbytes, axis)
         p = (self.topology.axis_sizes.get(axis, 1)
              if self.topology is not None else 1)
-        return PlanEntry.from_choice(ProtocolChoice(proto, 0.0, ()), p)
+        return PlanEntry.from_choice(ProtocolChoice(proto, 0.0, ()), p, fn)
 
     # -- invalidation --------------------------------------------------
 
@@ -356,3 +434,186 @@ def scatter_bucket(flat: jax.Array, bucket: GradBucket,
     for s in bucket.slots:
         out[s.index] = (flat[s.offset:s.offset + s.size]
                         .reshape(s.shape).astype(s.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Schedule-IR rewrite passes (PR 6): the planner's legal transformations of
+# a comm/compute program.  Every overlapped execution order in the repo is
+# one of these passes applied to the canonical blocking schedule — never a
+# hand-written loop.
+# ---------------------------------------------------------------------------
+
+
+def _split_blocking(sched: "schedule_mod.Schedule"):
+    """Split ops into (prefix, unit-order, suffix) where the comm region is
+    strictly blocking ``start; wait`` pairs.  Raises ValueError if the
+    schedule was already pipelined (passes compose on blocking form)."""
+    ops = list(sched.ops)
+    first = next((i for i, op in enumerate(ops)
+                  if isinstance(op, schedule_mod.CommOp)), len(ops))
+    prefix, rest = ops[:first], ops[first:]
+    order: List[str] = []
+    suffix: List[Any] = []
+    i = 0
+    while i < len(rest):
+        op = rest[i]
+        if not isinstance(op, schedule_mod.CommOp):
+            suffix.append(op)
+            i += 1
+            continue
+        if (op.kind != schedule_mod.START or i + 1 >= len(rest)
+                or not isinstance(rest[i + 1], schedule_mod.CommOp)
+                or rest[i + 1].kind != schedule_mod.WAIT
+                or rest[i + 1].unit != op.unit):
+            raise ValueError(
+                "pass expects a blocking schedule (start; wait pairs); "
+                f"got {op.kind}<{op.unit}> at comm position {i}")
+        order.append(op.unit)
+        i += 2
+    return prefix, order, suffix
+
+
+def reverse_layout_pass(sched: "schedule_mod.Schedule"
+                        ) -> "schedule_mod.Schedule":
+    """Reverse the bucket issue order.  Backprop produces the *last*
+    layers' gradients first, so issuing buckets in reverse layout order
+    lets the earliest-ready collectives start first — the reverse-layout
+    trick the hand-scheduled pipeline hard-coded."""
+    prefix, order, suffix = _split_blocking(sched)
+    by_name = {u.name: u for u in sched.units}
+    ops = list(prefix)
+    for name in reversed(order):
+        u = by_name[name]
+        ops.append(schedule_mod.CommOp(
+            kind=schedule_mod.START, unit=name, stages=u.start_stages,
+            bytes=u.start_bytes, uses=u.uses))
+        ops.append(schedule_mod.CommOp(
+            kind=schedule_mod.WAIT, unit=name, stages=u.wait_stages,
+            bytes=u.wait_bytes, defs=u.defs))
+    ops.extend(suffix)
+    out = schedule_mod.Schedule(units=sched.units, ops=tuple(ops),
+                                meta=dict(sched.meta))
+    return out.validate()
+
+
+def interleave_pass(depth: int = 2):
+    """Depth-``depth`` software pipelining of the comm region.
+
+    Keeps up to ``depth`` collectives in flight: start unit k, and once
+    ``depth`` are live, wait the oldest.  ``depth=2`` reproduces the
+    hand-scheduled pipeline exactly (start one ahead, no progress hops —
+    the bit-identity contract).  ``depth>=3`` additionally emits a
+    one-stage ``progress`` hop on every younger in-flight unit before
+    each wait, draining wait-phase stages early so the final wait has
+    less exposed work — the *MPI Progress For All* move.
+
+    Progress byte accounting matches the engine's conservation rule
+    (``moved = bytes_left * k // stages_left``), so predicted phase
+    bytes stay exact.
+    """
+    if depth < 1:
+        raise ValueError(f"interleave depth must be >= 1, got {depth}")
+
+    def run(sched: "schedule_mod.Schedule") -> "schedule_mod.Schedule":
+        prefix, order, suffix = _split_blocking(sched)
+        by_name = {u.name: u for u in sched.units}
+        stages_left = {n: by_name[n].wait_stages for n in order}
+        bytes_left = {n: by_name[n].wait_bytes for n in order}
+        ops = list(prefix)
+        inflight: List[str] = []
+
+        def emit_progress(name: str) -> None:
+            if depth < 3 or stages_left[name] <= 0:
+                return
+            moved = bytes_left[name] // stages_left[name]
+            ops.append(schedule_mod.CommOp(
+                kind=schedule_mod.PROGRESS, unit=name, stages=1,
+                bytes=moved))
+            stages_left[name] -= 1
+            bytes_left[name] -= moved
+
+        def emit_wait(name: str) -> None:
+            u = by_name[name]
+            ops.append(schedule_mod.CommOp(
+                kind=schedule_mod.WAIT, unit=name,
+                stages=stages_left[name], bytes=bytes_left[name],
+                defs=u.defs))
+
+        for name in order:
+            u = by_name[name]
+            ops.append(schedule_mod.CommOp(
+                kind=schedule_mod.START, unit=name, stages=u.start_stages,
+                bytes=u.start_bytes, uses=u.uses))
+            inflight.append(name)
+            if len(inflight) > depth - 1:
+                oldest = inflight.pop(0)
+                for younger in inflight:
+                    emit_progress(younger)
+                emit_wait(oldest)
+        while inflight:
+            oldest = inflight.pop(0)
+            for younger in inflight:
+                emit_progress(younger)
+            emit_wait(oldest)
+        ops.extend(suffix)
+        out = schedule_mod.Schedule(units=sched.units, ops=tuple(ops),
+                                    meta=dict(sched.meta))
+        return out.validate()
+
+    run.__name__ = f"interleave_pass(depth={depth})"
+    return run
+
+
+def hoist_starts_pass(sched: "schedule_mod.Schedule"
+                      ) -> "schedule_mod.Schedule":
+    """Hoist ``start`` ops upward across overlappable compute.
+
+    A start may cross a ``ComputeOp`` iff the compute is marked
+    ``overlappable`` and defines none of the collective's operands (SSA
+    legality).  The crossed start is annotated ``overlaps=<tag>`` so the
+    predicted timeline knows which compute hides its launch — this is
+    the peeled-microbatch hoist in the overlapped train step."""
+    ops = list(sched.ops)
+    by_name = {u.name: u for u in sched.units}
+    changed = True
+    while changed:
+        changed = False
+        for i in range(1, len(ops)):
+            op = ops[i]
+            if (not isinstance(op, schedule_mod.CommOp)
+                    or op.kind != schedule_mod.START):
+                continue
+            prev = ops[i - 1]
+            if (not isinstance(prev, schedule_mod.ComputeOp)
+                    or not prev.overlappable):
+                continue
+            operands = set(op.uses) | set(by_name[op.unit].uses)
+            if operands & set(prev.defs):
+                continue
+            ops[i - 1], ops[i] = dataclasses.replace(op, overlaps=prev.tag), prev
+            changed = True
+    out = schedule_mod.Schedule(units=sched.units, ops=tuple(ops),
+                                meta=dict(sched.meta))
+    return out.validate()
+
+
+def canonical_overlap_passes(depth: int = 2):
+    """The pass pipeline that reproduces (depth=2) and generalizes
+    (depth>=3) the hand-scheduled overlapped train step."""
+    return (
+        ("reverse_layout", reverse_layout_pass),
+        (f"interleave_depth{depth}", interleave_pass(depth)),
+        ("hoist_starts", hoist_starts_pass),
+    )
+
+
+def run_passes(sched: "schedule_mod.Schedule", passes
+               ) -> Tuple["schedule_mod.Schedule", Dict[str, float]]:
+    """Apply (name, pass) pairs in order, validating after each.
+    Returns the rewritten schedule and per-pass wall time in µs."""
+    timings: Dict[str, float] = {}
+    for name, p in passes:
+        t0 = time.perf_counter()
+        sched = p(sched).validate()
+        timings[name] = (time.perf_counter() - t0) * 1e6
+    return sched, timings

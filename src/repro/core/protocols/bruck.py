@@ -54,3 +54,20 @@ def pairwise_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
         recv = lax.ppermute(send, axis_name, c.fwd_perm(p, shift=s))
         out = c.dyn_put(out, recv, i - s)
     return out
+
+
+def bruck_stage_counts(p: int):
+    """(start, wait) protocol-stage split for the Bruck exchange: all
+    ``log2 p`` bit-routing rounds run in start; nothing is deferrable
+    to wait (the local roll phases are compute, not stages)."""
+    if p <= 1:
+        return (0, 0)
+    return ((p - 1).bit_length(), 0)
+
+
+def pairwise_stage_counts(p: int):
+    """(start, wait) split for pairwise exchange: p-1 shifted rounds,
+    all in start — each round's output is consumed immediately."""
+    if p <= 1:
+        return (0, 0)
+    return (p - 1, 0)

@@ -72,3 +72,12 @@ def gpipe_forward(
 
     (recv, out_buf), _ = lax.scan(tick, (recv, out_buf), jnp.arange(ticks))
     return out_buf
+
+
+def p2p_stage_counts(p: int):
+    """(start, wait) split for a pipeline p2p hop: one ``ppermute``
+    stage in start, nothing in wait.  Independent of p (a hop touches
+    exactly one link), but zero on a degenerate single-rank axis."""
+    if p <= 1:
+        return (0, 0)
+    return (1, 0)

@@ -52,28 +52,74 @@ def halving_reduce_scatter_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
     return cur  # reduced chunk i (bit path == bits of i)
 
 
+class DoublingAllGatherRun:
+    """Steppable recursive-doubling all-gather.  One ``step()`` is one
+    doubling round (partner distance k -> 2k), so the stage count is
+    ``log2 p`` — the wait split ``protocol_stage_counts`` reports for
+    Rabenseifner."""
+
+    def __init__(self, shard: jax.Array, axis_name: str):
+        p = c.axis_size(axis_name)
+        self.axis_name = axis_name
+        self.p = p
+        self.cur = shard
+        self.done = 0
+        if p == 1:
+            self.total = 0
+            return
+        assert c.is_pow2(p), \
+            f"recursive doubling needs power-of-two axis, got {p}"
+        self.i = c.axis_index(axis_name)
+        self.k = 1
+        self.total = (p - 1).bit_length()
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.done
+
+    def step(self, stages: int = 1) -> int:
+        stages = min(int(stages), self.remaining)
+        for _ in range(stages):
+            recv = lax.ppermute(self.cur, self.axis_name,
+                                c.xor_perm(self.p, self.k))
+            bit = (self.i & self.k) != 0  # set: our block is the upper half
+            self.cur = jnp.where(
+                bit,
+                jnp.concatenate([recv, self.cur]),
+                jnp.concatenate([self.cur, recv]),
+            )
+            self.k *= 2
+            self.done += 1
+        return stages
+
+    def result(self) -> jax.Array:
+        self.step(self.remaining)
+        return self.cur
+
+
 def doubling_all_gather_flat(shard: jax.Array, axis_name: str) -> jax.Array:
     """Recursive-doubling all-gather: inverse of halving RS. shard: (chunk,)
     -> flat (p*chunk,) in device order."""
-    p = c.axis_size(axis_name)
-    if p == 1:
-        return shard
-    assert c.is_pow2(p), f"recursive doubling needs power-of-two axis, got {p}"
-    i = c.axis_index(axis_name)
-    cur = shard
-    k = 1
-    while k < p:
-        recv = lax.ppermute(cur, axis_name, c.xor_perm(p, k))
-        bit = (i & k) != 0  # if set: our block is the upper half of the pair
-        cur = jnp.where(
-            bit,
-            jnp.concatenate([recv, cur]),
-            jnp.concatenate([cur, recv]),
-        )
-        k *= 2
-    return cur
+    return DoublingAllGatherRun(shard, axis_name).result()
 
 
 def rabenseifner_all_reduce_flat(x2d: jax.Array, axis_name: str) -> jax.Array:
     shard = halving_reduce_scatter_flat(x2d, axis_name)
     return doubling_all_gather_flat(shard, axis_name)
+
+
+def rabenseifner_stage_counts(p: int):
+    """(start, wait) split for halving-RS + doubling-AG: ``log2 p``
+    halving rounds in start, ``log2 p`` doubling rounds in wait."""
+    if p <= 1:
+        return (0, 0)
+    lg = (p - 1).bit_length()
+    return (lg, lg)
+
+
+def doubling_stage_counts(p: int):
+    """(start, wait) split for full-message recursive doubling: all
+    ``log2 p`` exchange rounds complete inside start."""
+    if p <= 1:
+        return (0, 0)
+    return ((p - 1).bit_length(), 0)

@@ -60,20 +60,53 @@ def ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str,
     return acc  # == reduced chunk i
 
 
+class RingAllGatherRun:
+    """Steppable ring all-gather: the wait-phase stage machine.
+
+    One ``step()`` is one ring hop (one ``ppermute`` + placement) — the
+    unit of per-stage ``progress()`` in the schedule IR.  ``result()``
+    drains the remaining hops; the op sequence is identical to the old
+    straight-line loop, so callers that never step early are
+    bit-identical to the blocking path by construction.
+    """
+
+    def __init__(self, shard: jax.Array, axis_name: str):
+        p = c.axis_size(axis_name)
+        self.axis_name = axis_name
+        self.p = p
+        self.done = 0
+        self.total = max(0, p - 1)
+        self.cur = shard
+        if p == 1:
+            self.buf = shard[None]
+            return
+        self.i = c.axis_index(axis_name)
+        self.fwd = c.fwd_perm(p)
+        self.buf = c.dyn_put(jnp.zeros((p,) + shard.shape, shard.dtype),
+                             shard, self.i)
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.done
+
+    def step(self, stages: int = 1) -> int:
+        """Advance up to ``stages`` ring hops; returns hops taken."""
+        stages = min(int(stages), self.remaining)
+        for _ in range(stages):
+            self.done += 1
+            # now holds the shard of (i - done)
+            self.cur = lax.ppermute(self.cur, self.axis_name, self.fwd)
+            self.buf = c.dyn_put(self.buf, self.cur, self.i - self.done)
+        return stages
+
+    def result(self) -> jax.Array:
+        self.step(self.remaining)
+        return self.buf
+
+
 def ring_all_gather_flat(shard: jax.Array, axis_name: str) -> jax.Array:
     """shard: (chunk,) -> (p, chunk) with row j = device j's shard."""
-    p = c.axis_size(axis_name)
-    if p == 1:
-        return shard[None]
-    i = c.axis_index(axis_name)
-    fwd = c.fwd_perm(p)
-    buf = jnp.zeros((p,) + shard.shape, shard.dtype)
-    buf = c.dyn_put(buf, shard, i)
-    cur = shard
-    for s in range(1, p):
-        cur = lax.ppermute(cur, axis_name, fwd)  # now holds shard of (i - s)
-        buf = c.dyn_put(buf, cur, i - s)
-    return buf
+    return RingAllGatherRun(shard, axis_name).result()
 
 
 def bidir_ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str,
@@ -100,28 +133,58 @@ def bidir_ring_reduce_scatter_flat(x2d: jax.Array, axis_name: str,
     return jnp.concatenate([acc_f, acc_b])  # reduced chunk i (both halves)
 
 
+class BidirRingAllGatherRun:
+    """Steppable bidirectional ring all-gather.  One ``step()`` is one
+    double-hop (both torus directions active), so the stage count is
+    ``ceil((p-1)/2)`` — matching ``protocol_stage_counts``' wait split
+    for the bidirectional ring."""
+
+    def __init__(self, shard: jax.Array, axis_name: str):
+        p = c.axis_size(axis_name)
+        self.axis_name = axis_name
+        self.p = p
+        self.done = 0
+        self.n_f = p // 2
+        self.n_b = (p - 1) // 2
+        self.total = max(self.n_f, self.n_b)
+        if p == 1:
+            self.buf = shard[None]
+            return
+        self.i = c.axis_index(axis_name)
+        self.fwd, self.bwd = c.fwd_perm(p), c.bwd_perm(p)
+        self.buf = c.dyn_put(jnp.zeros((p,) + shard.shape, shard.dtype),
+                             shard, self.i)
+        self.cur_f = shard  # fwd: after s hops holds shard of (i - s)
+        self.cur_b = shard  # bwd: after s hops holds shard of (i + s)
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.done
+
+    def step(self, stages: int = 1) -> int:
+        stages = min(int(stages), self.remaining)
+        for _ in range(stages):
+            self.done += 1
+            s = self.done
+            if s <= self.n_f:
+                self.cur_f = lax.ppermute(self.cur_f, self.axis_name,
+                                          self.fwd)
+                self.buf = c.dyn_put(self.buf, self.cur_f, self.i - s)
+            if s <= self.n_b:
+                self.cur_b = lax.ppermute(self.cur_b, self.axis_name,
+                                          self.bwd)
+                self.buf = c.dyn_put(self.buf, self.cur_b, self.i + s)
+        return stages
+
+    def result(self) -> jax.Array:
+        self.step(self.remaining)
+        return self.buf
+
+
 def bidir_ring_all_gather_flat(shard: jax.Array, axis_name: str) -> jax.Array:
     """Gather by sending simultaneously in both ring directions:
     ceil((p-1)/2) steps with both links busy."""
-    p = c.axis_size(axis_name)
-    if p == 1:
-        return shard[None]
-    i = c.axis_index(axis_name)
-    fwd, bwd = c.fwd_perm(p), c.bwd_perm(p)
-    buf = jnp.zeros((p,) + shard.shape, shard.dtype)
-    buf = c.dyn_put(buf, shard, i)
-    cur_f = shard  # travels forward: after s hops holds shard of (i - s)
-    cur_b = shard  # travels backward: after s hops holds shard of (i + s)
-    n_f = p // 2
-    n_b = (p - 1) // 2
-    for s in range(1, max(n_f, n_b) + 1):
-        if s <= n_f:
-            cur_f = lax.ppermute(cur_f, axis_name, fwd)
-            buf = c.dyn_put(buf, cur_f, i - s)
-        if s <= n_b:
-            cur_b = lax.ppermute(cur_b, axis_name, bwd)
-            buf = c.dyn_put(buf, cur_b, i + s)
-    return buf
+    return BidirRingAllGatherRun(shard, axis_name).result()
 
 
 # ---------------------------------------------------------------------------

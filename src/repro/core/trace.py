@@ -15,13 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Any, Callable, Dict, List, Mapping, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
 from jax.extend import core as jcore
 
 from repro.core import registry
+from repro.core import schedule as schedule_mod
 
 # jaxpr primitive name -> registry function name
 PRIMITIVE_MAP: Mapping[str, str] = {
@@ -61,9 +62,17 @@ class CallSite:
 
 @dataclasses.dataclass
 class TraceReport:
-    """The application's collective profile: 𝓕, frequencies, bytes."""
+    """The application's collective profile: 𝓕, frequencies, bytes —
+    plus, since PR 6, the program *order* as a comm/compute schedule.
+
+    ``schedule`` is the scanner's default-annotated program (every
+    collective an ``xla_default`` one-stage unit, compute regions as
+    opaque barriers).  ``to_schedule`` re-annotates it through a
+    ``CommPlan`` so units carry the planned protocol, honest stage
+    splits, and cost-model phase bytes."""
 
     sites: List[CallSite]
+    schedule: Optional[schedule_mod.Schedule] = None
 
     @property
     def function_set(self) -> frozenset:
@@ -91,6 +100,37 @@ class TraceReport:
         for fn in sorted(freq, key=lambda f: -freq[f]):
             lines.append(f"{fn:<18s} {int(freq[fn]):>8d} {byt[fn]:>16,d}")
         return "\n".join(lines)
+
+    def to_schedule(self, plan=None, topology=None) -> schedule_mod.Schedule:
+        """The traced program as a schedule, re-annotated through a
+        ``CommPlan``: each unit gets the planned protocol, its honest
+        (start, wait) stage split for this *function*, and the cost
+        model's predicted per-phase wire bytes.  Without a plan this
+        returns the scanner's default-annotated schedule."""
+        base = self.schedule
+        if base is None:
+            base = _sites_schedule(self.sites)
+        if plan is None:
+            return base
+        topo = topology if topology is not None else plan.topology
+
+        def resolve(u: schedule_mod.CommUnit) -> schedule_mod.CommUnit:
+            from repro.core import plan as plan_mod  # leaf-ward only at runtime
+            axis = u.axes[0] if u.axes else None
+            nbytes = u.start_bytes + u.wait_bytes
+            if axis is None or topo is None or axis not in topo.axis_sizes:
+                return u
+            entry = plan.entry_for(u.fn, nbytes, axis)
+            p = topo.axis_sizes[axis]
+            sb, wb = plan_mod.phase_wire_bytes(entry.protocol, p, nbytes,
+                                               u.fn)
+            return dataclasses.replace(
+                u, protocol=entry.protocol,
+                start_stages=entry.start_stages,
+                wait_stages=entry.wait_stages,
+                start_bytes=sb, wait_bytes=wb)
+
+        return schedule_mod.annotate(base, resolve)
 
 
 def _aval_bytes(aval) -> int:
@@ -122,17 +162,28 @@ def _sub_jaxprs(params: Mapping[str, Any]):
 
 
 def _walk(jaxpr: jcore.Jaxpr, mult: int, path: Tuple[str, ...],
-          out: List[CallSite]) -> None:
+          out: List[CallSite],
+          events: Optional[List[Tuple[str, Any]]] = None,
+          pending: Optional[List[int]] = None) -> None:
     for eqn in jaxpr.eqns:
         name = eqn.primitive.name
         fn = PRIMITIVE_MAP.get(name)
+        has_sub = any(True for _ in _sub_jaxprs(eqn.params))
         if fn is not None:
             nbytes = sum(_aval_bytes(v.aval) for v in eqn.invars
                          if hasattr(v, "aval"))
-            out.append(CallSite(
+            site = CallSite(
                 function=fn, primitive=name, count=mult, nbytes=nbytes,
                 axes=_axes_of(eqn.params), path=path,
-            ))
+            )
+            out.append(site)
+            if events is not None:
+                if pending[0]:
+                    events.append(("compute", pending[0]))
+                    pending[0] = 0
+                events.append(("comm", site))
+        elif events is not None and not has_sub:
+            pending[0] += mult  # plain compute eqn between collectives
         # Recurse into sub-jaxprs; scan multiplies by trip count.
         sub_mult = mult
         if name == "scan":
@@ -141,13 +192,45 @@ def _walk(jaxpr: jcore.Jaxpr, mult: int, path: Tuple[str, ...],
             sub_mult = mult  # unknown trip count: count >= 1 statically
         for sub in _sub_jaxprs(eqn.params):
             inner = sub.jaxpr if isinstance(sub, jcore.ClosedJaxpr) else sub
-            _walk(inner, sub_mult, path + (name,), out)
+            _walk(inner, sub_mult, path + (name,), out, events, pending)
+
+
+def _sites_schedule(sites: List[CallSite],
+                    events: Optional[List[Tuple[str, Any]]] = None
+                    ) -> schedule_mod.Schedule:
+    """Default-annotated schedule for a traced program: every collective
+    is an ``xla_default`` single-stage unit (the honest pre-plan view),
+    non-collective eqn runs between sites become compute barriers."""
+    if events is None:
+        events = [("comm", s) for s in sites]
+    evs: List[Tuple[str, Any]] = []
+    n_comm = 0
+    n_compute = 0
+    for kind, payload in events:
+        if kind == "compute":
+            evs.append(("compute", f"eqns{n_compute}x{payload}"))
+            n_compute += 1
+            continue
+        s: CallSite = payload
+        if s.function == registry.AXIS_INDEX:
+            continue  # rank query, not a message
+        unit = schedule_mod.sync_unit(
+            name=f"{s.function}#{n_comm}", index=n_comm, fn=s.function,
+            axes=s.axes, protocol="xla_default", start_stages=1,
+            wait_stages=0, start_bytes=s.nbytes, wait_bytes=0)
+        evs.append(("comm", unit))
+        n_comm += 1
+    return schedule_mod.schedule_from_events(evs)
 
 
 def scan_jaxpr(closed: jcore.ClosedJaxpr) -> TraceReport:
     sites: List[CallSite] = []
-    _walk(closed.jaxpr, 1, (), sites)
-    return TraceReport(sites=sites)
+    events: List[Tuple[str, Any]] = []
+    pending = [0]
+    _walk(closed.jaxpr, 1, (), sites, events, pending)
+    if pending[0]:
+        events.append(("compute", pending[0]))
+    return TraceReport(sites=sites, schedule=_sites_schedule(sites, events))
 
 
 def scan_step(fn: Callable, *args, **kwargs) -> TraceReport:

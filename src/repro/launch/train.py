@@ -55,7 +55,8 @@ def build_session(mesh, model, opt, ds, args) -> "comm_mod.Session":
                                  data_axes=("data",),
                                  bucket_grads=args.bucket_grads,
                                  bucket_bytes=args.bucket_bytes,
-                                 overlap=args.overlap)
+                                 overlap=args.overlap,
+                                 overlap_depth=args.overlap_depth)
     probe_step = trainer.make_train_step(model, opt, probe_cfg,
                                          mesh=probe.mesh, comm=probe.world)
     abstate = trainer.make_train_state(model, opt, abstract=True,
@@ -90,6 +91,11 @@ def main() -> None:
                          "modes; bit-identical losses to blocking)")
     ap.add_argument("--no-overlap", dest="overlap", action="store_false",
                     help="force the blocking gradient-sync path")
+    ap.add_argument("--overlap-depth", type=int, default=2,
+                    help="in-flight collectives the schedule IR's "
+                         "interleave pass keeps live (2 = classic "
+                         "software pipeline; >=3 adds per-stage "
+                         "progress hops)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
@@ -127,7 +133,8 @@ def main() -> None:
                             sync_mode=args.sync,
                             bucket_grads=args.bucket_grads,
                             bucket_bytes=args.bucket_bytes,
-                            overlap=args.overlap)
+                            overlap=args.overlap,
+                            overlap_depth=args.overlap_depth)
 
     ds = SyntheticLMDataset(vocab_size=cfg.vocab_size,
                             seq_len=args.seq_len,

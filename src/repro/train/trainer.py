@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -49,6 +50,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import comm as comm_mod
 from repro.core import plan as plan_mod
+from repro.core import schedule as schedule_mod
 from repro.core.compression import EFState, bucket_ef_zeros
 from repro.runtime import substrate
 
@@ -69,6 +71,11 @@ class TrainCfg:
     # backends, skip on CPU hosts (no async dispatch to overlap with —
     # inlining a second copy of the model body only slows the step).
     overlap_peel: Any = None             # True | False | None (auto)
+    # in-flight collectives the schedule IR's interleave pass keeps live.
+    # 2 = the classic depth-2 software pipeline (no progress hops, the
+    # bit-identity reference); >=3 adds per-stage progress() hops that
+    # drain wait-phase stages of younger in-flight units early.
+    overlap_depth: int = 2
 
 
 def _tree_size(tree) -> int:
@@ -228,35 +235,35 @@ def _leaf_sync(dcomm: "comm_mod.Communicator", axis_comms, grads, compress,
 
 
 # ---------------------------------------------------------------------------
-# Overlapped (nonblocking start/wait) gradient sync
+# Overlapped (nonblocking start/wait) gradient sync — schedule IR
 #
-# Both schedulers walk the work units in REVERSE layout order — backprop
-# produces the last layers' gradients first, so with the final microbatch
-# peeled out of the accumulation scan, XLA can issue the late-layer
-# buckets' start phases while the early layers' backward is still running.
-# The schedule is software-pipelined at depth 2: unit i's start is issued,
-# THEN unit i+1 (the previously started one) is waited and finalized, so
-# at every point one transfer is in flight behind the reduce/finalize work
-# of its neighbour.  Per-unit arithmetic is identical to the blocking
-# paths (same stage split, same scale, same EF update), so losses are
-# bit-identical.
+# Since PR 6 the overlapped sync is not hand-sequenced: the communicator
+# builds the canonical *blocking* program (``comm.sync_schedule``), the
+# planner's pass pipeline rewrites it (reverse layout order, depth-N
+# interleaving, start hoisting across the peeled microbatch), and
+# ``schedule.execute`` turns op order into start/progress/wait calls.
+# ``overlap_depth=2`` reproduces the old hand-scheduled pipeline op for
+# op — start unit i, then wait its already-started neighbour, no progress
+# hops — so per-unit arithmetic (stage split, scale, EF update) is
+# identical to the blocking paths and losses stay bit-identical.
+# ``overlap_depth>=3`` keeps more transfers live and drains wait-phase
+# protocol stages early via per-stage ``progress`` hops (*MPI Progress
+# For All*); each unit's hop chain is unchanged, only its placement.
 # ---------------------------------------------------------------------------
 
 
-def _pipelined(units, start_one, finish_one):
-    """Reverse-order depth-2 software pipeline over ``units``."""
-    inflight = []
-    for u in reversed(units):
-        inflight.append((u, start_one(u)))
-        if len(inflight) > 1:
-            v, tok = inflight.pop(0)
-            finish_one(v, tok)
-    for v, tok in inflight:
-        finish_one(v, tok)
+def _overlap_sync_schedule(ucomm, specs, compress, depth, compute=()):
+    """Blocking sync program → canonical overlap pass pipeline."""
+    base = ucomm.sync_schedule(specs, compress=compress, compute=compute)
+    sched, timings = plan_mod.run_passes(
+        base, plan_mod.canonical_overlap_passes(depth))
+    sched.meta["depth"] = depth
+    sched.meta["pass_us"] = timings
+    return sched
 
 
 def _bucket_sync_overlapped(dcomm, axis_comms, handles, buckets, grads,
-                            compress, ef):
+                            compress, ef, sched=None, depth=2):
     """Overlapped twin of ``_bucket_sync``: uncompressed buckets go
     through pre-bound persistent handles (one revocation check per start),
     compressed buckets through the communicator's planned two-phase sync
@@ -275,18 +282,30 @@ def _bucket_sync_overlapped(dcomm, axis_comms, handles, buckets, grads,
                 f"ef_state layout {[e.shape[-1] for e in ef]} does not "
                 f"match the bucket plan {[b.size for b in buckets]} — was "
                 f"it built with the same bucket_bytes?")
+    if sched is None:
+        sched = _overlap_sync_schedule(
+            dcomm, [(f"bucket{i}", b.size, b.wire_dtype)
+                    for i, b in enumerate(buckets)], compress, depth)
 
-    def start_one(bi):
-        flat = plan_mod.gather_bucket(leaves, buckets[bi])
+    def start(u):
+        flat = plan_mod.gather_bucket(leaves, buckets[u.index])
         if compress:
             # mean=False: the blocking bucketed path applies ONE full-axes
             # scale after the cross-axis reductions — replicated below so
             # the float op order (and hence the loss bits) match exactly.
             return axis_comms[0].sync_gradient_start(
-                flat, mean=False, compress=True, ef_residual=ef[bi])
-        return handles[bi].start(flat)
+                flat, mean=False, compress=True, ef_residual=ef[u.index])
+        return handles[u.index].start(flat)
 
-    def finish_one(bi, tok):
+    def progress(u, tok, stages):
+        if compress:
+            axis_comms[0].sync_gradient_progress(tok, stages)
+        else:
+            handles[u.index].progress(tok, stages)
+        return tok
+
+    def wait(u, tok):
+        bi = u.index
         if compress:
             y, res = axis_comms[0].sync_gradient_wait(tok)
             for acomm in axis_comms[1:]:
@@ -296,28 +315,41 @@ def _bucket_sync_overlapped(dcomm, axis_comms, handles, buckets, grads,
         else:
             y = handles[bi].wait(tok)
         plan_mod.scatter_bucket(y, buckets[bi], out)
+        return y
 
-    _pipelined(list(range(len(buckets))), start_one, finish_one)
+    schedule_mod.execute(sched, start=start, wait=wait, progress=progress)
     return (jax.tree_util.tree_unflatten(treedef, out),
             tuple(new_ef) if compress else ef)
 
 
-def _leaf_sync_overlapped(dcomm, axis_comms, grads, compress, ef_tree):
+def _leaf_sync_overlapped(dcomm, axis_comms, grads, compress, ef_tree,
+                          sched=None, depth=2):
     """Overlapped twin of ``_leaf_sync``: one two-phase sync per leaf,
-    reverse layout order."""
+    schedule-IR sequenced."""
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     out = [None] * len(leaves)
     if compress:
         ef_leaves = treedef.flatten_up_to(ef_tree)
         new_ef = [None] * len(leaves)
+    if sched is None:
+        sched = _overlap_sync_schedule(
+            dcomm, [(f"leaf{i}", l.size, l.dtype)
+                    for i, l in enumerate(leaves)], compress, depth)
 
-    def start_one(i):
+    def start(u):
+        i = u.index
         if compress:
             return axis_comms[0].sync_gradient_start(
                 leaves[i], compress=True, ef_residual=ef_leaves[i])
         return dcomm.sync_gradient_start(leaves[i])
 
-    def finish_one(i, tok):
+    def progress(u, tok, stages):
+        comm = axis_comms[0] if compress else dcomm
+        comm.sync_gradient_progress(tok, stages)
+        return tok
+
+    def wait(u, tok):
+        i = u.index
         if compress:
             y, res = axis_comms[0].sync_gradient_wait(tok)
             for acomm in axis_comms[1:]:
@@ -326,8 +358,9 @@ def _leaf_sync_overlapped(dcomm, axis_comms, grads, compress, ef_tree):
         else:
             y, _ = dcomm.sync_gradient_wait(tok)
         out[i] = y
+        return y
 
-    _pipelined(list(range(len(leaves))), start_one, finish_one)
+    schedule_mod.execute(sched, start=start, wait=wait, progress=progress)
     synced = jax.tree_util.tree_unflatten(treedef, out)
     if not compress:
         return synced, ef_tree
@@ -361,6 +394,8 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
                 grads, state["opt"], state["params"])
             return ({"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}, {"loss": loss, **om})
+        train_step.schedule = None
+        train_step.schedule_pass_us = {}
         return train_step
 
     if cfg.sync_mode not in ("composed", "compressed"):
@@ -396,12 +431,14 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
     # each start record its wire bytes under the engine's sync key
     # exactly like the blocking planned path (the CommStats parity fix).
     overlap = bool(cfg.overlap)
+    depth = int(cfg.overlap_depth)
     peel = cfg.overlap_peel
     if peel is None:
         peel = jax.default_backend() != "cpu"
     peel = overlap and bool(peel)
     buckets = ()
     bucket_handles = ()
+    sched = None
     if overlap and cfg.bucket_grads:
         buckets = grad_bucket_plan(model.abstract_params(), cfg)
         if not compress:
@@ -409,6 +446,20 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
                 dcomm.persistent("all_reduce", (b.size,), b.wire_dtype,
                                  mean=True, sync_stats=True)
                 for b in buckets)
+    if overlap:
+        # the work-unit layout is static in (param shapes, dtypes,
+        # bucket_bytes), so the sync program is built + rewritten ONCE
+        # here; every traced step executes the same schedule.
+        if cfg.bucket_grads:
+            specs = [(f"bucket{i}", b.size, b.wire_dtype)
+                     for i, b in enumerate(buckets)]
+        else:
+            specs = [(f"leaf{i}", math.prod(s.shape), s.dtype)
+                     for i, s in enumerate(_grad_structs(
+                         model.abstract_params(), cfg))]
+        tags = (("peeled_microbatch", True),) if peel else ()
+        sched = _overlap_sync_schedule(dcomm, specs, compress, depth,
+                                       compute=tags)
 
     def train_step(state, batch):
         bspecs = batch_specs(batch, data_axes)
@@ -429,13 +480,14 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
                 if overlap:
                     grads, new_ef = _bucket_sync_overlapped(
                         dcomm, axis_comms, bucket_handles, buckets, grads,
-                        compress, ef)
+                        compress, ef, sched=sched, depth=depth)
                 else:
                     grads, new_ef = _bucket_sync(dcomm, grads, compress,
                                                  ef, cfg.bucket_bytes)
             elif overlap:
                 grads, new_ef = _leaf_sync_overlapped(
-                    dcomm, axis_comms, grads, compress, ef)
+                    dcomm, axis_comms, grads, compress, ef,
+                    sched=sched, depth=depth)
             else:
                 grads, new_ef = _leaf_sync(dcomm, axis_comms, grads,
                                            compress, ef)
@@ -452,6 +504,10 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
 
         return inner(state, batch)
 
+    # introspection: the executed sync program + per-pass rewrite timings
+    train_step.schedule = sched
+    train_step.schedule_pass_us = (dict(sched.meta.get("pass_us", {}))
+                                   if sched is not None else {})
     return train_step
 
 

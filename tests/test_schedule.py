@@ -1,0 +1,616 @@
+"""Schedule IR (PR 6): SSA validation, the planner's rewrite passes
+(reverse layout / depth-N interleave / start hoisting), the executor,
+engine progress arms (bit-identity + phase-byte conservation), the
+Communicator/Session schedule surface, and the fn-aware stage-split
+tables that annotate units."""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_script
+from repro import comm as comm_mod
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        costmodel, registry, topology_from_mesh_shape)
+from repro.core import plan as plan_mod
+from repro.core import schedule as schedule_mod
+from repro.core.engine import SYNC_STATS_KEY
+from repro.runtime import substrate
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools"))
+import check_api
+
+AX = "data"
+P_AX = 8
+
+
+def full_engine(topo=None, **cfg_kw):
+    return CollectiveEngine(
+        topo or topology_from_mesh_shape((AX, "model"), (P_AX, 2)),
+        library=compose_library(registry.ALL_FUNCTIONS),
+        config=EngineConfig(**cfg_kw))
+
+
+def ring_units(k, nbytes=1 << 16, p=P_AX):
+    """k equal ring all-reduce units (steppable wait half)."""
+    share = (p - 1) * nbytes // p
+    return [schedule_mod.sync_unit(
+        name=f"bucket{i}", index=i, fn="all_reduce", axes=(AX,),
+        protocol=costmodel.RING, start_stages=p - 1, wait_stages=p - 1,
+        start_bytes=share, wait_bytes=share) for i in range(k)]
+
+
+def blocking(k=4, compute=(), **kw):
+    return schedule_mod.build_sync_schedule(ring_units(k, **kw),
+                                            compute=compute)
+
+
+# ---------------------------------------------------------------------------
+# IR validation
+# ---------------------------------------------------------------------------
+
+def test_blocking_schedule_shape_and_depth():
+    sched = blocking(3)
+    assert sched.depth == 1
+    kinds = [op.kind for op in sched.comm_ops]
+    assert kinds == ["start", "wait"] * 3
+    pb = sched.predicted_phase_bytes()
+    u = sched.units[0]
+    assert pb == {"all_reduce.start": 3 * u.start_bytes,
+                  "all_reduce.wait": 3 * u.wait_bytes}
+    assert "depth 1" in sched.describe()
+
+
+def test_validate_rejects_malformed_programs():
+    (u,) = ring_units(1)
+    s = lambda: schedule_mod.CommOp(kind="start", unit=u.name)
+    w = lambda: schedule_mod.CommOp(kind="wait", unit=u.name, defs=u.defs)
+    p = lambda st=1: schedule_mod.CommOp(kind="progress", unit=u.name,
+                                         stages=st)
+    mk = lambda *ops: schedule_mod.Schedule(units=(u,), ops=tuple(ops))
+    with pytest.raises(ValueError, match="started twice"):
+        mk(s(), s(), w()).validate()
+    with pytest.raises(ValueError, match="without a live start"):
+        mk(w()).validate()
+    with pytest.raises(ValueError, match="outside its"):
+        mk(p(), s(), w()).validate()
+    with pytest.raises(ValueError, match="wait stages exist"):
+        mk(s(), p(u.wait_stages + 1), w()).validate()
+    with pytest.raises(ValueError, match="never completed"):
+        mk(s()).validate()
+    with pytest.raises(ValueError, match="unknown unit"):
+        mk(s(), w(),
+           schedule_mod.CommOp(kind="start", unit="ghost")).validate()
+    with pytest.raises(ValueError, match="duplicate unit"):
+        schedule_mod.Schedule(units=(u, u), ops=(s(), w())).validate()
+    with pytest.raises(ValueError, match="bad CommOp kind"):
+        schedule_mod.CommOp(kind="compute", unit=u.name)
+
+
+def test_validate_ssa_def_before_use():
+    u0, u1 = ring_units(2)
+    # u1 consumes u0's output: legal when u0 waits first, illegal after
+    # reordering the waits
+    u1 = schedule_mod.sync_unit(
+        name=u1.name, index=1, fn=u1.fn, axes=u1.axes, protocol=u1.protocol,
+        start_stages=u1.start_stages, wait_stages=u1.wait_stages,
+        start_bytes=u1.start_bytes, wait_bytes=u1.wait_bytes,
+        uses=u0.defs)
+    ok = schedule_mod.build_sync_schedule([u0, u1])
+    assert ok.unit(u1.name).uses == u0.defs
+    sop = lambda u: schedule_mod.CommOp(kind="start", unit=u.name,
+                                        uses=u.uses)
+    wop = lambda u: schedule_mod.CommOp(kind="wait", unit=u.name,
+                                        defs=u.defs)
+    bad = schedule_mod.Schedule(units=(u0, u1),
+                                ops=(sop(u1), wop(u1), sop(u0), wop(u0)))
+    with pytest.raises(ValueError, match="undefined value"):
+        bad.validate()
+    # values nothing defines are free schedule inputs
+    free = schedule_mod.sync_unit(
+        name="g", index=0, fn="all_reduce", axes=(AX,),
+        protocol=costmodel.RING, start_stages=1, wait_stages=1,
+        start_bytes=8, wait_bytes=8, uses=("grads.in",))
+    schedule_mod.build_sync_schedule([free])
+
+
+# ---------------------------------------------------------------------------
+# Rewrite passes
+# ---------------------------------------------------------------------------
+
+def _comm_seq(sched):
+    return [(op.kind, op.unit) for op in sched.comm_ops]
+
+
+def test_reverse_layout_pass_reverses_issue_order():
+    out = plan_mod.reverse_layout_pass(blocking(3))
+    assert _comm_seq(out) == [("start", "bucket2"), ("wait", "bucket2"),
+                              ("start", "bucket1"), ("wait", "bucket1"),
+                              ("start", "bucket0"), ("wait", "bucket0")]
+
+
+def test_interleave_depth2_is_the_hand_pipeline():
+    # depth 2 = start one ahead, wait the oldest — and NO progress hops,
+    # the bit-identity contract with the old hand-scheduled pipeline
+    out = plan_mod.interleave_pass(2)(blocking(4))
+    assert _comm_seq(out) == [
+        ("start", "bucket0"), ("start", "bucket1"), ("wait", "bucket0"),
+        ("start", "bucket2"), ("wait", "bucket1"),
+        ("start", "bucket3"), ("wait", "bucket2"), ("wait", "bucket3")]
+    assert out.depth == 2
+
+
+def test_interleave_depth1_stays_blocking():
+    out = plan_mod.interleave_pass(1)(blocking(3))
+    assert _comm_seq(out) == _comm_seq(blocking(3))
+    with pytest.raises(ValueError, match=">= 1"):
+        plan_mod.interleave_pass(0)
+
+
+@pytest.mark.parametrize("depth", [3, 4])
+def test_interleave_depth_n_progress_conserves_stages_and_bytes(depth):
+    base = blocking(5)
+    out = plan_mod.interleave_pass(depth)(base)
+    assert out.depth == depth
+    prog = [op for op in out.comm_ops if op.kind == "progress"]
+    assert prog, "depth>=3 must emit progress hops"
+    for u in out.units:
+        ops = [op for op in out.comm_ops if op.unit == u.name]
+        p_ops = [op for op in ops if op.kind == "progress"]
+        (w_op,) = [op for op in ops if op.kind == "wait"]
+        assert sum(op.stages for op in p_ops) + w_op.stages == u.wait_stages
+        assert sum(op.bytes for op in p_ops) + w_op.bytes == u.wait_bytes
+    # total predicted traffic is invariant under the rewrite
+    assert (sum(out.predicted_phase_bytes().values())
+            == sum(base.predicted_phase_bytes().values()))
+
+
+def test_passes_compose_on_blocking_form_only():
+    piped = plan_mod.interleave_pass(2)(blocking(3))
+    with pytest.raises(ValueError, match="blocking"):
+        plan_mod.reverse_layout_pass(piped)
+
+
+def test_hoist_starts_crosses_overlappable_compute_only():
+    compute = (schedule_mod.ComputeOp(tag="epilogue", overlappable=False),
+               schedule_mod.ComputeOp(tag="peeled_mb", overlappable=True))
+    out = plan_mod.hoist_starts_pass(blocking(1, compute=compute))
+    tags = [(op.tag if isinstance(op, schedule_mod.ComputeOp)
+             else (op.kind, op.overlaps)) for op in out.ops]
+    # the start hopped the overlappable compute (annotated with its tag)
+    # but stopped at the non-overlappable one
+    assert tags == ["epilogue", ("start", "peeled_mb"), "peeled_mb",
+                    ("wait", None)]
+
+
+def test_hoist_starts_respects_ssa_deps():
+    u = ring_units(1)[0]
+    u = schedule_mod.sync_unit(
+        name=u.name, index=0, fn=u.fn, axes=u.axes, protocol=u.protocol,
+        start_stages=u.start_stages, wait_stages=u.wait_stages,
+        start_bytes=u.start_bytes, wait_bytes=u.wait_bytes,
+        uses=("mb.grads",))
+    compute = (schedule_mod.ComputeOp(tag="peeled_mb", overlappable=True,
+                                      defs=("mb.grads",)),)
+    out = plan_mod.hoist_starts_pass(
+        schedule_mod.build_sync_schedule([u], compute=compute))
+    first = out.ops[0]
+    assert isinstance(first, schedule_mod.ComputeOp)  # no hoist happened
+
+
+def test_canonical_pipeline_and_run_passes_timings():
+    sched, us = plan_mod.run_passes(blocking(4),
+                                    plan_mod.canonical_overlap_passes(3))
+    assert set(us) == {"reverse_layout", "interleave_depth3",
+                       "hoist_starts"}
+    assert all(v >= 0 for v in us.values())
+    assert sched.depth == 3
+    # passes rewrite order, never the traffic
+    assert (sched.predicted_phase_bytes()["all_reduce.start"]
+            + sched.predicted_phase_bytes()["all_reduce.progress"]
+            + sched.predicted_phase_bytes()["all_reduce.wait"]
+            == sum(blocking(4).predicted_phase_bytes().values()))
+
+
+def test_modeled_exposure_monotone_in_depth():
+    base = blocking(5)
+    frac = lambda d: schedule_mod.modeled_exposed_comm_frac(
+        plan_mod.run_passes(base,
+                            plan_mod.canonical_overlap_passes(d))[0])
+    assert schedule_mod.modeled_exposed_comm_frac(base) == pytest.approx(1.0)
+    f2, f3, f4 = frac(2), frac(3), frac(4)
+    assert 1.0 > f2 > f3 > f4
+    assert f4 < 0.75  # the depth-N acceptance bar
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+def test_execute_orders_callbacks_and_plumbs_tokens():
+    sched, _ = plan_mod.run_passes(blocking(3),
+                                   plan_mod.canonical_overlap_passes(3))
+    log = []
+
+    def start(u):
+        log.append(("start", u.name))
+        return f"tok-{u.name}"
+
+    def progress(u, tok, stages):
+        assert tok == f"tok-{u.name}" and stages >= 1
+        log.append(("progress", u.name))
+        return None  # keep the old token
+
+    def wait(u, tok):
+        assert tok == f"tok-{u.name}"
+        log.append(("wait", u.name))
+        return f"res-{u.name}"
+
+    results = schedule_mod.execute(sched, start=start, wait=wait,
+                                   progress=progress)
+    assert results == {u.name: f"res-{u.name}" for u in sched.units}
+    assert log == [(op.kind, op.unit) for op in sched.comm_ops]
+
+
+def test_execute_runs_compute_callbacks():
+    compute = (schedule_mod.ComputeOp(tag="mb0", overlappable=True),)
+    seen = []
+    schedule_mod.execute(blocking(1, compute=compute),
+                         start=lambda u: "t", wait=lambda u, t: "r",
+                         compute=lambda op: seen.append(op.tag))
+    assert seen == ["mb0"]
+
+
+# ---------------------------------------------------------------------------
+# Engine progress arms: start -> progress* -> wait == blocking, and
+# start+progress+wait phase bytes sum to the blocking path's wire bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proto", ["ring", "bidir_ring",
+                                   "recursive_halving"])
+def test_progress_hops_bit_identical(proto, rng):
+    eng = full_engine(force_protocol={"all_reduce": proto})
+    x = rng.randn(P_AX, 96).astype(np.float32)
+    blocking_y = jax.vmap(lambda v: eng.all_reduce(v, AX), axis_name=AX)(x)
+
+    def stepped(v):
+        tok = eng.all_reduce_start(v, AX)
+        hops = 0
+        while eng.all_reduce_progress(tok, 1):
+            hops += 1
+        assert hops > 0, f"{proto} wait phase should be steppable"
+        return eng.all_reduce_wait(tok)
+
+    y = jax.vmap(stepped, axis_name=AX)(x)
+    assert (np.asarray(blocking_y) == np.asarray(y)).all()
+
+
+def test_progress_seamless_protocol_is_a_noop(rng):
+    eng = full_engine(force_protocol={"all_reduce": "recursive_doubling"})
+    x = rng.randn(P_AX, 64).astype(np.float32)
+
+    def stepped(v):
+        tok = eng.all_reduce_start(v, AX)
+        assert eng.all_reduce_progress(tok, 3) == 0
+        return eng.all_reduce_wait(tok)
+
+    y = jax.vmap(stepped, axis_name=AX)(x)
+    ref = jax.vmap(lambda v: eng.all_reduce(v, AX), axis_name=AX)(x)
+    assert (np.asarray(ref) == np.asarray(y)).all()
+
+
+def _phase_totals(stats, fn):
+    return {ph: int(stats.phase_bytes.get(f"{fn}.{ph}", 0))
+            for ph in ("start", "progress", "wait")}
+
+
+def test_phase_byte_conservation_uncompressed(rng):
+    """start + progress + wait wire bytes sum to the blocking path's
+    wire traffic (the cost model's phase_wire_bytes split), and the
+    SYNC payload accounting matches blocking exactly — traced only.
+    Blocking calls record no phase attribution; the arms own it."""
+    leaves = {"a": jax.ShapeDtypeStruct((P_AX, 4096), jnp.float32),
+              "b": jax.ShapeDtypeStruct((P_AX, 1536), jnp.float32)}
+    eng_b = full_engine(force_protocol={"all_reduce": "ring"})
+    eng_o = full_engine(force_protocol={"all_reduce": "ring"})
+    jax.eval_shape(lambda g: jax.vmap(
+        lambda v: eng_b.sync_gradients(v, AX)[0], axis_name=AX)(g), leaves)
+    assert not eng_b.stats.phase_bytes
+
+    def overlapped(g):
+        toks = [eng_o.sync_gradient_start(l, AX)
+                for l in jax.tree_util.tree_leaves(g)]
+        for t in toks:
+            eng_o.sync_gradient_progress(t, 2)
+        return [eng_o.sync_gradient_wait(t)[0] for t in toks]
+
+    jax.eval_shape(lambda g: jax.vmap(overlapped, axis_name=AX)(g), leaves)
+    o = _phase_totals(eng_o.stats, "all_reduce")
+    assert o["progress"] > 0
+    want = sum(sum(plan_mod.phase_wire_bytes(
+        costmodel.RING, P_AX, int(np.prod(s.shape[1:])) * s.dtype.itemsize))
+        for s in jax.tree_util.tree_leaves(leaves))
+    assert sum(o.values()) == want
+    assert (int(eng_b.stats.bytes[SYNC_STATS_KEY])
+            == int(eng_o.stats.bytes[SYNC_STATS_KEY]))
+
+
+def test_phase_byte_conservation_compressed(rng):
+    from repro.core.engine import _compressed_wire_bytes
+    n = 2048
+    leaves = {"g": jax.ShapeDtypeStruct((P_AX, n), jnp.float32)}
+    eng_b = full_engine()
+    eng_o = full_engine()
+    jax.eval_shape(lambda g: jax.vmap(
+        lambda v: eng_b.sync_gradients(v, AX, compress=True)[0],
+        axis_name=AX)(g), leaves)
+
+    def overlapped(g):
+        tok = eng_o.sync_gradient_start(g["g"], AX, compress=True)
+        eng_o.sync_gradient_progress(tok, 1)
+        return eng_o.sync_gradient_wait(tok)[0]
+
+    jax.eval_shape(lambda g: jax.vmap(overlapped, axis_name=AX)(g), leaves)
+    o = _phase_totals(eng_o.stats, registry.COMPRESSED_ALL_REDUCE)
+    want = sum(plan_mod.phase_wire_bytes(costmodel.RING, P_AX,
+                                         _compressed_wire_bytes(n)))
+    assert sum(o.values()) == want > 0
+    assert (int(eng_b.stats.bytes[SYNC_STATS_KEY])
+            == int(eng_o.stats.bytes[SYNC_STATS_KEY]))
+
+
+# ---------------------------------------------------------------------------
+# Communicator.sync_schedule: the IR-construction chokepoint
+# ---------------------------------------------------------------------------
+
+def test_sync_schedule_annotates_from_plan():
+    sess = comm_mod.Session(topology=topology_from_mesh_shape((AX,), (P_AX,)))
+    d = sess.split(AX)
+    specs = [("small", 8 * 1024, jnp.float32),   # 32 KiB
+             ("large", 160 * 1024, jnp.float32)]  # 640 KiB
+    sched = d.sync_schedule(specs)
+    for (name, n, dt), u in zip(specs, sched.units):
+        nbytes = n * jnp.dtype(dt).itemsize
+        entry = sess.engine.plan.entry_for("all_reduce", nbytes, AX)
+        assert u.protocol == entry.protocol
+        assert (u.start_stages, u.wait_stages) == (entry.start_stages,
+                                                   entry.wait_stages)
+        assert (u.start_bytes, u.wait_bytes) == plan_mod.phase_wire_bytes(
+            entry.protocol, P_AX, nbytes, "all_reduce")
+    # the planner picks different protocols across this size gap
+    assert sched.units[0].protocol != sched.units[1].protocol
+
+
+def test_sync_schedule_compressed_and_multiaxis_units():
+    sess = comm_mod.Session(
+        topology=topology_from_mesh_shape((AX, "model"), (4, 2)))
+    (u,) = sess.split(AX).sync_schedule([("b0", 4096, jnp.float32)],
+                                        compress=True).units
+    assert u.fn == registry.COMPRESSED_ALL_REDUCE
+    assert u.protocol == costmodel.RING
+    (m,) = sess.world.sync_schedule([("b0", 4096, jnp.float32)]).units
+    assert m.protocol == costmodel.TWO_PHASE_2D and m.axes == (AX, "model")
+    podded = comm_mod.Session(
+        topology=topology_from_mesh_shape(("pod", AX), (2, 4)))
+    (h,) = podded.world.sync_schedule([("b0", 4096, jnp.float32)]).units
+    assert h.protocol == costmodel.HIERARCHICAL
+
+
+def test_sync_schedule_compute_entries_become_barriers():
+    sess = comm_mod.Session(topology=topology_from_mesh_shape((AX,), (P_AX,)))
+    sched = sess.split(AX).sync_schedule(
+        [("b0", 1024, jnp.float32)],
+        compute=(("peeled_mb", True), "epilogue"))
+    c0, c1 = sched.ops[0], sched.ops[1]
+    assert (c0.tag, c0.overlappable) == ("peeled_mb", True)
+    assert (c1.tag, c1.overlappable) == ("epilogue", True)  # default
+
+
+# ---------------------------------------------------------------------------
+# Session timeline: predicted == measured when the engine executes the
+# rewritten program through its phase arms
+# ---------------------------------------------------------------------------
+
+def test_timeline_diff_is_exact_for_executed_schedule():
+    sess = comm_mod.Session(topology=topology_from_mesh_shape((AX,), (P_AX,)))
+    d = sess.split(AX)
+    n = 40 * 1024  # 160 KiB -> a protocol with a steppable wait phase
+    sched, _ = plan_mod.run_passes(
+        d.sync_schedule([("g0", n, jnp.float32), ("g1", n, jnp.float32)]),
+        plan_mod.canonical_overlap_passes(3))
+    eng = sess.engine
+
+    def run(v):
+        vals = {"g0": v, "g1": v + 1.0}
+        return schedule_mod.execute(
+            sched,
+            start=lambda u: eng.sync_gradient_start(vals[u.name], AX,
+                                                    mean=False),
+            progress=lambda u, tok, k: (eng.sync_gradient_progress(tok, k),
+                                        tok)[1],
+            wait=lambda u, tok: eng.sync_gradient_wait(tok)[0])
+
+    jax.eval_shape(lambda g: jax.vmap(run, axis_name=AX)(g),
+                   jax.ShapeDtypeStruct((P_AX, n), jnp.float32))
+    diff = sess.timeline_diff(sched)
+    assert diff, "diff should cover the recorded phase keys"
+    for key, row in diff.items():
+        assert row["delta"] == 0, (key, row)
+        assert row["predicted"] == row["measured"]
+
+
+# ---------------------------------------------------------------------------
+# fn-aware stage splits (the tables units are annotated from)
+# ---------------------------------------------------------------------------
+
+def test_stage_counts_fn_aware_over_the_whole_menu():
+    for p in (2, 4, 8, 16):
+        for fn in costmodel.protocol_functions():
+            for proto in costmodel.protocol_menu(fn):
+                ss, ws = plan_mod.protocol_stage_counts(proto, p, fn)
+                sb, wb = plan_mod.phase_wire_bytes(proto, p, 1 << 16, fn)
+                assert ss >= 1 and ws >= 0, (fn, proto, p)
+                assert sb >= 0 and wb >= 0
+                # no bytes may hide in a phase with no stages
+                if ws == 0:
+                    assert wb == 0, (fn, proto, p)
+        assert plan_mod.protocol_stage_counts("ring", 1) == (0, 0)
+
+
+def test_stage_counts_one_phase_and_van_de_geijn_splits():
+    p, n = P_AX, 1 << 16
+    lg = (p - 1).bit_length()
+    share = (p - 1) * n // p
+    # one-phase collectives: everything in start
+    for fn, proto in (("reduce_scatter", costmodel.RING),
+                      ("all_gather", costmodel.RING),
+                      ("all_to_all", costmodel.PAIRWISE),
+                      ("permute", costmodel.PIPELINE)):
+        assert plan_mod.protocol_stage_counts(proto, p, fn)[1] == 0
+        assert plan_mod.phase_wire_bytes(proto, p, n, fn)[1] == 0
+    # van de Geijn broadcast: binomial scatter | ring all-gather
+    assert plan_mod.protocol_stage_counts(costmodel.RING, p,
+                                          "broadcast") == (lg, p - 1)
+    assert plan_mod.phase_wire_bytes(costmodel.RING, p, n,
+                                     "broadcast") == (share, share)
+    # the all-reduce base table keeps the historical 2-arg contract
+    assert plan_mod.protocol_stage_counts(costmodel.RING, p) == (p - 1,
+                                                                 p - 1)
+
+
+# ---------------------------------------------------------------------------
+# Persistent handles: progress arm + the remesh error that names handles
+# ---------------------------------------------------------------------------
+
+def test_handle_progress_bit_identical_and_epoch_checked(rng):
+    sess = comm_mod.Session(topology=topology_from_mesh_shape((AX,), (P_AX,)))
+    h = sess.split(AX).persistent("all_reduce", (96,), jnp.float32)
+    x = rng.randn(P_AX, 96).astype(np.float32)
+    ref = jax.vmap(h, axis_name=AX)(x)
+
+    def stepped(v):
+        tok = h.start(v)
+        while h.progress(tok, 1):
+            pass
+        return h.wait(tok)
+
+    y = jax.vmap(stepped, axis_name=AX)(x)
+    assert (np.asarray(ref) == np.asarray(y)).all()
+    assert h.inflight == 0
+
+    import repro.comm.session as sess_mod
+    stale = sess_mod.HandleInFlight(handle=h, epoch=h.epoch - 1, inner=None)
+    with pytest.raises(comm_mod.HandleRevokedError, match="progress"):
+        h.progress(stale)
+    with pytest.raises(ValueError, match="different handle"):
+        other = sess.split(AX).persistent("all_reduce", (96,), jnp.float32)
+        other.progress(sess_mod.HandleInFlight(handle=h, epoch=h.epoch,
+                                               inner=None))
+
+
+def test_remesh_error_names_the_offending_handles():
+    sess = comm_mod.Session(topology=topology_from_mesh_shape((AX,), (2,)))
+    h = sess.split(AX).persistent("all_reduce", (17,), jnp.float32)
+    jax.eval_shape(
+        lambda v: jax.vmap(lambda u: (h.start(u), u)[1], axis_name=AX)(v),
+        jax.ShapeDtypeStruct((2, 17), jnp.float32))
+    grown = substrate.abstract_mesh((4,), (AX,))
+    with pytest.raises(comm_mod.InFlightHandleError) as exc:
+        sess.remesh(grown)
+    msg = str(exc.value)
+    # the error names WHICH collective is stuck, not just a count
+    assert "all_reduce[17]" in msg
+    assert f"epoch {h.epoch}" in msg
+    assert "1 start(s) never waited" in msg
+    h.abandon_inflight()
+
+
+# ---------------------------------------------------------------------------
+# check_api rule 4: IR nodes are built only behind the comm facade
+# ---------------------------------------------------------------------------
+
+def test_lint_forbids_ir_node_construction_outside_core():
+    for snippet in (
+            "from repro.core import schedule\n"
+            "u = schedule.CommUnit(name='x', index=0, fn='all_reduce',"
+            " axes=(), protocol='ring', start_stages=1, wait_stages=1,"
+            " start_bytes=1, wait_bytes=1)\n",
+            "from repro.core.schedule import Schedule\n"
+            "s = Schedule(units=(), ops=())\n",
+            "import repro.core.schedule as S\n"
+            "op = S.ComputeOp(tag='mb')\n"):
+        out = check_api.check_source(snippet, "src/repro/train/x.py")
+        assert out and "sync_schedule" in out[0], snippet
+    # core/comm own the nodes (check_paths skips the EXEMPT prefixes);
+    # the repo itself must be clean under the rule — the IR-constructing
+    # implementation lives entirely inside the exempt layers
+    assert "src/repro/core/" in check_api.EXEMPT
+    assert "src/repro/comm/" in check_api.EXEMPT
+    assert check_api.check_paths(check_api.DEFAULT_ROOTS) == []
+
+
+# ---------------------------------------------------------------------------
+# End to end: the depth-N rewritten trainer stays bit-identical to the
+# blocking step, and its measured phase bytes equal the schedule's
+# prediction exactly
+# ---------------------------------------------------------------------------
+
+def test_depth4_train_step_bit_identical_and_timeline_exact():
+    run_subprocess_script("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, make_train_state, make_train_step, trainer
+from repro import comm as comm_mod
+from repro.data import SyntheticLMDataset
+from repro.parallel.sharding import named_shardings
+from repro.runtime import substrate
+
+mesh = substrate.make_mesh((8,), ("data",))
+cfg = get_config("granite-34b", reduced=True)
+model = build_model(cfg)
+opt = make_optimizer("adamw", lr=1e-3)
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=16)
+
+results = {}
+for overlap, depth in ((False, 2), (True, 4)):
+    sess = comm_mod.Session(mesh=mesh)
+    tcfg = TrainCfg(sync_mode="composed", data_axes=("data",),
+                    microbatches=2, bucket_grads=True,
+                    bucket_bytes=96 * 1024, overlap=overlap,
+                    overlap_depth=depth)
+    step = make_train_step(model, opt, tcfg, comm=sess.world)
+    with substrate.set_mesh(mesh):
+        state = make_train_state(model, opt, jax.random.PRNGKey(0),
+                                 cfg=tcfg)
+        state = jax.device_put(state, named_shardings(
+            mesh, trainer.state_specs(model, opt, tcfg)))
+        jstep = jax.jit(step)
+        losses = []
+        for i in range(2):
+            state, metrics = jstep(
+                state, ds.sharded_batch(i, mesh, batch_axes=("data",)))
+            losses.append(float(metrics["loss"]))
+    results[overlap] = (losses, [
+        np.asarray(l) for l in jax.tree_util.tree_leaves(state["params"])],
+        sess, step)
+
+(lb, pb, _, _), (lo, po, sessN, stepN) = results[False], results[True]
+assert lb == lo, (lb, lo)
+assert all((a == b).all() for a, b in zip(pb, po))
+
+sched = stepN.schedule
+assert sched is not None and sched.depth == 4
+assert any(op.kind == "progress" for op in sched.comm_ops)
+diff = sessN.timeline_diff(sched)
+bad = {k: v for k, v in diff.items() if v["delta"] != 0}
+assert not bad, bad
+print("OK")
+""", timeout=420)

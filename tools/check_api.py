@@ -13,11 +13,17 @@ EXCEPT the implementation layers ``src/repro/core`` and ``src/repro/comm``:
      through ``repro.comm.collectives``, application collectives through
      a ``Communicator``;
 
-  3. no calls to ``_start``/``_wait``-suffixed engine internals
-     (``_allreduce_1d_start``, ``_compressed_wait``, ...) — the
-     nonblocking two-phase protocol's public surface is
-     ``PersistentHandle.start/wait`` and the Communicator's
-     ``all_reduce_start/wait`` / ``sync_gradient_start/wait``.
+  3. no calls to ``_start``/``_progress``/``_wait``-suffixed engine
+     internals (``_allreduce_1d_start``, ``_progress_inflight``,
+     ``_compressed_wait``, ...) — the nonblocking protocol's public
+     surface is ``PersistentHandle.start/progress/wait`` and the
+     Communicator's ``all_reduce_start/progress/wait`` /
+     ``sync_gradient_start/progress/wait``;
+
+  4. no construction of schedule-IR nodes (``CommUnit``, ``CommOp``,
+     ``ComputeOp``, ``Schedule``) — sync programs come from
+     ``Communicator.sync_schedule`` / ``Session.schedule_for`` and are
+     rewritten by ``repro.core.plan`` passes, never hand-built.
 
 Pure AST walk, no imports of the checked code.  Wired into tier-1 via
 ``tests/test_api_lint.py``; also runnable standalone:
@@ -46,14 +52,20 @@ ENGINE_CTORS = frozenset({"for_mesh", "from_application", "monolithic"})
 
 
 def _is_private_phase_arm(attr: str) -> bool:
-    """Underscore-prefixed attribute with ``start``/``wait`` as a name
-    word — an engine-internal arm of the two-phase split (rule 3).
-    Matches ``_allreduce_1d_start``, ``_compressed_wait``, and
+    """Underscore-prefixed attribute with ``start``/``progress``/``wait``
+    as a name word — an engine-internal arm of the phase split (rule 3).
+    Matches ``_allreduce_1d_start``, ``_progress_inflight``, and
     ``_wait_inflight`` alike; ``_startup``/``_restart`` do not count
-    (the word must be exactly start/wait)."""
+    (the word must be exactly start/progress/wait)."""
     if not attr.startswith("_") or attr.startswith("__"):
         return False
-    return bool({"start", "wait"} & set(attr.strip("_").split("_")))
+    return bool({"start", "progress", "wait"}
+                & set(attr.strip("_").split("_")))
+
+
+#: schedule-IR node constructors (rule 4): hand-building comm programs
+#: outside the implementation layers bypasses the planner's pass pipeline.
+IR_NODES = frozenset({"CommUnit", "CommOp", "ComputeOp", "Schedule"})
 
 #: path prefixes (relative to repo root, "/"-separated) that ARE the
 #: implementation and may touch engines/lax freely.
@@ -108,11 +120,22 @@ def check_source(src: str, relpath: str) -> List[str]:
         if isinstance(fn, ast.Name) and fn.id == "CollectiveEngine":
             out.append(f"{relpath}:{node.lineno}: constructs a "
                        f"CollectiveEngine — use repro.comm.Session")
+        # CommOp(...) etc. — schedule-IR node construction (rule 4)
+        elif isinstance(fn, ast.Name) and fn.id in IR_NODES:
+            out.append(f"{relpath}:{node.lineno}: constructs schedule-IR "
+                       f"node {fn.id} — build programs with "
+                       f"Communicator.sync_schedule / Session.schedule_for")
         elif isinstance(fn, ast.Attribute):
             # <anything>.CollectiveEngine(...)
             if fn.attr == "CollectiveEngine":
                 out.append(f"{relpath}:{node.lineno}: constructs a "
                            f"CollectiveEngine — use repro.comm.Session")
+            # <anything>.CommOp(...) etc. (rule 4)
+            elif fn.attr in IR_NODES:
+                out.append(f"{relpath}:{node.lineno}: constructs "
+                           f"schedule-IR node {fn.attr} — build programs "
+                           f"with Communicator.sync_schedule / "
+                           f"Session.schedule_for")
             # CollectiveEngine.for_mesh(...) etc.
             elif (fn.attr in ENGINE_CTORS
                   and isinstance(fn.value, ast.Name)
