@@ -70,6 +70,7 @@ def payload(smoke: bool = False) -> dict:
     from benchmarks.bench_elastic import recovery_latency
     from benchmarks.bench_layers import dispatch_overhead, layer_numbers
     from benchmarks.bench_overlap import overlap_metrics
+    from benchmarks.bench_serve import serve_metrics
     ov = overlap_metrics(smoke=smoke)
     return {
         "dispatch": dispatch_overhead(repeat=100 if smoke else 300),
@@ -78,6 +79,7 @@ def payload(smoke: bool = False) -> dict:
         "recovery": recovery_latency(smoke=smoke),
         "overlap": ov["overlap"],
         "schedule": ov["schedule"],
+        "serve": serve_metrics(smoke=smoke),
     }
 
 
@@ -126,7 +128,17 @@ def run(smoke: bool = False):
     t5.add(f"modeled exposed frac depth 2 -> {s['depth']}",
            f"{s['exposed_comm_frac_depth2']:.3f} -> "
            f"{s['exposed_comm_frac_depthN']:.3f}")
-    return [t, t2, t3, t4, t5], p
+    sv = p["serve"]
+    t6 = Table(f"bench_plan: elastic serving ({sv['arch']}, "
+               f"{sv['n_requests']} requests, {sv['batch']} slots)",
+               ["metric", "value"])
+    t6.add("throughput", f"{sv['tokens_per_s']:.1f} tok/s")
+    t6.add("p50/p99 admission-to-first-token",
+           f"{sv['p50_ttft_s'] * 1e3:.0f} / "
+           f"{sv['p99_ttft_s'] * 1e3:.0f} ms")
+    t6.add("recovery (drain+remesh+rebuild rehearsal)",
+           f"{sv['recovery_s'] * 1e3:.0f} ms")
+    return [t, t2, t3, t4, t5, t6], p
 
 
 def main():

@@ -1,0 +1,109 @@
+"""Serving bench: throughput, admission-to-first-token latency, and
+elastic recovery latency for the ``serve`` block of ``BENCH_plan.json``.
+
+Runs the continuous-batching scheduler on a reduced decoder under a
+``repro.comm`` session, measures tokens/s and per-request TTFT from the
+scheduler's own timestamps, then uses ``ServeController.
+rehearse_recovery()`` — the REAL drain -> snapshot -> re-mesh -> rebuild
+-> re-admit machinery fired over the current healthy set — for the
+recovery-seconds number (a smoke run on one host device cannot lose a
+device, and a rehearsal exercises the identical code path).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Table
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(round(q * (len(sorted_vals) - 1)))))
+    return float(sorted_vals[idx])
+
+
+def serve_metrics(smoke: bool = True) -> dict:
+    from repro import comm as comm_mod
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.serve import Request, ServeCfg, ServeController
+
+    cfg = get_config("granite-34b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    session = comm_mod.Session(mesh=make_host_mesh(model_parallel=1))
+
+    n_requests = 8 if smoke else 24
+    max_new = 6 if smoke else 16
+    scfg = ServeCfg(max_len=64 if smoke else 128, batch=4,
+                    cache_dtype=jax.numpy.float32)
+    ctl = ServeController(model, params, scfg, comm=session.world)
+    rng = np.random.RandomState(0)
+
+    t0 = time.time()
+    for rid in range(n_requests):
+        ctl.submit(Request(
+            rid=rid,
+            prompt=rng.randint(0, cfg.vocab_size,
+                               size=rng.randint(4, 12)).tolist(),
+            max_new=max_new))
+    report = ctl.run()
+    wall_s = time.time() - t0
+    tokens = sum(len(r.generated) for r in report.completed)
+    ttft = report.ttft_s()
+
+    # Recovery: fire-drill the full lifecycle with requests in flight.
+    for rid in range(n_requests, n_requests + 3):
+        ctl.submit(Request(
+            rid=rid,
+            prompt=rng.randint(0, cfg.vocab_size, size=8).tolist(),
+            max_new=max_new))
+    ctl.sched.step()
+    rec = ctl.rehearse_recovery()
+    ctl.run()
+
+    return {
+        "arch": cfg.name,
+        "n_requests": n_requests,
+        "batch": scfg.batch,
+        "tokens_per_s": tokens / wall_s if wall_s > 0 else 0.0,
+        "p50_ttft_s": _percentile(ttft, 0.50),
+        "p99_ttft_s": _percentile(ttft, 0.99),
+        "recovery_s": rec.total_s,
+        "recovery_snapshot_s": rec.snapshot_s,
+        "recovery_remesh_s": rec.remesh_s,
+        "recovery_rebuild_s": rec.rebuild_s,
+        "recovery_resumed": rec.resumed,
+    }
+
+
+def run(smoke: bool = True):
+    m = serve_metrics(smoke=smoke)
+    t = Table(f"bench_serve: elastic serving ({m['arch']}, "
+              f"{m['n_requests']} requests, {m['batch']} slots)",
+              ["metric", "value"])
+    t.add("throughput", f"{m['tokens_per_s']:.1f} tok/s")
+    t.add("p50 admission-to-first-token", f"{m['p50_ttft_s'] * 1e3:.0f} ms")
+    t.add("p99 admission-to-first-token", f"{m['p99_ttft_s'] * 1e3:.0f} ms")
+    t.add(f"recovery (rehearsal, {m['recovery_resumed']} in flight)",
+          f"{m['recovery_s'] * 1e3:.0f} ms = "
+          f"{m['recovery_snapshot_s'] * 1e3:.0f} snap + "
+          f"{m['recovery_remesh_s'] * 1e3:.0f} remesh + "
+          f"{m['recovery_rebuild_s'] * 1e3:.0f} rebuild")
+    return t, m
+
+
+def main():
+    t, _ = run(smoke=True)
+    t.print()
+
+
+if __name__ == "__main__":
+    main()

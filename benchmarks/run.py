@@ -35,6 +35,7 @@ REQUIRED_KEYS = {
     "schedule": ("depth", "pass_us", "predicted_phase_bytes",
                  "measured_phase_bytes", "exposed_comm_frac_depth2",
                  "exposed_comm_frac_depthN"),
+    "serve": ("tokens_per_s", "p50_ttft_s", "p99_ttft_s", "recovery_s"),
 }
 
 

@@ -1,5 +1,6 @@
 from repro.checkpoint.manager import (CheckpointManager, latest_step,
-                                      restore_checkpoint, save_checkpoint)
+                                      load_manifest, restore_checkpoint,
+                                      save_checkpoint)
 
-__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
-           "save_checkpoint"]
+__all__ = ["CheckpointManager", "latest_step", "load_manifest",
+           "restore_checkpoint", "save_checkpoint"]

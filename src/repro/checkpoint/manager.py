@@ -44,10 +44,14 @@ def _from_bytes(buf: bytes, dtype: str, shape) -> np.ndarray:
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
-                    async_: bool = False) -> "Optional[threading.Thread]":
+                    async_: bool = False,
+                    meta: Optional[dict] = None
+                    ) -> "Optional[threading.Thread]":
     """Write ``tree`` as checkpoint ``step``.  With ``async_=True`` the
     filesystem work happens on a returned daemon thread (already started);
-    join it to guarantee durability."""
+    join it to guarantee durability.  ``meta``: JSON-serialisable sidecar
+    stored in the manifest (non-array state, e.g. the serving scheduler's
+    request books), read back via ``load_manifest``."""
     os.makedirs(directory, exist_ok=True)
     host_tree = jax.device_get(tree)        # consistent snapshot
 
@@ -59,7 +63,8 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         os.makedirs(tmp)
         leaves, treedef = jax.tree_util.tree_flatten(host_tree)
         manifest = {"step": step, "num_leaves": len(leaves),
-                    "treedef": str(treedef), "leaves": []}
+                    "treedef": str(treedef), "meta": meta or {},
+                    "leaves": []}
         for i, leaf in enumerate(leaves):
             buf, dtype, shape = _to_numpy_bytes(leaf)
             fname = f"leaf_{i:05d}.bin"
@@ -97,6 +102,20 @@ def latest_step(directory: str) -> Optional[int]:
             except ValueError:
                 pass
     return max(steps) if steps else None
+
+
+def load_manifest(directory: str, step: Optional[int] = None) -> dict:
+    """Read a checkpoint's manifest (incl. its ``meta`` sidecar) without
+    touching the array leaves.  ``step=None`` resolves the latest."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    manifest.setdefault("meta", {})
+    return manifest
 
 
 def _bucket_layout_hint(abstract_tree: Any, abs_leaves,

@@ -730,6 +730,35 @@ class Session:
             h._rebind(fingerprint_changed=rebuilt)
         return rebuilt
 
+    def remesh_over(self, devices, *, model_parallel: Optional[int] = None,
+                    pods: Optional[int] = None):
+        """Plan + build the survivor mesh and ``remesh`` onto it in one
+        call — the serving tier's recovery surface (the training
+        controller plans its own mesh; here the session does it so a
+        ``ServeController`` never touches jax mesh APIs directly).
+
+        ``devices``: the surviving device objects.  ``model_parallel`` /
+        ``pods``: the ORIGINAL parallelism layout to aim back at (defaults
+        read off the current mesh).  Returns ``(mesh, plan_rebuilt)``.
+        """
+        from repro.runtime import elastic     # lazy: no import cycle
+        if not _is_concrete_mesh(self._mesh):
+            raise ValueError("remesh_over needs a session over a concrete "
+                             "mesh")
+        sizes = dict(self._mesh.shape)
+        mp = model_parallel if model_parallel is not None \
+            else sizes.get("model", 1)
+        pd = pods if pods is not None else sizes.get("pod", 1)
+        devices = list(devices)
+        shape = elastic.plan_mesh_shape(len(devices), mp, pods=pd,
+                                        ndim=len(sizes))
+        n = 1
+        for s in shape:
+            n *= s
+        mesh = elastic.make_mesh_from_shape(
+            shape, tuple(self._mesh.axis_names), devices=devices[:n])
+        return mesh, self.remesh(mesh)
+
     def activate(self):
         """Context manager making the session's mesh the active substrate
         mesh (``substrate.set_mesh`` / ``use_abstract_mesh``)."""

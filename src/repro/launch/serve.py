@@ -1,7 +1,13 @@
-"""Serving driver: continuous-batching generation on a reduced model.
+"""Serving driver: continuous-batching generation on a reduced model,
+optionally supervised by the elastic ``ServeController``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b \
         --requests 16 --batch 4 --max-new 12
+
+    # elastic: 8 fake host devices, lose 2 at decode step 3
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --elastic \
+        --fault-plan lose@3:2 --requests 16 --batch 8
 """
 
 from __future__ import annotations
@@ -17,7 +23,8 @@ from repro import comm as comm_mod
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
-from repro.serve import BatchScheduler, Request, ServeCfg
+from repro.runtime.controller import FaultPlan
+from repro.serve import BatchScheduler, Request, ServeCfg, ServeController
 
 logger = logging.getLogger("repro.serve")
 
@@ -29,6 +36,20 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed (ServeCfg.seed)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission-control backlog bound (shed beyond)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="supervise with ServeController (drain/re-mesh/"
+                         "re-admit on device loss)")
+    ap.add_argument("--fault-plan", default="",
+                    help='injected faults, e.g. "lose@3:2,stall@5"')
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--max-recoveries", type=int, default=8)
+    ap.add_argument("--watchdog-timeout", type=float, default=300.0)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="persist drained scheduler snapshots here")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -47,19 +68,40 @@ def main() -> None:
     logger.info("serving session: %s", session.world.describe())
 
     scfg = ServeCfg(max_len=args.max_len, batch=args.batch,
-                    cache_dtype=jax.numpy.float32)
-    sched = BatchScheduler(model, params, scfg, comm=session.world)
+                    cache_dtype=jax.numpy.float32, seed=args.seed,
+                    max_queue=args.max_queue)
     rng = np.random.RandomState(0)
+    requests = [
+        Request(rid=rid,
+                prompt=rng.randint(0, cfg.vocab_size,
+                                   size=rng.randint(4, 16)).tolist(),
+                max_new=args.max_new)
+        for rid in range(args.requests)]
+
     t0 = time.time()
-    for rid in range(args.requests):
-        prompt = rng.randint(0, cfg.vocab_size,
-                             size=rng.randint(4, 16)).tolist()
-        sched.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
-    done = sched.run()
+    if args.elastic:
+        plan = (FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
+                if args.fault_plan else None)
+        ctl = ServeController(
+            model, params, scfg, comm=session.world, fault_plan=plan,
+            max_recoveries=args.max_recoveries,
+            watchdog_timeout=args.watchdog_timeout,
+            snapshot_dir=args.snapshot_dir)
+        for req in requests:
+            ctl.submit(req)
+        report = ctl.run()
+        done, shed = report.completed, report.shed
+        logger.info("%s", report.describe())
+    else:
+        sched = BatchScheduler(model, params, scfg, comm=session.world)
+        for req in requests:
+            sched.submit(req)
+        done, shed = sched.run(), sched.shed
     dt = time.time() - t0
     total_tokens = sum(len(r.generated) for r in done)
-    logger.info("served %d requests, %d tokens in %.2fs (%.1f tok/s)",
-                len(done), total_tokens, dt, total_tokens / dt)
+    logger.info("served %d requests (%d shed), %d tokens in %.2fs "
+                "(%.1f tok/s)", len(done), len(shed), total_tokens, dt,
+                total_tokens / dt)
     for r in done[:4]:
         logger.info("req %d: %s", r.rid, r.generated)
 

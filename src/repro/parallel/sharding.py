@@ -49,12 +49,33 @@ def auto_axis_names(mesh) -> tuple:
 def shard_hint(x: jax.Array, spec: P) -> jax.Array:
     """Best-effort sharding constraint: identity without a mesh context
     (or where the backend cannot resolve bare specs, e.g. abstract-mesh
-    tracing on legacy JAX)."""
+    tracing on legacy JAX).
+
+    On *concrete* values — eager execution, where with_sharding_constraint
+    lowers to jit(identity, out_shardings=...) and jax enforces exact
+    divisibility — spec entries whose mesh-axis product does not divide
+    the dim are dropped: the serving tier's un-jitted batch-1 prefill runs
+    the same model code under a data-parallel mesh.  Under tracing the
+    spec is applied as-is (hints are load-bearing for the partitioner and
+    per-shard shapes inside vmap-emulated manual regions would fail a
+    naive divisibility test)."""
     mesh = active_mesh()
     if not substrate.supports_spec_constraint(mesh):
         return x
     fs = filter_spec(spec, auto_axis_names(mesh))
-    return jax.lax.with_sharding_constraint(x, fs)
+    if isinstance(x, jax.core.Tracer):
+        return jax.lax.with_sharding_constraint(x, fs)
+    sizes = dict(mesh.shape)
+    out = []
+    for i, entry in enumerate(fs):
+        if entry is None or i >= x.ndim:
+            out.append(entry if i < x.ndim else None)
+            continue
+        n = 1
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            n *= sizes.get(a, 1)
+        out.append(entry if x.shape[i] % n == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*out))
 
 
 def activation_hint(x: jax.Array) -> jax.Array:

@@ -39,7 +39,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.runtime import elastic, substrate
+from repro.runtime import elastic, health, substrate
 from repro.runtime.watchdog import StepWatchdog
 
 logger = logging.getLogger("repro.runtime")
@@ -193,6 +193,7 @@ class ElasticController:
                  max_recoveries: int = 8,
                  watchdog_timeout: float = 300.0,
                  rng_seed: int = 0,
+                 preemption: Optional[health.PreemptionNotice] = None,
                  on_step: Optional[Callable[[int, float], None]] = None):
         self.session = session
         self.dataset = dataset
@@ -208,6 +209,7 @@ class ElasticController:
         self.fault_plan = fault_plan or FaultPlan()
         self.max_recoveries = max_recoveries
         self.rng_seed = rng_seed
+        self.preemption = preemption
         self.on_step = on_step
         self.ckpt = CheckpointManager(ckpt_dir, every=ckpt_every,
                                       keep=ckpt_keep)
@@ -276,8 +278,23 @@ class ElasticController:
     def mark_unhealthy(self, device_ids: Sequence[int]) -> None:
         """Production surface for real health probes: devices reported
         dead here are excluded from the next re-mesh; the loop notices at
-        the next stall signal or step failure."""
-        self._healthy -= set(device_ids)
+        the next stall signal or step failure.  The survivor set runs
+        through the cross-host agreement seam (single-host stub today) so
+        every host re-meshes over the same devices."""
+        self._healthy = health.agree_survivors(
+            self._healthy - set(device_ids))
+
+    def _drain_preemptions(self) -> None:
+        """Step-boundary drain of the preemption mailbox: an announced
+        eviction becomes a graceful re-mesh BEFORE the hardware goes."""
+        if self.preemption is None or not self.preemption.pending:
+            return
+        victims = self.preemption.drain()
+        if not victims:
+            return
+        logger.warning("preemption notice for devices %s", victims)
+        self.mark_unhealthy(victims)
+        raise DeviceLoss(victims)
 
     def _apply_faults(self, step: int) -> None:
         # keyed by event *index*: value-equal duplicate events are
@@ -418,6 +435,7 @@ class ElasticController:
         try:
             while step < self.total_steps:
                 try:
+                    self._drain_preemptions()
                     self._apply_faults(step)
                     with substrate.set_mesh(self.mesh):
                         batch = self.dataset.sharded_batch(
@@ -434,6 +452,18 @@ class ElasticController:
                     self._check_stall(step - 1)
                 except DeviceLoss as e:
                     step = self._recover(step, e)
+                except Exception as e:
+                    # A real runtime error: recover ONLY if it classifies
+                    # as a device failure; anything else is a bug and
+                    # propagates untouched.
+                    victims = health.classify_failure(e)
+                    if victims is None:
+                        raise
+                    logger.warning("step %d: runtime error classified as "
+                                   "device failure (victims=%s): %s",
+                                   step, victims, e)
+                    self.mark_unhealthy(victims)
+                    step = self._recover(step, DeviceLoss(victims))
             self.ckpt.maybe_save(self.total_steps, self.state, force=True)
             self.ckpt.wait()
         finally:

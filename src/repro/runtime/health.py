@@ -1,0 +1,136 @@
+"""Real failure signals -> the controllers' ``mark_unhealthy`` path.
+
+The injected ``FaultPlan`` drives tests; production failures arrive as
+
+* **runtime errors** — XLA surfaces dead devices as
+  ``jax.errors.XlaRuntimeError`` (older stacks:
+  ``jaxlib.xla_extension.XlaRuntimeError``).  ``classify_failure`` decides
+  whether an exception is a device failure (vs. a plain bug that must
+  propagate) and extracts victim device ids from the message when XLA
+  names them;
+* **preemption notices** — cloud schedulers announce evictions ahead of
+  time (SIGTERM handler, maintenance-event poller).  ``PreemptionNotice``
+  is the pluggable, thread-safe mailbox controllers drain at each step
+  boundary: post from any thread, the loop turns it into a graceful
+  drain + re-mesh *before* the hardware disappears;
+* **survivor agreement** — on multi-host deployments every host sees its
+  own failure evidence and the hosts must agree on one survivor set
+  before re-meshing (MPIX_Comm_agree in the fault-tolerant MPI lineage).
+  ``agree_survivors`` is the single-host stub of that vote (intersection
+  over views) so the controllers already route through the right seam.
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from typing import Iterable, Optional, Sequence, Set, Tuple
+
+# Message fragments that mark a runtime error as a *device* failure.
+# Sources: XLA status payloads for device loss / preemption / collective
+# peer death.  Anything else (shape errors, OOM-in-compile, user bugs)
+# must NOT be classified — those propagate.
+_DEVICE_FAILURE_MARKERS = (
+    "device lost",
+    "device failure",
+    "device unavailable",
+    "unavailable:",
+    "failed precondition",
+    "preempt",
+    "halted",
+    "terminated",
+    "socket closed",
+    "connection reset",
+    "peer down",
+    "nccl",
+    "dead device",
+)
+
+_DEVICE_ID_RE = re.compile(r"device[ _:#]*(\d+)", re.IGNORECASE)
+
+
+def _runtime_error_types() -> Tuple[type, ...]:
+    """The XLA runtime-error types this stack can raise (version-portable:
+    each looked up defensively)."""
+    types = []
+    try:
+        import jax
+        for name in ("XlaRuntimeError", "JaxRuntimeError"):
+            t = getattr(jax.errors, name, None)
+            if isinstance(t, type):
+                types.append(t)
+    except ImportError:                              # pragma: no cover
+        pass
+    try:                                             # pragma: no cover
+        from jaxlib import xla_extension
+        t = getattr(xla_extension, "XlaRuntimeError", None)
+        if isinstance(t, type):
+            types.append(t)
+    except ImportError:
+        pass
+    return tuple(types)
+
+
+def classify_failure(exc: BaseException) -> Optional[Tuple[int, ...]]:
+    """Is ``exc`` a device failure?
+
+    Returns ``None`` for anything that is not (the caller re-raises: a
+    user bug must never be "recovered" into silence).  For a device
+    failure, returns the victim device ids XLA named in the message —
+    possibly ``()`` when the runtime knows *something* died but not what;
+    the caller then leans on health probes / the watchdog to refine.
+    """
+    if not isinstance(exc, _runtime_error_types()):
+        return None
+    msg = str(exc).lower()
+    if not any(marker in msg for marker in _DEVICE_FAILURE_MARKERS):
+        return None
+    return tuple(sorted({int(m) for m in _DEVICE_ID_RE.findall(msg)}))
+
+
+class PreemptionNotice:
+    """Thread-safe preemption mailbox (the pluggable notice callback).
+
+    Producers — a SIGTERM handler, a maintenance-event poller, a test —
+    call ``post(device_ids)`` from any thread.  The controller drains it
+    at each step boundary (the only place JAX state may be touched) and
+    turns the notice into a graceful drain + re-mesh.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._pending: Set[int] = set()
+        self._posted = 0
+
+    def post(self, device_ids: Sequence[int]) -> None:
+        with self._lock:
+            self._pending.update(int(d) for d in device_ids)
+            self._posted += 1
+
+    def drain(self) -> Tuple[int, ...]:
+        """Take (and clear) the pending victim set."""
+        with self._lock:
+            out = tuple(sorted(self._pending))
+            self._pending.clear()
+        return out
+
+    @property
+    def pending(self) -> bool:
+        with self._lock:
+            return bool(self._pending)
+
+
+def agree_survivors(local_view: Iterable[int],
+                    peer_views: Sequence[Iterable[int]] = ()
+                    ) -> Set[int]:
+    """Cross-host agreement stub on the survivor set (MPIX_Comm_agree
+    shape): a device survives only if EVERY view still trusts it — the
+    conservative intersection, so no host re-meshes over a device another
+    host watched die.  Single-host today: ``peer_views`` is empty and
+    this is the identity; multi-host wiring replaces the transport, not
+    the callers.
+    """
+    survivors = set(int(d) for d in local_view)
+    for view in peer_views:
+        survivors &= set(int(d) for d in view)
+    return survivors

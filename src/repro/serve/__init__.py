@@ -1,5 +1,13 @@
-from repro.serve.engine import (BatchScheduler, Request, ServeCfg, generate,
-                                make_decode_step, make_prefill_step)
+from repro.serve.controller import (ServeController, ServeRecovery,
+                                    ServeReport, plan_serve_batch)
+from repro.serve.engine import (BatchScheduler, Request, ServeCfg,
+                                extract_cache, generate, make_decode_step,
+                                make_prefill_step, splice_cache)
+from repro.serve.state import (SchedulerSnapshot, SlotSnapshot,
+                               load_snapshot, save_snapshot)
 
-__all__ = ["BatchScheduler", "Request", "ServeCfg", "generate",
-           "make_decode_step", "make_prefill_step"]
+__all__ = ["BatchScheduler", "Request", "ServeCfg", "ServeController",
+           "ServeRecovery", "ServeReport", "SchedulerSnapshot",
+           "SlotSnapshot", "extract_cache", "generate", "load_snapshot",
+           "make_decode_step", "make_prefill_step", "plan_serve_batch",
+           "save_snapshot", "splice_cache"]

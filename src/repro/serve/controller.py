@@ -1,0 +1,390 @@
+"""Elastic serving: the ``ServeController`` failure lifecycle.
+
+The serving analogue of ``repro.runtime.controller.ElasticController`` —
+one entity owns the whole failure story for a ``BatchScheduler`` over a
+``repro.comm`` Session.  On a ``DeviceLoss`` (injected by ``FaultPlan``,
+classified from a real XLA runtime error, announced by a
+``PreemptionNotice``, or attributed by the decode-step stall watchdog) it
+
+  1. **drains** in-flight decode — the scheduler only mutates at
+     decode-step boundaries, and a failed jitted step never mutates it at
+     all, so the pre-step scheduler is already a consistent drained image;
+  2. **checkpoints** scheduler state — queue, slots, every request's
+     generated-so-far tokens, and the KV caches via per-slot
+     ``extract_cache`` to host (optionally persisted to disk through the
+     atomic checkpoint layer: ``snapshot_dir``);
+  3. **re-meshes** — ``Session.remesh_over(survivors)`` plans the new
+     shape (``plan_mesh_shape`` aiming back at the original parallelism
+     layout) and runs THE one invalidation path (CommPlan fingerprint
+     rule, persistent-handle revoke/rebind); params re-shard with
+     ``elastic.remesh``;
+  4. **rebuilds** batch-shaped state on the new mesh —
+     ``plan_serve_batch`` shrinks ``ServeCfg.batch`` when the survivor
+     mesh can't hold the old one (graceful degradation: the admission
+     bound sheds queued load instead of crashing), fresh caches are
+     initialized, and surviving slots re-splice;
+  5. **re-admits and resumes** — every request that was in flight
+     continues decoding from its drained cache rows (no re-prefill, no
+     token replay): because sampling is pure in (seed, rid, position),
+     its remaining tokens are **bit-identical** to an uninterrupted run
+     on the survivor mesh (tests/test_serve_controller.py, the same
+     contract tests/test_controller.py proves for training).
+
+``rehearse_recovery()`` runs the identical drain -> snapshot -> re-mesh
+-> rebuild -> re-admit machinery over the CURRENT healthy set (a fire
+drill, nothing lost) — the honest recovery-latency number the serve
+bench reports even on a single device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime import elastic, health
+from repro.runtime.controller import (DeviceLoss, FaultPlan,
+                                      TooManyRecoveries)
+from repro.runtime.watchdog import StepWatchdog
+from repro.serve.engine import BatchScheduler, Request, ServeCfg
+from repro.serve.state import load_snapshot, save_snapshot
+
+logger = logging.getLogger("repro.serve")
+
+
+def plan_serve_batch(batch0: int, data0: int, data_new: int) -> int:
+    """Shrink (or restore) the decode batch with the data extent.
+
+    The original ``batch0`` slots over ``data0``-way data parallelism put
+    ``ceil(batch0 / data0)`` sequences on each device; a survivor mesh
+    with ``data_new`` data shards keeps that per-device load, capped at
+    the original batch — graceful degradation that never over-commits a
+    shrunken mesh and snaps back to full capacity on regrowth."""
+    if batch0 < 1 or data0 < 1 or data_new < 1:
+        raise ValueError("plan_serve_batch needs positive extents")
+    per_device = -(-batch0 // data0)          # ceil
+    return max(1, min(batch0, per_device * data_new))
+
+
+def _data_extent(mesh) -> int:
+    """Sequences the mesh spreads the batch over (pod x data)."""
+    sizes = dict(mesh.shape)
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+@dataclasses.dataclass
+class ServeRecovery:
+    step: int                        # decode step the fault surfaced at
+    kind: str                        # "lose" | "grow" | "rehearsal"
+    before_shape: Tuple[int, ...]
+    after_shape: Tuple[int, ...]
+    healthy_after: Tuple[int, ...]
+    batch_before: int
+    batch_after: int
+    resumed: int                     # in-flight requests back in a slot
+    parked: int                      # in-flight awaiting a freed slot
+    shed: int                        # queued requests shed by admission
+    plan_rebuilt: bool
+    snapshot_s: float = 0.0
+    remesh_s: float = 0.0
+    rebuild_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.snapshot_s + self.remesh_s + self.rebuild_s
+
+
+@dataclasses.dataclass
+class ServeReport:
+    completed: List[Request] = dataclasses.field(default_factory=list)
+    shed: List[Request] = dataclasses.field(default_factory=list)
+    recoveries: List[ServeRecovery] = dataclasses.field(default_factory=list)
+    stalls: List[int] = dataclasses.field(default_factory=list)
+    decode_steps: int = 0
+    mesh_history: List[Tuple[int, ...]] = dataclasses.field(
+        default_factory=list)
+    batch_history: List[int] = dataclasses.field(default_factory=list)
+
+    def tokens(self) -> Dict[int, List[int]]:
+        """rid -> generated tokens, the bit-identity surface tests
+        compare against a survivor-mesh baseline."""
+        return {r.rid: list(r.generated) for r in self.completed}
+
+    def ttft_s(self) -> List[float]:
+        out = [r.ttft_s for r in self.completed]
+        return sorted(t for t in out if t is not None)
+
+    def describe(self) -> str:
+        rows = [f"ServeReport(completed={len(self.completed)}, "
+                f"shed={len(self.shed)}, "
+                f"recoveries={len(self.recoveries)}, "
+                f"stalls={len(self.stalls)}, "
+                f"decode_steps={self.decode_steps}, "
+                f"meshes={self.mesh_history}, "
+                f"batches={self.batch_history})"]
+        for r in self.recoveries:
+            rows.append(
+                f"  step {r.step}: {r.kind} {r.before_shape}->"
+                f"{r.after_shape} batch {r.batch_before}->{r.batch_after} "
+                f"resumed={r.resumed} parked={r.parked} shed={r.shed} "
+                f"rebuilt={r.plan_rebuilt} "
+                f"({r.snapshot_s * 1e3:.0f}+{r.remesh_s * 1e3:.0f}"
+                f"+{r.rebuild_s * 1e3:.0f} ms)")
+        return "\n".join(rows)
+
+
+class ServeController:
+    """Supervised elastic decode loop over a ``BatchScheduler``.
+
+    ``comm`` is the ``repro.comm.Session`` whose mesh serves; the
+    controller owns its lifecycle and drives every re-mesh through
+    ``Session.remesh_over`` (the one invalidation path).  ``fault_plan``
+    injects deterministic failures keyed on the decode-step counter;
+    ``preemption`` (a ``health.PreemptionNotice``) and the classify-arm
+    for real XLA runtime errors steer real signals into the same
+    recovery.  ``snapshot_dir`` persists each drained snapshot through
+    the atomic checkpoint layer — the fallback image when a loss is so
+    hard the live drain itself fails.
+    """
+
+    def __init__(self, model, params, cfg: ServeCfg, *, comm,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_recoveries: int = 8,
+                 watchdog_timeout: float = 300.0,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0,
+                 preemption: Optional[health.PreemptionNotice] = None):
+        self.model = model
+        self.cfg0 = cfg
+        self.comm = comm
+        self.fault_plan = fault_plan or FaultPlan()
+        self.max_recoveries = max_recoveries
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.preemption = preemption
+        self.report = ServeReport()
+
+        mesh = comm.mesh
+        devs = list(mesh.devices.flatten())
+        self._pool: List[Any] = devs                 # canonical order
+        self._healthy = {d.id for d in devs}
+        sizes = dict(mesh.shape)
+        # The ORIGINAL layout: re-planning aims back at it, so a shrunken
+        # deployment regains full batch + parallelism when devices return.
+        self._mp0 = sizes.get("model", 1)
+        self._pods0 = sizes.get("pod", 1)
+        self._data0 = _data_extent(mesh)
+        self._stall_pending = False
+        self._fired: set = set()     # fault events consumed (index-keyed)
+        self._step = 0               # decode-step counter (fault clock)
+        self.watchdog = StepWatchdog(timeout=watchdog_timeout,
+                                     on_stall=self._on_stall)
+        with comm.session.activate():
+            self.params = elastic.remesh(params, model.param_specs(), mesh)
+            self.sched = BatchScheduler(model, self.params, cfg,
+                                        comm=comm)
+        self._note_mesh(mesh)
+
+    # -- topology bookkeeping ---------------------------------------------
+
+    def _note_mesh(self, mesh) -> None:
+        shape = tuple(dict(mesh.shape).values())
+        if not self.report.mesh_history \
+                or self.report.mesh_history[-1] != shape:
+            self.report.mesh_history.append(shape)
+        if not self.report.batch_history \
+                or self.report.batch_history[-1] != self.sched.cfg.batch:
+            self.report.batch_history.append(self.sched.cfg.batch)
+
+    def _healthy_devices(self) -> List[Any]:
+        return [d for d in self._pool if d.id in self._healthy]
+
+    # -- request surface ---------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        return self.sched.submit(req)
+
+    # -- fault surfaces ----------------------------------------------------
+
+    def _on_stall(self, silence: float) -> None:
+        # Watchdog monitor thread: note only; the decode loop (the one
+        # place allowed to touch JAX state) acts at the next boundary.
+        self._stall_pending = True
+
+    def mark_unhealthy(self, device_ids: Sequence[int]) -> None:
+        """Health probes / preemption notices land here; the survivor set
+        goes through the cross-host agreement seam before any re-mesh."""
+        self._healthy = health.agree_survivors(
+            self._healthy - set(device_ids))
+
+    def _drain_preemptions(self) -> None:
+        if self.preemption is None or not self.preemption.pending:
+            return
+        victims = self.preemption.drain()
+        if not victims:
+            return
+        logger.warning("preemption notice for devices %s — draining",
+                       victims)
+        self.mark_unhealthy(victims)
+        raise DeviceLoss(victims)
+
+    def _apply_faults(self, step: int) -> None:
+        # keyed by event *index*: duplicates are distinct injections, and
+        # recovery never replays a consumed event
+        for i, ev in enumerate(self.fault_plan.events):
+            if ev.step != step or i in self._fired:
+                continue
+            self._fired.add(i)
+            if ev.kind == "lose":
+                victims = self.fault_plan.pick_victims(
+                    sorted(self._healthy), ev.count, step)
+                self._healthy -= set(victims)
+                logger.warning("decode step %d: injected loss of "
+                               "devices %s", step, victims)
+                raise DeviceLoss(victims)
+            if ev.kind == "gain":
+                lost = [d.id for d in self._pool
+                        if d.id not in self._healthy]
+                back = lost[:ev.count]
+                if not back:
+                    logger.warning("decode step %d: gain with nothing "
+                                   "lost — ignored", step)
+                    continue
+                self._healthy |= set(back)
+                logger.warning("decode step %d: devices %s returned",
+                               step, back)
+                self._recover(step, kind="grow")
+            elif ev.kind == "stall":
+                self._stall_pending = True
+
+    def _check_stall(self, step: int) -> None:
+        """Decode-step stall watchdog: a stall with every device healthy
+        retries in place (transient straggler — no re-mesh); a stall with
+        flagged devices is attributed to them and recovers."""
+        if not self._stall_pending:
+            return
+        self._stall_pending = False
+        self.report.stalls.append(step)
+        if len(self._healthy_devices()) >= self.comm.mesh.devices.size:
+            logger.warning("decode step %d: stall, all devices healthy "
+                           "— retrying in place", step)
+            return
+        raise DeviceLoss(())
+
+    # -- recovery ----------------------------------------------------------
+
+    def _snapshot(self):
+        """Step (1)+(2): drain + checkpoint.  The scheduler only mutates
+        at step boundaries, so outside ``sched.step()`` it IS the drained
+        image; a loss so hard the live cache extraction itself dies falls
+        back to the last disk snapshot (when one is kept)."""
+        try:
+            return self.sched.snapshot()
+        except Exception as e:                       # pragma: no cover
+            if self.snapshot_dir is None:
+                raise
+            logger.warning("live drain failed (%s); restoring last disk "
+                           "snapshot", e)
+            return load_snapshot(self.snapshot_dir, self.model)
+
+    def _maybe_snapshot(self) -> None:
+        if (self.snapshot_dir is not None and self.snapshot_every > 0
+                and self._step % self.snapshot_every == 0):
+            save_snapshot(self.snapshot_dir, self.sched.snapshot(),
+                          self._step)
+
+    def _recover(self, step: int, kind: str) -> None:
+        """The full lifecycle, steps (1)-(5); see the module docstring."""
+        if kind == "lose" and \
+                len(self.report.recoveries) >= self.max_recoveries:
+            raise TooManyRecoveries(
+                f"{len(self.report.recoveries)} recoveries reached the "
+                f"--max-recoveries cap")
+        before_shape = tuple(dict(self.comm.mesh.shape).values())
+        batch_before = self.sched.cfg.batch
+
+        t0 = time.perf_counter()
+        snap = self._snapshot()
+        snapshot_s = time.perf_counter() - t0
+        if self.snapshot_dir is not None and kind != "rehearsal":
+            save_snapshot(self.snapshot_dir, snap, self._step)
+
+        # (3) plan + remesh over the survivors: Session.remesh_over is the
+        # one invalidation path (CommPlan fingerprint, handle rebinds).
+        t0 = time.perf_counter()
+        mesh, rebuilt = self.comm.session.remesh_over(
+            self._healthy_devices(), model_parallel=self._mp0,
+            pods=self._pods0)
+        self.params = elastic.remesh(self.params,
+                                     self.model.param_specs(), mesh)
+        remesh_s = time.perf_counter() - t0
+
+        # (4)+(5) rebuild batch-shaped state and re-admit.
+        t0 = time.perf_counter()
+        new_batch = plan_serve_batch(self.cfg0.batch, self._data0,
+                                     _data_extent(mesh))
+        cfg = dataclasses.replace(self.sched.cfg, batch=new_batch)
+        self.sched = BatchScheduler.from_snapshot(
+            self.model, self.params, cfg, snap, comm=self.comm)
+        rebuild_s = time.perf_counter() - t0
+
+        rec = ServeRecovery(
+            step=step, kind=kind, before_shape=before_shape,
+            after_shape=tuple(dict(mesh.shape).values()),
+            healthy_after=tuple(sorted(self._healthy)),
+            batch_before=batch_before, batch_after=new_batch,
+            resumed=len(snap.resumable) - len(self.sched.parked),
+            parked=len(self.sched.parked),
+            shed=len(self.sched.shed) - len(snap.shed),
+            plan_rebuilt=rebuilt, snapshot_s=snapshot_s,
+            remesh_s=remesh_s, rebuild_s=rebuild_s)
+        self.report.recoveries.append(rec)
+        self._note_mesh(mesh)
+        logger.warning("recovered: %s", self.report.describe()
+                       .splitlines()[-1].strip())
+
+    def rehearse_recovery(self) -> ServeRecovery:
+        """Fire drill: the full drain -> snapshot -> re-mesh -> rebuild ->
+        re-admit path over the CURRENT healthy set.  Nothing is lost and
+        every in-flight request resumes bit-identically; the record's
+        ``total_s`` is the honest recovery latency the serve bench
+        reports (a 1-device smoke run cannot lose a device)."""
+        self._recover(self._step, kind="rehearsal")
+        return self.report.recoveries[-1]
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self) -> ServeReport:
+        """Drive the scheduler to completion under supervision.  Returns
+        the report (completed + shed requests, recoveries, mesh/batch
+        history)."""
+        self.watchdog.start()
+        try:
+            while self.sched.pending():
+                try:
+                    self._drain_preemptions()
+                    self._apply_faults(self._step)
+                    self._check_stall(self._step)
+                    self.sched.step()
+                    self.watchdog.beat()
+                    self._step += 1
+                    self._maybe_snapshot()
+                except DeviceLoss:
+                    self._recover(self._step, kind="lose")
+                except Exception as e:
+                    victims = health.classify_failure(e)
+                    if victims is None:
+                        raise          # a bug, not a device failure
+                    logger.warning("decode step %d: runtime error "
+                                   "classified as device failure "
+                                   "(victims=%s): %s", self._step,
+                                   victims, e)
+                    self.mark_unhealthy(victims)
+                    self._recover(self._step, kind="lose")
+        finally:
+            self.watchdog.stop()
+        self.report.completed = list(self.sched.completed)
+        self.report.shed = list(self.sched.shed)
+        self.report.decode_steps = self.sched.decode_steps
+        return self.report

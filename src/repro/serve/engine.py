@@ -8,15 +8,32 @@ continuous batching at fixed shapes (no recompilation).
 Device placement goes through the ``repro.comm`` facade: pass ``comm=``
 (a ``repro.comm.Communicator``, e.g. ``Session(mesh=...).world``) and
 every prefill/decode step runs under the session's mesh, so sharded
-params and caches keep their placement — the serving path's piece of the
-one-entity contract (its elastic re-mesh is a ROADMAP open item; the
-session is the hook it will land on).
+params and caches keep their placement.
+
+Elasticity contract (PR 7, driven by ``repro.serve.controller.
+ServeController``): the scheduler only mutates at decode-step boundaries,
+so ``snapshot()`` at any boundary is a *drained* image — queue, per-slot
+requests with their generated tokens, and per-slot KV-cache rows
+(``extract_cache``, the inverse of ``splice_cache``) exactly consistent
+with those tokens.  ``from_snapshot`` rebuilds a scheduler from that
+image on a different (usually smaller) batch over a re-meshed session:
+in-flight requests re-splice into the new cache and continue decoding
+where they left off — no re-prefill, no token replay — and the ones the
+shrunk batch cannot hold wait *parked* (cache rows in host memory) for a
+freed slot instead of losing their progress.
+
+Determinism: sampling is a pure function of ``(cfg.seed, rid, position)``
+— every request's token stream is independent of batch composition, slot
+index, and admission order, which is what makes tokens bit-identical
+across an elastic re-mesh (same contract the training tier proves in
+tests/test_controller.py).
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -32,6 +49,32 @@ class ServeCfg:
     temperature: float = 1.0
     eos_id: int = -1                # -1: never stops early
     cache_dtype: Any = jnp.bfloat16
+    seed: int = 0                   # sampling seed; tokens are pure in
+                                    # (seed, rid, position)
+    max_queue: Optional[int] = None  # admission control: waiting backlog
+                                     # bound, excess is SHED not crashed
+
+
+def _sample_keys(seed: int, rids, pos):
+    """Per-row sampling keys, pure in (seed, rid, pos): a request draws
+    the same randomness wherever it sits in the batch — across slots,
+    admission orders, and elastic re-meshes."""
+    base = jax.random.PRNGKey(seed)
+
+    def one(r, p):
+        return jax.random.fold_in(jax.random.fold_in(base, r), p)
+
+    return jax.vmap(one)(rids, pos)
+
+
+def _pick_tokens(logits, cfg: ServeCfg, rids, pos):
+    """logits (B, V) -> (B,) int32 next tokens (argmax or seeded sample)."""
+    if cfg.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = _sample_keys(cfg.seed, rids, pos)
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l / cfg.temperature)
+    )(keys, logits).astype(jnp.int32)
 
 
 def make_prefill_step(model) -> Callable:
@@ -41,15 +84,13 @@ def make_prefill_step(model) -> Callable:
 
 
 def make_decode_step(model, cfg: ServeCfg) -> Callable:
-    def decode_step(params, tokens, caches, rng):
-        """tokens: (B, 1) -> (next (B,), caches, rng)."""
-        logits, caches = model.decode_step(params, {"tokens": tokens}, caches)
-        if cfg.greedy:
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            rng, sub = jax.random.split(rng)
-            nxt = jax.random.categorical(sub, logits / cfg.temperature)
-        return nxt.astype(jnp.int32), caches, rng
+    def decode_step(params, tokens, caches, rids, pos):
+        """tokens: (B, 1) -> (next (B,), caches).  ``rids``/``pos`` (B,)
+        int32 feed the (seed, rid, pos) sampling keys; unused (and traced
+        away) on the greedy path."""
+        logits, caches = model.decode_step(params, {"tokens": tokens},
+                                           caches)
+        return _pick_tokens(logits, cfg, rids, pos), caches
     return decode_step
 
 
@@ -61,10 +102,11 @@ def _mesh_scope(comm) -> contextlib.AbstractContextManager:
 
 def generate(model, params, prompts: jax.Array, max_new: int,
              cfg: Optional[ServeCfg] = None, comm=None) -> jax.Array:
-    """Simple batched greedy generation (examples / tests).
+    """Simple batched generation (examples / tests).
 
     prompts: (B, S) int32 -> (B, S + max_new).  ``comm``: run under a
-    ``repro.comm`` session's mesh (sharded params/caches).
+    ``repro.comm`` session's mesh (sharded params/caches).  Rows act as
+    their own request ids for the (seed, rid, pos) sampling contract.
     """
     b, s = prompts.shape
     cfg = cfg or ServeCfg(max_len=s + max_new, batch=b)
@@ -72,11 +114,12 @@ def generate(model, params, prompts: jax.Array, max_new: int,
         caches = model.init_caches(b, cfg.max_len, dtype=cfg.cache_dtype)
         logits, caches = model.prefill(params, {"tokens": prompts}, caches)
         decode = jax.jit(make_decode_step(model, cfg))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        rids = jnp.arange(b, dtype=jnp.int32)
+        tok = _pick_tokens(logits, cfg, rids, jnp.zeros_like(rids))
         out = [tok]
-        rng = jax.random.PRNGKey(0)
-        for _ in range(max_new - 1):
-            tok, caches, rng = decode(params, tok[:, None], caches, rng)
+        for i in range(max_new - 1):
+            pos = jnp.full((b,), i + 1, jnp.int32)
+            tok, caches = decode(params, tok[:, None], caches, rids, pos)
             out.append(tok)
         return jnp.concatenate([prompts, jnp.stack(out, axis=1)], axis=1)
 
@@ -105,10 +148,25 @@ def splice_cache(full, one, index: int, specs):
     def leaf(f, o, s):
         ax = _batch_axis(s)
         return jax.lax.dynamic_update_slice_in_dim(
-            f, o.astype(f.dtype), index, axis=ax)
+            f, jnp.asarray(o).astype(f.dtype), index, axis=ax)
 
     return jax.tree_util.tree_map(
         leaf, full, one, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def extract_cache(full, index: int, specs):
+    """The inverse of ``splice_cache``: slice slot ``index`` out of a
+    full-batch cache as a batch-1 pytree (the per-slot KV extraction the
+    serving drain path snapshots to host)."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(f, s):
+        return jax.lax.dynamic_slice_in_dim(f, index, 1,
+                                            axis=_batch_axis(s))
+
+    return jax.tree_util.tree_map(
+        leaf, full, specs,
         is_leaf=lambda x: isinstance(x, P))
 
 
@@ -118,10 +176,19 @@ class Request:
     prompt: List[int]
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
+    t_submit: Optional[float] = None   # wall time of submit()
+    t_first: Optional[float] = None    # wall time of the first token
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Admission-to-first-token latency (the serve bench's p50/p99)."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
 
 
 class BatchScheduler:
@@ -131,6 +198,12 @@ class BatchScheduler:
     the queue.  Prefill runs per-admission on the single-sequence path
     (production systems chunk it; here it keeps shapes static), decode runs
     one fused step for all slots.
+
+    Admission control: ``cfg.max_queue`` bounds the *waiting* backlog
+    (queued + re-mesh-parked); a submit over the bound is shed (recorded
+    in ``self.shed``, ``submit`` returns False) instead of growing the
+    queue without bound — and a post-shrink rebuild sheds the queue tail
+    the same way.  In-flight work is never shed.
     """
 
     def __init__(self, model, params, cfg: ServeCfg, comm=None):
@@ -139,21 +212,50 @@ class BatchScheduler:
         self.cfg = cfg
         self.comm = comm          # repro.comm Communicator (mesh owner)
         self.queue: deque = deque()
+        self.parked: deque = deque()   # SlotSnapshots awaiting a slot
         self.slots: List[Optional[Request]] = [None] * cfg.batch
         with _mesh_scope(comm):
             self.caches = model.init_caches(cfg.batch, cfg.max_len,
                                             dtype=cfg.cache_dtype)
         self._decode = jax.jit(make_decode_step(model, cfg))
         self._next_tok = jnp.zeros((cfg.batch,), jnp.int32)
-        self._rng = jax.random.PRNGKey(0)
+        self._rids = jnp.zeros((cfg.batch,), jnp.int32)
+        self._pos = jnp.zeros((cfg.batch,), jnp.int32)
         self.completed: List[Request] = []
+        self.shed: List[Request] = []
+        self.decode_steps = 0
 
-    def submit(self, req: Request) -> None:
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Admit (eagerly, into a free slot), queue, or — over the
+        ``max_queue`` backlog bound — shed ``req``.  Returns False iff
+        shed."""
+        if req.t_submit is None:
+            req.t_submit = time.time()
+        if (self.cfg.max_queue is not None
+                and not self._has_free_slot()
+                and len(self.queue) + len(self.parked)
+                >= self.cfg.max_queue):
+            self.shed.append(req)
+            return False
         self.queue.append(req)
+        if self._has_free_slot():
+            with _mesh_scope(self.comm):
+                self._admit()
+        return True
+
+    def _has_free_slot(self) -> bool:
+        return any(s is None for s in self.slots)
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
             if slot is not None:
+                continue
+            if self.parked:
+                # Re-admission after a re-mesh: resume from the drained
+                # cache rows, never re-prefill (that would replay tokens).
+                self._resume_into(i, self.parked.popleft())
                 continue
             while self.queue:
                 req = self.queue.popleft()
@@ -165,8 +267,12 @@ class BatchScheduler:
                 prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 logits, c1 = self.model.prefill(self.params,
                                                 {"tokens": prompt}, c1)
-                tok = int(jnp.argmax(logits[0]))
+                rid1 = jnp.asarray([req.rid], jnp.int32)
+                tok = int(_pick_tokens(logits, self.cfg, rid1,
+                                       jnp.zeros_like(rid1))[0])
                 req.generated.append(tok)
+                if req.t_first is None:
+                    req.t_first = time.time()
                 if req.done or (self.cfg.eos_id >= 0
                                 and tok == self.cfg.eos_id):
                     # Finished at prefill (max_new=1 or eos): never takes
@@ -174,11 +280,23 @@ class BatchScheduler:
                     # the next queued request for it.
                     self.completed.append(req)
                     continue
-                self.caches = splice_cache(self.caches, c1, i,
-                                           self.model.cache_specs())
-                self._next_tok = self._next_tok.at[i].set(tok)
-                self.slots[i] = req
+                self._place(i, req, c1)
                 break
+
+    def _place(self, i: int, req: Request, cache_one) -> None:
+        """Wire a request into slot ``i``: cache rows, next token, and the
+        (rid, pos) sampling coordinates."""
+        self.caches = splice_cache(self.caches, cache_one, i,
+                                   self.model.cache_specs())
+        self._next_tok = self._next_tok.at[i].set(req.generated[-1])
+        self._rids = self._rids.at[i].set(req.rid)
+        self._pos = self._pos.at[i].set(len(req.generated))
+        self.slots[i] = req
+
+    def _resume_into(self, i: int, snap) -> None:
+        self._place(i, snap.req, snap.cache)
+
+    # -- the decode loop ---------------------------------------------------
 
     def step(self) -> int:
         """Admit + one decode step for all active slots (under the comm
@@ -189,9 +307,12 @@ class BatchScheduler:
             active = [i for i, s in enumerate(self.slots) if s is not None]
             if not active:
                 return 0
-            nxt, self.caches, self._rng = self._decode(
-                self.params, self._next_tok[:, None], self.caches, self._rng)
+            nxt, self.caches = self._decode(
+                self.params, self._next_tok[:, None], self.caches,
+                self._rids, self._pos)
+            self._pos = self._pos + 1
         self._next_tok = nxt
+        self.decode_steps += 1
         for i in active:
             req = self.slots[i]
             req.generated.append(int(nxt[i]))
@@ -201,7 +322,61 @@ class BatchScheduler:
                 self.slots[i] = None
         return len(active)
 
+    def pending(self) -> bool:
+        """Anything left to do (queued, parked, or in a slot)?"""
+        return bool(self.queue or self.parked
+                    or any(s is not None for s in self.slots))
+
     def run(self) -> List[Request]:
-        while self.queue or any(s is not None for s in self.slots):
+        while self.pending():
             self.step()
         return self.completed
+
+    # -- drain / resume (the elastic path) ---------------------------------
+
+    def snapshot(self):
+        """Drained image of the scheduler at the current decode-step
+        boundary (the only place this object mutates): every in-flight
+        request with its host-copied cache rows, the parked backlog, the
+        queue, and the books.  Consistent by construction — the caches
+        match each request's ``generated`` exactly."""
+        from repro.serve.state import SchedulerSnapshot, SlotSnapshot
+        specs = self.model.cache_specs()
+        inflight = [
+            SlotSnapshot(req=req, cache=jax.device_get(
+                extract_cache(self.caches, i, specs)))
+            for i, req in enumerate(self.slots) if req is not None]
+        return SchedulerSnapshot(
+            cfg=self.cfg, decode_steps=self.decode_steps,
+            inflight=inflight, parked=list(self.parked),
+            queue=list(self.queue), completed=list(self.completed),
+            shed=list(self.shed))
+
+    @classmethod
+    def from_snapshot(cls, model, params, cfg: ServeCfg, snap,
+                      comm=None) -> "BatchScheduler":
+        """Rebuild a scheduler from a drained snapshot on a (re-meshed,
+        possibly smaller) batch.  In-flight requests re-splice in slot
+        order; the ones past ``cfg.batch`` stay parked for freed slots;
+        the queue tail past the ``max_queue`` backlog bound is shed —
+        graceful degradation instead of a crash."""
+        sched = cls(model, params, cfg, comm=comm)
+        sched.decode_steps = snap.decode_steps
+        sched.completed = list(snap.completed)
+        sched.shed = list(snap.shed)
+        sched.parked = deque(snap.resumable)
+        queue = list(snap.queue)
+        if cfg.max_queue is not None:
+            # Waiting backlog AFTER re-admission: parked overflow beyond
+            # the new slots, plus whatever queue we keep.  In-flight work
+            # is never shed, even when the parked overflow alone exceeds
+            # the bound.
+            parked_after = max(0, len(sched.parked) - cfg.batch)
+            allowed = max(0, cfg.max_queue - parked_after)
+            if len(queue) > allowed:
+                sched.shed.extend(queue[allowed:])
+                queue = queue[:allowed]
+        sched.queue = deque(queue)
+        with _mesh_scope(comm):
+            sched._admit()          # re-admit up to cfg.batch slots NOW
+        return sched

@@ -1,0 +1,127 @@
+"""Serving scheduler state: drained snapshots + disk persistence.
+
+A ``SchedulerSnapshot`` is the drained image ``BatchScheduler.snapshot()``
+produces at a decode-step boundary — the unit of recovery the
+``ServeController`` carries across a re-mesh (in memory) or, via
+``save_snapshot``/``load_snapshot``, across a process death (on disk,
+through the same atomic tmp+rename checkpoint layer training uses).
+
+Everything non-array (requests, their generated tokens, the cfg) rides in
+the checkpoint manifest's JSON ``meta`` sidecar; the per-slot KV-cache
+pytrees are the array leaves.  ``load_snapshot`` rebuilds the abstract
+cache structure from the model itself (``jax.eval_shape`` over
+``init_caches``), so restore needs no pickled treedefs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (load_manifest, restore_checkpoint,
+                              save_checkpoint)
+
+
+@dataclasses.dataclass
+class SlotSnapshot:
+    """One in-flight request frozen mid-decode: the request (with its
+    generated-so-far tokens) plus its batch-1 KV-cache rows on host."""
+    req: Any                      # repro.serve.engine.Request
+    cache: Any                    # batch-1 cache pytree (host)
+
+
+@dataclasses.dataclass
+class SchedulerSnapshot:
+    """Drained ``BatchScheduler`` image at a decode-step boundary."""
+    cfg: Any                      # ServeCfg at snapshot time
+    decode_steps: int
+    inflight: List[SlotSnapshot]  # occupied slots, slot order
+    parked: List[SlotSnapshot]    # already waiting for a slot pre-drain
+    queue: List[Any]              # Requests never admitted
+    completed: List[Any]
+    shed: List[Any]
+
+    @property
+    def resumable(self) -> List[SlotSnapshot]:
+        """Every request with decode progress to preserve (in-flight
+        first — they drained most recently — then the parked backlog)."""
+        return list(self.inflight) + list(self.parked)
+
+
+def _req_to_json(req) -> dict:
+    return {"rid": req.rid, "prompt": [int(t) for t in req.prompt],
+            "max_new": int(req.max_new),
+            "generated": [int(t) for t in req.generated],
+            "t_submit": req.t_submit, "t_first": req.t_first}
+
+
+def _req_from_json(d: dict):
+    from repro.serve.engine import Request
+    return Request(rid=int(d["rid"]), prompt=list(d["prompt"]),
+                   max_new=int(d["max_new"]),
+                   generated=list(d["generated"]),
+                   t_submit=d.get("t_submit"), t_first=d.get("t_first"))
+
+
+def _cfg_to_json(cfg) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["cache_dtype"] = jnp.dtype(cfg.cache_dtype).name
+    return d
+
+
+def _cfg_from_json(d: dict):
+    from repro.serve.engine import ServeCfg
+    d = dict(d)
+    d["cache_dtype"] = jnp.dtype(d["cache_dtype"])
+    return ServeCfg(**d)
+
+
+def save_snapshot(directory: str, snap: SchedulerSnapshot,
+                  step: int) -> None:
+    """Persist a drained snapshot (atomic tmp+rename, same layout as the
+    training checkpoints): cache rows as array leaves, books as manifest
+    meta."""
+    slots = [s.cache for s in snap.resumable]
+    meta = {
+        "kind": "serve_scheduler",
+        "cfg": _cfg_to_json(snap.cfg),
+        "decode_steps": snap.decode_steps,
+        "n_inflight": len(snap.resumable),
+        "inflight": [_req_to_json(s.req) for s in snap.resumable],
+        "queue": [_req_to_json(r) for r in snap.queue],
+        "completed": [_req_to_json(r) for r in snap.completed],
+        "shed": [_req_to_json(r) for r in snap.shed],
+    }
+    save_checkpoint(directory, step, {"slots": slots}, meta=meta)
+
+
+def load_snapshot(directory: str, model,
+                  step: Optional[int] = None) -> SchedulerSnapshot:
+    """Load a persisted snapshot.  The abstract cache layout comes from
+    the model (``eval_shape`` over a batch-1 ``init_caches``), so shape
+    checking still runs without any stored treedef."""
+    manifest = load_manifest(directory, step=step)
+    meta = manifest["meta"]
+    if meta.get("kind") != "serve_scheduler":
+        raise ValueError(
+            f"checkpoint under {directory} is not a serve-scheduler "
+            f"snapshot (meta.kind={meta.get('kind')!r})")
+    cfg = _cfg_from_json(meta["cfg"])
+    n = int(meta["n_inflight"])
+    abs1 = jax.eval_shape(
+        lambda: model.init_caches(1, cfg.max_len, dtype=cfg.cache_dtype))
+    tree = restore_checkpoint(directory, {"slots": [abs1] * n},
+                              step=manifest["step"])
+    inflight = [
+        SlotSnapshot(req=_req_from_json(rj),
+                     cache=jax.device_get(cache))
+        for rj, cache in zip(meta["inflight"], tree["slots"])]
+    return SchedulerSnapshot(
+        cfg=cfg, decode_steps=int(meta["decode_steps"]),
+        inflight=inflight, parked=[],
+        queue=[_req_from_json(d) for d in meta["queue"]],
+        completed=[_req_from_json(d) for d in meta["completed"]],
+        shed=[_req_from_json(d) for d in meta["shed"]])

@@ -1,0 +1,71 @@
+"""Real-failure-signal plumbing: runtime-error classification, the
+preemption-notice mailbox, and the cross-host survivor-agreement stub."""
+
+import threading
+
+import jax
+import pytest
+
+from repro.runtime import health
+
+
+def _runtime_error(msg):
+    types = health._runtime_error_types()
+    if not types:
+        pytest.skip("no XLA runtime error type on this JAX version")
+    return types[0](msg)
+
+
+def test_classify_rejects_ordinary_exceptions():
+    assert health.classify_failure(ValueError("device 3 exploded")) is None
+    assert health.classify_failure(KeyError("unavailable")) is None
+
+
+def test_classify_rejects_non_device_runtime_errors():
+    # a runtime error that is NOT a device failure (e.g. a shape bug
+    # surfacing at execute time) must propagate, not recover
+    assert health.classify_failure(
+        _runtime_error("INVALID_ARGUMENT: shape mismatch")) is None
+
+
+def test_classify_extracts_victim_ids():
+    e = _runtime_error("UNAVAILABLE: device 3 halted; device 5 halted")
+    assert health.classify_failure(e) == (3, 5)
+
+
+def test_classify_device_failure_without_ids():
+    # the runtime knows something died but not what: classified, empty
+    # victim set — the controller leans on probes/watchdog to refine
+    e = _runtime_error("FAILED_PRECONDITION: collective peer down")
+    assert health.classify_failure(e) == ()
+
+
+def test_classify_real_jax_error_instance():
+    try:
+        raise jax.errors.JaxRuntimeError("UNAVAILABLE: device 2 lost")
+    except Exception as e:
+        assert health.classify_failure(e) == (2,)
+
+
+def test_preemption_notice_mailbox_threadsafe():
+    notice = health.PreemptionNotice()
+    assert not notice.pending
+    threads = [threading.Thread(target=notice.post, args=([i],))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert notice.pending
+    assert notice.drain() == tuple(range(8))
+    # drain clears
+    assert not notice.pending and notice.drain() == ()
+
+
+def test_agree_survivors_intersection():
+    # single-host: identity
+    assert health.agree_survivors({0, 1, 2}) == {0, 1, 2}
+    # multi-host stub: a device survives only if every view trusts it
+    assert health.agree_survivors({0, 1, 2}, [{1, 2, 3}, {0, 1, 2}]) \
+        == {1, 2}
+    assert health.agree_survivors({0, 1}, [set()]) == set()

@@ -1,13 +1,20 @@
 """Serve-layer slot scheduler coverage: admission into finished slots,
-eos handling (including eos/max_new hit at prefill), and decode shape
-stability (no recompilation across admissions)."""
+eos handling (including eos/max_new hit at prefill), decode shape
+stability (no recompilation across admissions), admission control
+(max_queue shedding), sampling purity in (seed, rid, position), and the
+elastic drain/resume surface (snapshot -> shrink -> re-admit, in memory
+and via disk)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.serve.engine import BatchScheduler, Request, ServeCfg, splice_cache
+from repro.serve.controller import plan_serve_batch
+from repro.serve.engine import (BatchScheduler, Request, ServeCfg,
+                                extract_cache, splice_cache)
+from repro.serve.state import load_snapshot, save_snapshot
 
 VOCAB = 32
 
@@ -128,3 +135,211 @@ def test_splice_cache_replaces_one_batch_row():
     out = splice_cache(full, one, 2, {"kv": P("data", None)})
     np.testing.assert_array_equal(np.asarray(out["kv"][2]), np.ones(8))
     assert float(jnp.abs(out["kv"]).sum()) == 8.0
+
+
+def test_extract_cache_inverts_splice():
+    specs = {"kv": P("data", None)}
+    full = {"kv": jnp.arange(32, dtype=jnp.float32).reshape(4, 8)}
+    one = extract_cache(full, 2, specs)
+    assert one["kv"].shape == (1, 8)
+    np.testing.assert_array_equal(np.asarray(one["kv"][0]),
+                                  np.asarray(full["kv"][2]))
+    back = splice_cache({"kv": jnp.zeros((4, 8), jnp.float32)}, one, 2,
+                        specs)
+    np.testing.assert_array_equal(np.asarray(back["kv"][2]),
+                                  np.asarray(full["kv"][2]))
+
+
+# ---------------------------------------------------------------------------
+# PR 7: admission control, sampling purity, drain/resume
+# ---------------------------------------------------------------------------
+
+
+class CacheLM(FakeLM):
+    """Cache-SENSITIVE fake: next token = (last + acc) % VOCAB where the
+    cache carries ``acc`` (prompt sum at prefill, +1 per decode step).
+    A resume that re-prefilled, zeroed, or misplaced a slot's cache rows
+    produces visibly different tokens — what the drain/resume tests need
+    (FakeLM's chain only reads the previous token, which a broken resume
+    would reproduce by accident)."""
+
+    def init_caches(self, b, max_len, dtype=jnp.float32):
+        c = super().init_caches(b, max_len, dtype)
+        c["acc"] = jnp.zeros((b, 1), jnp.int32)
+        return c
+
+    def cache_specs(self):
+        s = super().cache_specs()
+        s["acc"] = P("data", None)
+        return s
+
+    def prefill(self, params, batch, caches):
+        toks = batch["tokens"]
+        acc = caches["acc"] + toks.sum(axis=1, keepdims=True)
+        nxt = (toks[:, -1] + acc[:, 0]) % VOCAB
+        return (jax.nn.one_hot(nxt, VOCAB),
+                {"pos": caches["pos"] + toks.shape[1],
+                 "kv": caches["kv"], "acc": acc})
+
+    def decode_step(self, params, batch, caches):
+        self.decode_traces += 1
+        tok = batch["tokens"][:, 0]
+        acc = caches["acc"] + 1
+        nxt = (tok + acc[:, 0]) % VOCAB
+        return (jax.nn.one_hot(nxt, VOCAB),
+                {"pos": caches["pos"] + 1, "kv": caches["kv"],
+                 "acc": acc})
+
+
+def _expected_cache_lm(prompt, max_new):
+    """Reference token stream for CacheLM."""
+    acc = sum(prompt)
+    out = [(prompt[-1] + acc) % VOCAB]
+    while len(out) < max_new:
+        acc += 1
+        out.append((out[-1] + acc) % VOCAB)
+    return out
+
+
+def test_plan_serve_batch():
+    # 8 slots over 8-way data: 1 seq/device; survivors keep that load
+    assert plan_serve_batch(8, 8, 6) == 6
+    assert plan_serve_batch(8, 8, 8) == 8
+    # never exceeds the original batch on regrowth
+    assert plan_serve_batch(8, 8, 12) == 8
+    # uneven per-device load rounds up, floor of 1
+    assert plan_serve_batch(6, 4, 2) == 4
+    assert plan_serve_batch(4, 1, 1) == 4     # single-device: unchanged
+    assert plan_serve_batch(1, 8, 1) == 1
+    with pytest.raises(ValueError):
+        plan_serve_batch(8, 8, 0)
+
+
+def test_eager_admission_and_ttft():
+    _, sched = make_sched(batch=2)
+    r = Request(rid=0, prompt=[1], max_new=4)
+    assert sched.submit(r)
+    # a free slot admits at submit time, not at the first step
+    assert sched.slots[0] is not None and sched.slots[0].rid == 0
+    assert r.t_submit is not None and r.t_first is not None
+    assert r.ttft_s is not None and r.ttft_s >= 0.0
+
+
+def test_max_queue_sheds_over_bound():
+    model = FakeLM()
+    cfg = ServeCfg(max_len=64, batch=1, max_queue=1)
+    sched = BatchScheduler(model, {"w": jnp.zeros(())}, cfg)
+    assert sched.submit(Request(rid=0, prompt=[1], max_new=4))   # slot
+    assert sched.submit(Request(rid=1, prompt=[2], max_new=4))   # queued
+    assert not sched.submit(Request(rid=2, prompt=[3], max_new=4))  # shed
+    assert [r.rid for r in sched.shed] == [2]
+    done = sched.run()
+    assert sorted(r.rid for r in done) == [0, 1]
+
+
+def test_sampling_pure_in_seed_rid_pos():
+    """Non-greedy tokens must not depend on batch composition, slot
+    index, or admission order — the property that makes elastic resume
+    bit-identical."""
+    def run(batch):
+        model = FakeLM()
+        cfg = ServeCfg(max_len=64, batch=batch, greedy=False, seed=7)
+        sched = BatchScheduler(model, {"w": jnp.zeros(())}, cfg)
+        for rid in range(4):
+            sched.submit(Request(rid=rid, prompt=[rid + 1, rid + 2],
+                                 max_new=5))
+        return {r.rid: r.generated for r in sched.run()}
+
+    wide, narrow = run(4), run(1)
+    assert wide == narrow
+    # and a different seed actually changes the streams
+    model = FakeLM()
+    cfg = ServeCfg(max_len=64, batch=4, greedy=False, seed=8)
+    sched = BatchScheduler(model, {"w": jnp.zeros(())}, cfg)
+    for rid in range(4):
+        sched.submit(Request(rid=rid, prompt=[rid + 1, rid + 2],
+                             max_new=5))
+    other = {r.rid: r.generated for r in sched.run()}
+    assert other != wide
+
+
+def test_snapshot_shrink_resume_bit_identical():
+    """Drain at a step boundary -> rebuild on a SMALLER batch: in-flight
+    requests resume from their cache rows (cache-sensitive fake: any
+    re-prefill or cache mixup diverges), overflow parks then re-admits
+    into freed slots, and every token stream matches the uninterrupted
+    reference."""
+    model = CacheLM()
+    cfg = ServeCfg(max_len=64, batch=3, cache_dtype=jnp.float32)
+    sched = BatchScheduler(model, {"w": jnp.zeros(())}, cfg)
+    reqs = [Request(rid=i, prompt=[i + 1, i + 3], max_new=6)
+            for i in range(5)]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    sched.step()
+
+    snap = sched.snapshot()
+    assert len(snap.inflight) == 3 and len(snap.queue) == 2
+    # the drained cache rows must match each request's progress:
+    # pos = prompt len (2) + decode steps (generated minus the prefill tok)
+    for s in snap.inflight:
+        assert int(s.cache["pos"][0, 0]) == 2 + len(s.req.generated) - 1
+
+    small = ServeCfg(max_len=64, batch=2, cache_dtype=jnp.float32)
+    sched2 = BatchScheduler.from_snapshot(model, {"w": jnp.zeros(())},
+                                          small, snap)
+    # 2 resumed into slots, 1 parked awaiting a freed slot, queue intact
+    assert sum(s is not None for s in sched2.slots) == 2
+    assert len(sched2.parked) == 1 and len(sched2.queue) == 2
+    done = sched2.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    for r in done:
+        assert r.generated == _expected_cache_lm(r.prompt, r.max_new), \
+            (r.rid, r.generated)
+
+
+def test_snapshot_disk_roundtrip(tmp_path):
+    model = CacheLM()
+    cfg = ServeCfg(max_len=32, batch=2, cache_dtype=jnp.float32,
+                   seed=3, max_queue=5)
+    sched = BatchScheduler(model, {"w": jnp.zeros(())}, cfg)
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=[i + 2], max_new=5))
+    sched.step()
+    save_snapshot(str(tmp_path), sched.snapshot(), step=1)
+
+    snap = load_snapshot(str(tmp_path), model)
+    # cfg (incl. seed / max_queue / dtype) and books survive the roundtrip
+    assert snap.cfg == cfg
+    assert len(snap.inflight) == 2 and len(snap.queue) == 1
+    sched2 = BatchScheduler.from_snapshot(model, {"w": jnp.zeros(())},
+                                          cfg, snap)
+    done = sched2.run()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    for r in done:
+        assert r.generated == _expected_cache_lm(r.prompt, r.max_new)
+
+
+def test_from_snapshot_sheds_queue_tail_under_max_queue():
+    model = CacheLM()
+    cfg = ServeCfg(max_len=64, batch=4, cache_dtype=jnp.float32)
+    sched = BatchScheduler(model, {"w": jnp.zeros(())}, cfg)
+    for i in range(8):
+        sched.submit(Request(rid=i, prompt=[i + 1], max_new=6))
+    sched.step()
+    snap = sched.snapshot()          # 4 in flight, 4 queued
+
+    # shrink to 2 slots with a backlog bound of 3: 2 resume, 2 park,
+    # queue gets 3 - 2 = 1 spot -> 3 of the 4 queued are shed
+    small = ServeCfg(max_len=64, batch=2, cache_dtype=jnp.float32,
+                     max_queue=3)
+    sched2 = BatchScheduler.from_snapshot(model, {"w": jnp.zeros(())},
+                                          small, snap)
+    assert len(sched2.parked) == 2
+    assert len(sched2.shed) == 3
+    done = sched2.run()
+    # in-flight work is never shed; every surviving request finishes right
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    for r in done:
+        assert r.generated == _expected_cache_lm(r.prompt, r.max_new)

@@ -1,0 +1,168 @@
+"""End-to-end elastic serving (8 fake host devices in subprocesses):
+drain -> snapshot -> re-mesh -> re-admit under device loss.
+
+The acceptance contract: a seeded fault injection (lose 2 of 8 devices
+mid-decode) drains in-flight requests, re-meshes the session over the
+survivors, shrinks the decode batch, and resumes — with every completed
+request's tokens bit-identical to an uninterrupted run on the survivor
+mesh (sampling is pure in (seed, rid, position); the serving analogue of
+tests/test_controller.py's loss bit-identity)."""
+
+from conftest import run_subprocess_script
+
+
+def test_serve_recovery_bit_identical_vs_survivor_baseline():
+    run_subprocess_script("""
+import numpy as np
+import jax
+from repro import comm as comm_mod
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime import substrate
+from repro.runtime.controller import FaultEvent, FaultPlan
+from repro.runtime.elastic import make_mesh_from_shape, remesh
+from repro.serve import (BatchScheduler, Request, ServeCfg,
+                         ServeController, plan_serve_batch)
+
+cfg = get_config("granite-34b", reduced=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+scfg = ServeCfg(max_len=32, batch=8, cache_dtype=jax.numpy.float32)
+
+def make_requests():
+    rng = np.random.RandomState(0)
+    return [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       size=rng.randint(3, 8)).tolist(),
+                    max_new=3 + (i % 5))
+            for i in range(10)]
+
+# --- elastic run: lose 2 of 8 devices at decode step 1 -----------------
+# (all 8 slots still in flight: exercises resume AND the parked path)
+mesh0 = substrate.make_mesh((8, 1), ("data", "model"))
+session = comm_mod.Session(mesh=mesh0)
+ctl = ServeController(model, params, scfg, comm=session.world,
+                      fault_plan=FaultPlan([FaultEvent(1, "lose", 2)],
+                                           seed=1),
+                      watchdog_timeout=600.0)
+for r in make_requests():
+    ctl.submit(r)
+report = ctl.run()
+
+assert len(report.recoveries) == 1, report.describe()
+rec = report.recoveries[0]
+assert rec.step == 1 and rec.kind == "lose"
+assert rec.before_shape == (8, 1) and rec.after_shape == (6, 1)
+assert rec.batch_before == 8 and rec.batch_after == 6
+assert len(rec.healthy_after) == 6
+# 8 were in flight: 6 resumed into the shrunk batch, 2 parked for slots
+assert rec.resumed == 6 and rec.parked == 2, rec
+assert rec.shed == 0
+assert rec.plan_rebuilt and rec.total_s > 0.0
+assert report.mesh_history == [(8, 1), (6, 1)], report.mesh_history
+assert report.batch_history == [8, 6], report.batch_history
+assert len(report.completed) == 10 and not report.shed
+elastic_tokens = report.tokens()
+for r in report.completed:
+    assert len(r.generated) == r.max_new, (r.rid, r.generated)
+
+# --- baseline: uninterrupted run on the 6 survivors --------------------
+surv = [d for d in jax.devices() if d.id in rec.healthy_after]
+mesh6 = make_mesh_from_shape((6, 1), ("data", "model"), devices=surv)
+session6 = comm_mod.Session(mesh=mesh6)
+with session6.activate():
+    params6 = remesh(params, model.param_specs(), mesh6)
+bcfg = ServeCfg(max_len=32, batch=plan_serve_batch(8, 8, 6),
+                cache_dtype=jax.numpy.float32)
+sched = BatchScheduler(model, params6, bcfg, comm=session6.world)
+for r in make_requests():
+    sched.submit(r)
+baseline = {r.rid: list(r.generated) for r in sched.run()}
+
+assert sorted(baseline) == sorted(elastic_tokens)
+for rid in sorted(baseline):
+    assert elastic_tokens[rid] == baseline[rid], (
+        rid, elastic_tokens[rid], baseline[rid])
+print("OK bit-identical across serve recovery", len(baseline))
+""", timeout=600)
+
+
+def test_serve_shrink_degradation_shed_and_preemption():
+    """Graceful degradation: a deep loss shrinks the batch, the admission
+    bound sheds queued load (never in-flight work), parked requests enter
+    freed slots, and a PREEMPTION NOTICE (the real-signal path, not a
+    FaultPlan event) drives a second recovery through the same
+    lifecycle."""
+    run_subprocess_script("""
+import numpy as np
+import jax
+from repro import comm as comm_mod
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime import substrate
+from repro.runtime.controller import FaultEvent, FaultPlan
+from repro.runtime.health import PreemptionNotice
+from repro.serve import Request, ServeCfg, ServeController
+
+cfg = get_config("granite-34b", reduced=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+scfg = ServeCfg(max_len=32, batch=8, cache_dtype=jax.numpy.float32,
+                max_queue=2)
+
+rng = np.random.RandomState(0)
+reqs = [Request(rid=i,
+                prompt=rng.randint(0, cfg.vocab_size, size=5).tolist(),
+                max_new=6)
+        for i in range(14)]
+
+mesh0 = substrate.make_mesh((8, 1), ("data", "model"))
+session = comm_mod.Session(mesh=mesh0)
+notice = PreemptionNotice()
+ctl = ServeController(model, params, scfg, comm=session.world,
+                      fault_plan=FaultPlan([FaultEvent(2, "lose", 4)],
+                                           seed=1),
+                      preemption=notice, watchdog_timeout=600.0)
+admitted = [ctl.submit(r) for r in reqs]
+# 8 slots + 2 queue: 10 admitted, 4 shed at submit
+assert admitted.count(True) == 10 and admitted.count(False) == 4
+assert len(ctl.sched.shed) == 4
+
+report = ctl.run()
+assert len(report.recoveries) == 1, report.describe()
+rec = report.recoveries[0]
+assert rec.after_shape == (4, 1)
+assert rec.batch_before == 8 and rec.batch_after == 4
+# 8 in flight -> 4 resumed, 4 parked; queue (2) fully shed: the backlog
+# bound is consumed by the parked overflow
+assert rec.resumed == 4 and rec.parked == 4, rec
+assert rec.shed == 2, rec
+# in-flight work is NEVER shed: all 8 originally-in-flight complete
+assert len(report.completed) == 8 and len(report.shed) == 6
+for r in report.completed:
+    assert len(r.generated) == r.max_new
+
+# --- second recovery via the preemption-notice (real-signal) path ------
+for i in range(14, 17):
+    ctl.submit(Request(rid=i,
+                       prompt=rng.randint(0, cfg.vocab_size,
+                                          size=5).tolist(),
+                       max_new=4))
+ctl.sched.step()
+notice.post([d.id for d in jax.devices()
+             if d.id in {s for s in sorted(ctl._healthy)[:2]}])
+report2 = ctl.run()
+assert len(report2.recoveries) == 2, report2.describe()
+rec2 = report2.recoveries[1]
+assert rec2.after_shape == (2, 1) and rec2.batch_after == 2
+assert len(rec2.healthy_after) == 2
+# 3 in flight at the notice: 2 resume, 1 parks, then re-admits
+assert rec2.resumed == 2 and rec2.parked == 1, rec2
+assert len(report2.completed) == 11
+for r in report2.completed[-3:]:
+    assert len(r.generated) == r.max_new
+assert report2.mesh_history == [(8, 1), (4, 1), (2, 1)]
+assert report2.batch_history == [8, 4, 2]
+print("OK degradation + preemption recovery",
+      [r.rid for r in report2.completed])
+""", timeout=600)
