@@ -66,6 +66,93 @@ def wire_bytes(scale: int = 1) -> dict:
     return out
 
 
+def zero_metrics(smoke: bool = False) -> dict:
+    """The ZeRO-1 seam (PR 8), cost-model measured: optimizer-state
+    bytes per device unsharded vs data-axis-sharded, gradient-sync wire
+    bytes through the planned all-reduce vs its reduce-scatter phase
+    alone (predicted from the plan tables AND measured from CommStats —
+    both sides call the same ``phase_wire_bytes``), and the modeled
+    exposure of the updated-param all-gather under the next forward."""
+    import math
+
+    from repro import comm as comm_mod
+    from repro.core import plan as plan_mod
+    from repro.core import schedule as schedule_mod
+    from repro.optim.optimizer import AdamWCfg, make_adamw
+
+    scale = 1 if smoke else 4
+    grads = _grads_struct(scale)
+    # per-device logical view (the leading P dim is the vmapped device)
+    inner = [jax.ShapeDtypeStruct(l.shape[1:], l.dtype)
+             for l in jax.tree_util.tree_leaves(grads)]
+    params = [jax.ShapeDtypeStruct(l.shape, jnp.float32) for l in inner]
+    pad = lambda n: -(-int(n) // P) * P
+    opt = make_adamw(AdamWCfg())
+
+    unsharded_state = jax.eval_shape(opt.init, params)
+    unsharded = sum(l.size * l.dtype.itemsize
+                    for l in jax.tree_util.tree_leaves(unsharded_state))
+    flat = [jax.ShapeDtypeStruct((pad(l.size),), l.dtype) for l in params]
+    sharded_state = jax.eval_shape(opt.init, flat)
+    sharded = sum(
+        (l.size // P if l.ndim == 1 else l.size) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(sharded_state))
+
+    def _trace(leaf_sync):
+        eng = _engine()
+
+        def sync(g):
+            return jax.tree_util.tree_map(
+                lambda x, _e=eng: leaf_sync(_e, x), g)
+
+        jax.eval_shape(lambda g: jax.vmap(sync, axis_name=AX)(g), grads)
+        return eng.stats.phase_bytes
+
+    ar_phases = _trace(
+        lambda e, x: e.all_reduce_wait(e.all_reduce_start(x, AX, mean=True)))
+    rs_phases = _trace(
+        lambda e, x: e.zero_reduce_scatter_wait(
+            e.zero_reduce_scatter_start(x, AX, mean=True)))
+    ar_bytes = sum(v for k, v in ar_phases.items()
+                   if k.startswith("all_reduce."))
+    rs_bytes = sum(v for k, v in rs_phases.items()
+                   if k.startswith("reduce_scatter."))
+
+    # the two ZeRO schedule-IR programs over the same leaves: the RS
+    # program's predicted bytes must equal the engine's measured record
+    # (same protocol, same plan table), and the AG program's modeled
+    # exposure after the canonical overlap passes shows the gather
+    # hiding under the next forward.
+    sess = comm_mod.Session(topology=topology_from_mesh_shape((AX,), (P,)))
+    zc = sess.world
+    rs_specs = [(f"leaf{i}", math.prod(l.shape), l.dtype)
+                for i, l in enumerate(inner)]
+    ag_specs = [(f"param{i}", pad(l.size), l.dtype)
+                for i, l in enumerate(params)]
+    rs_sched = zc.zero_sync_schedule(rs_specs, kind="rs")
+    ag_base = zc.zero_sync_schedule(ag_specs, kind="ag",
+                                    compute=(("next_forward", True),))
+    ag_sched, _ = plan_mod.run_passes(ag_base,
+                                      plan_mod.canonical_overlap_passes(2))
+    predicted_rs = sum(rs_sched.predicted_phase_bytes().values())
+    ag_bytes = sum(ag_sched.predicted_phase_bytes().values())
+    w = float(ag_bytes)
+    return {
+        "opt_state_bytes_per_device_unsharded": int(unsharded),
+        "opt_state_bytes_per_device_sharded": int(sharded),
+        "state_shrink_x": unsharded / sharded,
+        "grad_sync_wire_bytes_allreduce": int(ar_bytes),
+        "grad_sync_wire_bytes_rs_only": int(rs_bytes),
+        "rs_wire_bytes_predicted": int(predicted_rs),
+        "predicted_equals_measured": bool(predicted_rs == rs_bytes),
+        "ag_wire_bytes": int(ag_bytes),
+        "ag_exposed_frac": schedule_mod.modeled_exposed_comm_frac(
+            ag_sched, compute_weight=w),
+        "ag_exposed_frac_blocking": schedule_mod.modeled_exposed_comm_frac(
+            ag_base, compute_weight=w),
+    }
+
+
 def payload(smoke: bool = False) -> dict:
     from benchmarks.bench_elastic import recovery_latency
     from benchmarks.bench_layers import dispatch_overhead, layer_numbers
@@ -80,6 +167,7 @@ def payload(smoke: bool = False) -> dict:
         "overlap": ov["overlap"],
         "schedule": ov["schedule"],
         "serve": serve_metrics(smoke=smoke),
+        "zero": zero_metrics(smoke=smoke),
     }
 
 
@@ -138,7 +226,24 @@ def run(smoke: bool = False):
            f"{sv['p99_ttft_s'] * 1e3:.0f} ms")
     t6.add("recovery (drain+remesh+rebuild rehearsal)",
            f"{sv['recovery_s'] * 1e3:.0f} ms")
-    return [t, t2, t3, t4, t5, t6], p
+    z = p["zero"]
+    t7 = Table("bench_plan: ZeRO-1 on the RS/AG seam "
+               f"(DP={P}, adamw)", ["metric", "value"])
+    t7.add("opt state bytes/device",
+           f"{z['opt_state_bytes_per_device_unsharded']:,d} -> "
+           f"{z['opt_state_bytes_per_device_sharded']:,d} "
+           f"({z['state_shrink_x']:.2f}x smaller)")
+    t7.add("grad-sync wire bytes",
+           f"all-reduce {z['grad_sync_wire_bytes_allreduce']:,d} -> "
+           f"RS only {z['grad_sync_wire_bytes_rs_only']:,d}")
+    t7.add("RS bytes predicted == measured",
+           f"{z['rs_wire_bytes_predicted']:,d} == "
+           f"{z['grad_sync_wire_bytes_rs_only']:,d}: "
+           f"{z['predicted_equals_measured']}")
+    t7.add("param AG exposed frac (modeled, under next forward)",
+           f"{z['ag_exposed_frac_blocking']:.3f} -> "
+           f"{z['ag_exposed_frac']:.3f}")
+    return [t, t2, t3, t4, t5, t6, t7], p
 
 
 def main():

@@ -36,6 +36,11 @@ REQUIRED_KEYS = {
                  "measured_phase_bytes", "exposed_comm_frac_depth2",
                  "exposed_comm_frac_depthN"),
     "serve": ("tokens_per_s", "p50_ttft_s", "p99_ttft_s", "recovery_s"),
+    "zero": ("opt_state_bytes_per_device_unsharded",
+             "opt_state_bytes_per_device_sharded", "state_shrink_x",
+             "grad_sync_wire_bytes_allreduce",
+             "grad_sync_wire_bytes_rs_only", "rs_wire_bytes_predicted",
+             "predicted_equals_measured", "ag_exposed_frac"),
 }
 
 

@@ -1,9 +1,14 @@
 """Sharded, atomic, async checkpointing with restore-time resharding.
 
 Layout:  <dir>/step_00000042/  leaf_00000.bin ... manifest.json
-Writes go to ``step_X.tmp`` and are renamed only after fsync — a killed
-run never leaves a half checkpoint visible, so restore always finds a
-consistent latest step (fault-tolerance contract).
+With ``sharded=True`` a distributed leaf is split per owned shard —
+``leaf_00000.shard_000.bin ...`` plus a manifest shard map of global
+indices — so no host ever gathers a full leaf (ZeRO-sharded optimizer
+states at 671B scale would not fit otherwise).
+Writes go to ``step_X.tmp`` and are renamed only after fsync (files and
+the parent dirent) — a killed run never leaves a half checkpoint
+visible, so restore always finds a consistent latest step
+(fault-tolerance contract).
 
 Async mode snapshots to host (``jax.device_get`` — a consistent cut, the
 device buffers are immutable) and writes on a background thread, so the
@@ -34,26 +39,93 @@ def _to_numpy_bytes(arr) -> tuple:
     return np_arr.tobytes(), str(np_arr.dtype), list(np_arr.shape)
 
 
-def _from_bytes(buf: bytes, dtype: str, shape) -> np.ndarray:
+def _np_dtype(dtype: str):
     if dtype == "bfloat16":
         import ml_dtypes
-        dt = ml_dtypes.bfloat16
-    else:
-        dt = np.dtype(dtype)
-    return np.frombuffer(buf, dtype=dt).reshape(shape)
+        return ml_dtypes.bfloat16
+    return np.dtype(dtype)
+
+
+def _from_bytes(buf: bytes, dtype: str, shape) -> np.ndarray:
+    return np.frombuffer(buf, dtype=_np_dtype(dtype)).reshape(shape)
+
+
+def _dir_fsync(path: str) -> None:
+    """fsync a directory so a rename into it survives a crash."""
+    try:
+        fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _index_bounds(index, shape) -> list:
+    """A jax.Array shard index (tuple of slices) as [[lo, hi], ...]."""
+    out = []
+    for sl, dim in zip(index, shape):
+        lo = 0 if sl.start is None else int(sl.start)
+        hi = int(dim) if sl.stop is None else int(sl.stop)
+        out.append([lo, hi])
+    return out
+
+
+class _ShardedLeaf:
+    """Host snapshot of a non-replicated jax.Array: only the distinct
+    shards this process owns, keyed by their position in the global
+    array.  Never materialises the gathered leaf."""
+
+    def __init__(self, dtype: str, shape: list, shards: list):
+        self.dtype = dtype
+        self.shape = shape
+        self.shards = shards            # [(bounds, np_arr)] sorted
+
+
+def _snapshot_leaf(leaf, sharded: bool):
+    """Host snapshot of one tree leaf; per-shard when asked and the leaf
+    is actually distributed (replicated leaves keep the dense layout)."""
+    if sharded and isinstance(leaf, jax.Array):
+        try:
+            replicated = leaf.is_fully_replicated
+            shards = leaf.addressable_shards
+        except Exception:
+            replicated, shards = True, ()
+        if not replicated:
+            seen = {}
+            for sh in shards:
+                bounds = _index_bounds(sh.index, leaf.shape)
+                key = tuple(tuple(b) for b in bounds)
+                if key not in seen:
+                    seen[key] = (bounds, np.asarray(sh.data))
+            return _ShardedLeaf(str(np.asarray(shards[0].data).dtype),
+                                list(leaf.shape),
+                                [seen[k] for k in sorted(seen)])
+    return jax.device_get(leaf)
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
                     async_: bool = False,
-                    meta: Optional[dict] = None
+                    meta: Optional[dict] = None,
+                    sharded: bool = False,
+                    on_complete: Optional[Any] = None
                     ) -> "Optional[threading.Thread]":
     """Write ``tree`` as checkpoint ``step``.  With ``async_=True`` the
     filesystem work happens on a returned daemon thread (already started);
     join it to guarantee durability.  ``meta``: JSON-serialisable sidecar
     stored in the manifest (non-array state, e.g. the serving scheduler's
-    request books), read back via ``load_manifest``."""
+    request books), read back via ``load_manifest``.
+
+    ``sharded=True``: distributed leaves are written per shard
+    (``leaf_XXXXX.shard_RRR.bin`` + a manifest shard map) — each host
+    copies and writes only the bytes it owns instead of gathering the
+    global leaf.  ``on_complete`` runs after the rename is durable (on
+    the writer thread in async mode)."""
     os.makedirs(directory, exist_ok=True)
-    host_tree = jax.device_get(tree)        # consistent snapshot
+    # consistent snapshot on the caller thread (device buffers immutable)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host_leaves = [_snapshot_leaf(l, sharded) for l in leaves]
 
     def write():
         final = os.path.join(directory, f"step_{step:08d}")
@@ -61,19 +133,31 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        leaves, treedef = jax.tree_util.tree_flatten(host_tree)
-        manifest = {"step": step, "num_leaves": len(leaves),
-                    "treedef": str(treedef), "meta": meta or {},
-                    "leaves": []}
-        for i, leaf in enumerate(leaves):
-            buf, dtype, shape = _to_numpy_bytes(leaf)
-            fname = f"leaf_{i:05d}.bin"
+
+        def dump(fname, buf):
             with open(os.path.join(tmp, fname), "wb") as f:
                 f.write(buf)
                 f.flush()
                 os.fsync(f.fileno())
-            manifest["leaves"].append(
-                {"file": fname, "dtype": dtype, "shape": shape})
+
+        manifest = {"step": step, "num_leaves": len(host_leaves),
+                    "treedef": str(treedef), "meta": meta or {},
+                    "leaves": []}
+        for i, leaf in enumerate(host_leaves):
+            if isinstance(leaf, _ShardedLeaf):
+                entry = {"dtype": leaf.dtype, "shape": leaf.shape,
+                         "shards": []}
+                for r, (bounds, arr) in enumerate(leaf.shards):
+                    fname = f"leaf_{i:05d}.shard_{r:03d}.bin"
+                    dump(fname, arr.tobytes())
+                    entry["shards"].append({"file": fname, "index": bounds,
+                                            "shape": list(arr.shape)})
+            else:
+                buf, dtype, shape = _to_numpy_bytes(leaf)
+                fname = f"leaf_{i:05d}.bin"
+                dump(fname, buf)
+                entry = {"file": fname, "dtype": dtype, "shape": shape}
+            manifest["leaves"].append(entry)
         mpath = os.path.join(tmp, "manifest.json")
         with open(mpath, "w") as f:
             json.dump(manifest, f)
@@ -81,7 +165,10 @@ def save_checkpoint(directory: str, step: int, tree: Any,
             os.fsync(f.fileno())
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)               # atomic publish
+        os.rename(tmp, final)               # atomic publish...
+        _dir_fsync(directory)               # ...durable only once the
+        if on_complete is not None:         # parent dirent is on disk
+            on_complete()
 
     if async_:
         t = threading.Thread(target=write, daemon=True)
@@ -154,11 +241,21 @@ def _bucket_layout_hint(abstract_tree: Any, abs_leaves,
 
 def restore_checkpoint(directory: str, abstract_tree: Any,
                        step: Optional[int] = None,
-                       shardings: Any = None) -> Any:
+                       shardings: Any = None,
+                       allow_resize_1d: bool = False) -> Any:
     """Load a checkpoint into the structure of ``abstract_tree``.
 
     ``shardings``: optional matching tree of NamedShardings — leaves are
     device_put with them (resharding onto a different mesh is free here).
+
+    ``allow_resize_1d``: ZeRO-sharded optimizer states are flat 1-D
+    leaves zero-padded to a multiple of the data-parallel size, so their
+    GLOBAL length changes when the surviving mesh does.  The layout is
+    [logical values, trailing zeros] with the new padded length never
+    below the logical length, so resizing is exact: truncating drops
+    only padding, extending appends only padding.  With this flag a 1-D
+    saved leaf whose length differs from the 1-D expected leaf is
+    truncated / zero-padded at the end instead of rejected.
     """
     if step is None:
         step = latest_step(directory)
@@ -179,11 +276,32 @@ def restore_checkpoint(directory: str, abstract_tree: Any,
                     if shardings is not None else [None] * len(abs_leaves))
     out = []
     for meta, ref, sh in zip(leaves_meta, abs_leaves, shard_leaves):
-        with open(os.path.join(path, meta["file"]), "rb") as f:
-            arr = _from_bytes(f.read(), meta["dtype"], meta["shape"])
+        if "shards" in meta:
+            # per-shard layout: assemble by global index, so restoring
+            # onto a different (survivor) mesh just re-places the bytes
+            arr = np.zeros(meta["shape"], _np_dtype(meta["dtype"]))
+            for sm in meta["shards"]:
+                with open(os.path.join(path, sm["file"]), "rb") as f:
+                    piece = _from_bytes(f.read(), meta["dtype"],
+                                        sm["shape"])
+                arr[tuple(slice(lo, hi) for lo, hi in sm["index"])] = piece
+            name = meta["shards"][0]["file"]
+        else:
+            with open(os.path.join(path, meta["file"]), "rb") as f:
+                arr = _from_bytes(f.read(), meta["dtype"], meta["shape"])
+            name = meta["file"]
         if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(f"{meta['file']}: shape {arr.shape} != "
-                             f"expected {ref.shape}")
+            if (allow_resize_1d and arr.ndim == 1
+                    and len(ref.shape) == 1):
+                n = int(ref.shape[0])
+                if n <= arr.shape[0]:
+                    arr = arr[:n]
+                else:
+                    pad = np.zeros((n - arr.shape[0],), arr.dtype)
+                    arr = np.concatenate([arr, pad])
+            else:
+                raise ValueError(f"{name}: shape {arr.shape} != "
+                                 f"expected {ref.shape}")
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -193,11 +311,12 @@ class CheckpointManager:
     """Every-N-steps async checkpointing with retention."""
 
     def __init__(self, directory: str, every: int = 100, keep: int = 3,
-                 async_: bool = True):
+                 async_: bool = True, sharded: bool = False):
         self.directory = directory
         self.every = every
         self.keep = keep
         self.async_ = async_
+        self.sharded = sharded
         self._pending: Optional[threading.Thread] = None
         self.last_restore_seconds: float = 0.0
 
@@ -208,8 +327,13 @@ class CheckpointManager:
         if not force and (self.every <= 0 or step % self.every != 0):
             return False
         self.wait()                          # one outstanding save max
+        # async: gc as soon as the writer publishes, not on the next
+        # wait() — otherwise retention exceeds `keep` between rare saves
+        done = self._gc if self.async_ else None
         self._pending = save_checkpoint(self.directory, step, tree,
-                                        async_=self.async_)
+                                        async_=self.async_,
+                                        sharded=self.sharded,
+                                        on_complete=done)
         if not self.async_:
             self._gc()
         return True
@@ -223,19 +347,37 @@ class CheckpointManager:
     def _gc(self) -> None:
         if not os.path.isdir(self.directory):
             return
-        steps = sorted(
-            int(n[5:]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp"))
+        steps = []
+        for n in os.listdir(self.directory):
+            if not n.startswith("step_"):
+                continue
+            if n.endswith(".tmp"):
+                # orphaned by a killed writer; never ours — the live
+                # writer's tmp is renamed before its on_complete gc runs,
+                # and wait() joins the thread before gc'ing
+                pending = self._pending
+                if (pending is None or not pending.is_alive()
+                        or pending is threading.current_thread()):
+                    shutil.rmtree(os.path.join(self.directory, n),
+                                  ignore_errors=True)
+                continue
+            try:
+                steps.append(int(n[5:]))     # same guard as latest_step
+            except ValueError:
+                pass
+        steps.sort()
         for s in steps[:-self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)
 
-    def restore_latest(self, abstract_tree: Any, shardings: Any = None):
+    def restore_latest(self, abstract_tree: Any, shardings: Any = None,
+                       allow_resize_1d: bool = False):
         step = latest_step(self.directory)
         if step is None:
             return None, None
         t0 = time.perf_counter()
         tree = restore_checkpoint(self.directory, abstract_tree,
-                                  step=step, shardings=shardings)
+                                  step=step, shardings=shardings,
+                                  allow_resize_1d=allow_resize_1d)
         self.last_restore_seconds = time.perf_counter() - t0
         return tree, step

@@ -360,6 +360,28 @@ class Communicator:
         here and ONLY here.  Returns (synced, new_ef_residual | None)."""
         return self._engine.sync_gradient_wait(token)
 
+    # -- the ZeRO-1 seam (PR 8): RS-only grad sync + param all-gather --
+
+    def zero_reduce_scatter_start(self, g, *, mean: bool = True):
+        """ZeRO-1 gradient sync stopped at the RS/AG seam: run only the
+        reduce-scatter half of the PLANNED all-reduce protocol; the wait
+        arm yields this rank's reduced padded-flat chunk (bit-identical
+        to the matching rows of the blocking all-reduce)."""
+        return self._engine.zero_reduce_scatter_start(
+            g, self._single_axis("zero_reduce_scatter"), mean=mean)
+
+    def zero_reduce_scatter_wait(self, token):
+        return self._engine.zero_reduce_scatter_wait(token)
+
+    def zero_all_gather_start(self, shard):
+        """Start the updated-param all-gather of a ZeRO step; the wait
+        arm yields the full padded-flat vector (callers unpad/reshape)."""
+        return self._engine.zero_all_gather_start(
+            shard, self._single_axis("zero_all_gather"))
+
+    def zero_all_gather_wait(self, token):
+        return self._engine.zero_all_gather_wait(token)
+
     def reduce_scatter(self, x, dim: int = 0):
         return self._engine.reduce_scatter(
             x, self._single_axis("reduce_scatter"), dim=dim)
@@ -464,6 +486,52 @@ class Communicator:
                 proto = entry.protocol
                 ss, ws = entry.start_stages, entry.wait_stages
                 sb, wb = plan_mod.phase_wire_bytes(proto, p0, nbytes, fn)
+            units.append(schedule_mod.sync_unit(
+                name=str(name), index=idx, fn=fn, axes=self.axes,
+                protocol=proto, start_stages=ss, wait_stages=ws,
+                start_bytes=sb, wait_bytes=wb))
+        comp_ops = []
+        for entry in compute:
+            tag, overlappable = (entry if isinstance(entry, tuple)
+                                 else (entry, True))
+            comp_ops.append(schedule_mod.ComputeOp(
+                tag=str(tag), overlappable=bool(overlappable)))
+        return schedule_mod.build_sync_schedule(units, compute=comp_ops,
+                                                meta=meta)
+
+    def zero_sync_schedule(self, specs, *, kind: str, compute=(),
+                           meta=None) -> schedule_mod.Schedule:
+        """One half of a ZeRO-1 step as a blocking schedule over this
+        (single-axis) communicator — the optimizer update sits between
+        the two halves, so they are separate programs:
+
+        * ``kind="rs"``: the RS-only gradient sync — one
+          ``reduce_scatter`` unit per leaf, annotated with the PLANNED
+          all-reduce protocol's RS half (the bit-identity seam).
+        * ``kind="ag"``: the updated-param all-gather — one
+          ``all_gather`` unit per leaf; ``specs`` carry the GATHERED
+          (padded p*chunk) element counts.  A ``("next_forward", True)``
+          compute entry is what ``hoist_starts`` overlaps the AG under.
+
+        Units carry the same ``phase_wire_bytes`` split the engine's zero
+        arms record, so ``predicted_phase_bytes`` == measured by
+        construction.  Rewrite with ``plan.canonical_overlap_passes``.
+        """
+        if kind not in ("rs", "ag"):
+            raise ValueError(f"kind must be 'rs' or 'ag', got {kind!r}")
+        ax = self._single_axis("zero_sync_schedule")
+        eng = self._engine
+        p0 = eng.topology.axis_sizes.get(ax, 1)
+        units = []
+        for idx, (name, n_elems, dtype) in enumerate(specs):
+            nbytes = int(n_elems) * jnp.dtype(dtype).itemsize
+            rs_proto, ag_proto = eng.zero_protocols(nbytes, ax)
+            if kind == "rs":
+                fn, proto = registry.REDUCE_SCATTER, rs_proto
+            else:
+                fn, proto = registry.ALL_GATHER, ag_proto
+            ss, ws = plan_mod.protocol_stage_counts(proto, p0, fn)
+            sb, wb = plan_mod.phase_wire_bytes(proto, p0, nbytes, fn)
             units.append(schedule_mod.sync_unit(
                 name=str(name), index=idx, fn=fn, axes=self.axes,
                 protocol=proto, start_stages=ss, wait_stages=ws,

@@ -834,6 +834,121 @@ class CollectiveEngine:
             y = y * jnp.asarray(token.scale, y.dtype)
         return y, new_residual
 
+    # -- the ZeRO-1 seam: RS-only grad sync + updated-param all-gather --
+    #
+    # Every planned all-reduce protocol already decomposes into a
+    # reduce-scatter arm and an all-gather arm; ZeRO-1 stops gradient
+    # sync at that seam (each rank keeps its reduced chunk, runs the
+    # elementwise optimizer update on it) and all-gathers the *updated
+    # params* back instead.  Bit-identity with the unsharded path is by
+    # construction: the RS half below IS the planned all-reduce's own
+    # start phase — same protocol, same padding, same stage order.
+
+    def zero_protocols(self, nbytes: int, axis: str) -> Tuple[str, str]:
+        """(rs_protocol, ag_protocol) the ZeRO seam uses for an ``nbytes``
+        payload on ``axis``: the PLANNED all-reduce protocol's own halves.
+        Seamless protocols (xla, recursive doubling) have no RS/AG split —
+        the RS arm then runs the whole planned all-reduce and slices, and
+        the gather side defaults to the ring all-gather."""
+        ar = self.protocol_for(registry.ALL_REDUCE, nbytes, axis)
+        ag = {costmodel.RING: costmodel.RING,
+              costmodel.BIDIR_RING: costmodel.BIDIR_RING,
+              costmodel.RECURSIVE_HALVING: costmodel.RECURSIVE_DOUBLING,
+              }.get(ar, costmodel.RING)
+        return ar, ag
+
+    def _zero_rs_start(self, x: jax.Array, axis: str) -> InFlight:
+        """The RS half of the planned all-reduce for ``x`` on one axis;
+        the token's finish yields this rank's reduced padded-flat chunk
+        (rows ``axis_index`` of the blocking all-reduce's chunk view,
+        bit-for-bit).  No stats here — public/persistent arms record."""
+        fn = registry.REDUCE_SCATTER
+        p = self._axis_size(axis)
+        if p == 1:
+            flat = x.reshape(-1)
+            return InFlight(fn, (axis,), lambda: flat, protocol="local")
+        proto = self.zero_protocols(_nbytes_of(x), axis)[0]
+        sb, _ = plan_mod.phase_wire_bytes(proto, p, _nbytes_of(x), fn)
+        x2d, _, _ = self._chunked(x, p)
+        uk = self.config.use_local_reduce_kernel
+        if proto == costmodel.RING:
+            chunk = ring.ring_reduce_scatter_flat(x2d, axis, uk)
+        elif proto == costmodel.BIDIR_RING:
+            chunk = ring.bidir_ring_reduce_scatter_flat(x2d, axis, uk)
+        elif proto == costmodel.RECURSIVE_HALVING:
+            chunk = recursive.halving_reduce_scatter_flat(x2d, axis)
+        else:
+            # no seam: run the planned all-reduce whole and keep this
+            # rank's rows — identical bits, billed at the full AR share.
+            y = self._allreduce_1d(x, axis, proto=proto)
+            y2d, _, _ = self._chunked(y, p)
+            chunk = c.dyn_chunk(y2d, c.axis_index(axis))
+        return InFlight(fn, (axis,), lambda: chunk, proto, sb, 0)
+
+    def _zero_ag_start(self, shard: jax.Array, axis: str) -> InFlight:
+        """The AG half: replicate per-rank updated chunks back into the
+        full padded-flat vector (pure data movement — any gather order is
+        bit-identical).  ``finish`` yields the flat (p*chunk,) vector."""
+        fn = registry.ALL_GATHER
+        p = self._axis_size(axis)
+        flat = shard.reshape(-1)
+        if p == 1:
+            return InFlight(fn, (axis,), lambda: flat, protocol="local")
+        full = _nbytes_of(shard) * p
+        proto = self.zero_protocols(full, axis)[1]
+        sb, _ = plan_mod.phase_wire_bytes(proto, p, full, fn)
+        if proto == costmodel.RECURSIVE_DOUBLING:
+            buf = recursive.doubling_all_gather_flat(flat, axis)
+        elif proto == costmodel.BIDIR_RING:
+            buf = ring.bidir_ring_all_gather_flat(flat, axis)
+        else:
+            buf = ring.ring_all_gather_flat(flat, axis)
+        return InFlight(fn, (axis,), lambda: buf.reshape(-1), proto, sb, 0)
+
+    def zero_reduce_scatter_start(self, g: jax.Array, axis_name, *,
+                                  mean: bool = True) -> InFlight:
+        """ZeRO-1 gradient sync stopped at the RS/AG seam: only the
+        reduce-scatter half of the PLANNED all-reduce runs; the wait arm
+        yields this rank's reduced padded-flat chunk with the mean scale
+        applied.  ``SYNC_STATS_KEY`` records the RS phase share alone —
+        the wire-byte drop vs. a full all-reduce is the measured claim."""
+        fn = registry.REDUCE_SCATTER
+        self._check(fn)
+        axes = _as_axes(axis_name)
+        if len(axes) != 1:
+            raise ValueError(f"zero_reduce_scatter runs over exactly one "
+                             f"data axis, got {axes}")
+        g = layers.tier_input(fn, self.tier(fn), g, axes[0], self.stats,
+                              sanitize=self.config.sanitize_checked)
+        tok = self._zero_rs_start(g, axes[0])
+        if mean:
+            tok.scale = self.mean_scale(axes)
+        self.stats.record(SYNC_STATS_KEY, tok.start_bytes)
+        self.stats.record_phase(fn, "start", tok.start_bytes)
+        return tok
+
+    def zero_reduce_scatter_wait(self, token: InFlight) -> jax.Array:
+        return self._wait_inflight(token)
+
+    def zero_all_gather_start(self, shard: jax.Array, axis_name) -> InFlight:
+        """Start the updated-param all-gather of a ZeRO step.  The wait
+        arm yields the full padded-flat vector; callers unpad/reshape."""
+        fn = registry.ALL_GATHER
+        self._check(fn)
+        axes = _as_axes(axis_name)
+        if len(axes) != 1:
+            raise ValueError(f"zero_all_gather runs over exactly one "
+                             f"data axis, got {axes}")
+        shard = layers.tier_input(fn, self.tier(fn), shard, axes[0],
+                                  self.stats,
+                                  sanitize=self.config.sanitize_checked)
+        tok = self._zero_ag_start(shard, axes[0])
+        self.stats.record_phase(fn, "start", tok.start_bytes)
+        return tok
+
+    def zero_all_gather_wait(self, token: InFlight) -> jax.Array:
+        return self._wait_inflight(token)
+
     def barrier(self, axis_name, token: jax.Array | None = None) -> jax.Array:
         fn = registry.BARRIER
         self._check(fn)
@@ -928,7 +1043,13 @@ class CollectiveEngine:
         """
         axes = _as_axes(axis_name)
         self._check(fn)
-        if sync_stats and fn != registry.ALL_REDUCE:
+        zero = bool(kw.pop("zero", False))
+        if zero and fn not in (registry.REDUCE_SCATTER, registry.ALL_GATHER):
+            raise ValueError(f"zero=True binds the ZeRO-1 seam arms; only "
+                             f"reduce_scatter/all_gather support it, "
+                             f"not {fn!r}")
+        if sync_stats and fn != registry.ALL_REDUCE and \
+                not (zero and fn == registry.REDUCE_SCATTER):
             raise ValueError(f"sync_stats=True marks a gradient-sync "
                              f"all_reduce handle, not {fn!r}")
         for ax in axes:
@@ -940,7 +1061,9 @@ class CollectiveEngine:
         shape = tuple(int(s) for s in shape)
         dtype = jnp.dtype(dtype)
         nbytes = math.prod(shape) * dtype.itemsize if shape else dtype.itemsize
-        if mean and fn != registry.ALL_REDUCE:
+        sync_nbytes = nbytes            # what sync_stats records per call
+        if mean and fn != registry.ALL_REDUCE and \
+                not (zero and fn == registry.REDUCE_SCATTER):
             raise ValueError(f"mean=True is only supported for all_reduce, "
                              f"not {fn!r}")
         single_axis_only = (registry.REDUCE_SCATTER, registry.ALL_GATHER,
@@ -985,7 +1108,17 @@ class CollectiveEngine:
                     self._allreduce_seq_start(x, _protos)
         elif fn == registry.REDUCE_SCATTER:
             ax0, dim = axes[0], int(kw.pop("dim", 0))
-            if mono:
+            if zero:
+                # ZeRO seam: the RS half of the PLANNED all-reduce's own
+                # stage split (bit-identity contract) — output is this
+                # rank's padded-flat chunk, not the tiled RS, and
+                # sync_stats bills the RS phase share alone.
+                proto = self.zero_protocols(nbytes, ax0)[0]
+                target = lambda x: self._zero_rs_start(x, ax0).finish()
+                start_impl = lambda x: self._zero_rs_start(x, ax0)
+                sync_nbytes = plan_mod.phase_wire_bytes(
+                    proto, self._axis_size(ax0), nbytes, fn)[0]
+            elif mono:
                 proto = xla_tag
                 target = lambda x: self._reduce_scatter_mono(x, ax0, dim=dim)
             else:
@@ -995,7 +1128,15 @@ class CollectiveEngine:
             protocols = ((ax0, proto),)
         elif fn == registry.ALL_GATHER:
             ax0, dim = axes[0], int(kw.pop("dim", 0))
-            if mono:
+            if zero:
+                # ZeRO seam: gather per-rank chunks back to the padded
+                # flat vector; the binding shape is the CHUNK, planning
+                # happens at the gathered size like the tiled path.
+                proto = self.zero_protocols(
+                    nbytes * self._axis_size(ax0), ax0)[1]
+                target = lambda x: self._zero_ag_start(x, ax0).finish()
+                start_impl = lambda x: self._zero_ag_start(x, ax0)
+            elif mono:
                 proto = xla_tag
                 target = lambda x: self._all_gather_mono(x, ax0, dim=dim)
             else:
@@ -1068,7 +1209,7 @@ class CollectiveEngine:
         else:
             call = target
         if sync_stats:
-            def call(x, _inner=call, _nb=nbytes):
+            def call(x, _inner=call, _nb=sync_nbytes):
                 self.stats.record(SYNC_STATS_KEY, _nb)
                 return _inner(x)
 
@@ -1081,7 +1222,7 @@ class CollectiveEngine:
 
         axis_label = axes if len(axes) > 1 else axes[0]
 
-        def start(x, _impl=start_impl, _tier=tier, _nb=nbytes, _s=scale,
+        def start(x, _impl=start_impl, _tier=tier, _nb=sync_nbytes, _s=scale,
                   _a=axis_label):
             if sync_stats:
                 self.stats.record(SYNC_STATS_KEY, _nb)

@@ -56,11 +56,15 @@ def build_session(mesh, model, opt, ds, args) -> "comm_mod.Session":
                                  bucket_grads=args.bucket_grads,
                                  bucket_bytes=args.bucket_bytes,
                                  overlap=args.overlap,
-                                 overlap_depth=args.overlap_depth)
+                                 overlap_depth=args.overlap_depth,
+                                 zero=args.zero)
+    # the probe's abstract state must be laid out for the PROBE mesh:
+    # with --zero the optimizer-state padding tracks the data-parallel
+    # size, and the probe traces over the abstract (4, 2) mesh.
     probe_step = trainer.make_train_step(model, opt, probe_cfg,
                                          mesh=probe.mesh, comm=probe.world)
     abstate = trainer.make_train_state(model, opt, abstract=True,
-                                       cfg=probe_cfg)
+                                       cfg=probe_cfg, mesh=probe.mesh)
     abatch = jax.eval_shape(
         lambda: {k: jnp.zeros(v.shape, v.dtype)
                  for k, v in ds.host_batch(0).items()})
@@ -96,6 +100,24 @@ def main() -> None:
                          "interleave pass keeps live (2 = classic "
                          "software pipeline; >=3 adds per-stage "
                          "progress hops)")
+    ap.add_argument("--zero", action="store_true", default=False,
+                    help="ZeRO-1 optimizer-state sharding on the RS/AG "
+                         "seam: gradients sync with only the reduce-"
+                         "scatter half of the planned all-reduce, each "
+                         "data-parallel rank updates its 1/N shard of "
+                         "the optimizer state, and updated params all-"
+                         "gather back through the schedule IR (losses "
+                         "bit-identical to the unsharded composed path "
+                         "at clip_norm=0).  Needs --sync composed; "
+                         "incompatible with --bucket-grads.  Example: "
+                         "--sync composed --zero --overlap "
+                         "--ckpt-sharded")
+    ap.add_argument("--ckpt-sharded", action="store_true", default=False,
+                    help="write distributed state leaves per shard "
+                         "(leaf_XXXXX.shard_RRR.bin + manifest shard "
+                         "map) so no host gathers a full leaf; restore "
+                         "reassembles by global index onto any survivor "
+                         "mesh (pair with --zero)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
@@ -116,6 +138,13 @@ def main() -> None:
     ap.add_argument("--watchdog-timeout", type=float, default=300.0)
     args = ap.parse_args()
 
+    if args.zero and args.sync != "composed":
+        ap.error("--zero needs --sync composed (the RS/AG seam only "
+                 "exists on the composed planned-collective path)")
+    if args.zero and args.bucket_grads:
+        ap.error("--zero runs one RS/AG pair per parameter leaf and is "
+                 "incompatible with --bucket-grads")
+
     logging.basicConfig(level=logging.INFO)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -134,7 +163,8 @@ def main() -> None:
                             bucket_grads=args.bucket_grads,
                             bucket_bytes=args.bucket_bytes,
                             overlap=args.overlap,
-                            overlap_depth=args.overlap_depth)
+                            overlap_depth=args.overlap_depth,
+                            zero=args.zero)
 
     ds = SyntheticLMDataset(vocab_size=cfg.vocab_size,
                             seq_len=args.seq_len,
@@ -155,7 +185,8 @@ def main() -> None:
         ctl = ElasticController(
             session, ds, mesh, total_steps=args.steps,
             ckpt_dir=args.ckpt_dir, comm=comm_session,
-            ckpt_every=args.ckpt_every, fault_plan=fplan,
+            ckpt_every=args.ckpt_every, ckpt_sharded=args.ckpt_sharded,
+            fault_plan=fplan,
             max_recoveries=args.max_recoveries,
             watchdog_timeout=args.watchdog_timeout,
             on_step=lambda s, l: (s % args.log_every == 0
@@ -170,21 +201,23 @@ def main() -> None:
     step_fn = trainer.make_train_step(
         model, opt, tcfg, mesh=mesh,
         comm=comm_session.world if comm_session is not None else None)
-    sspecs = trainer.state_specs(model, opt, tcfg)
+    sspecs = trainer.state_specs(model, opt, tcfg, mesh=mesh)
 
     with substrate.set_mesh(mesh):
         state = trainer.make_train_state(model, opt, jax.random.PRNGKey(0),
-                                         cfg=tcfg)
+                                         cfg=tcfg, mesh=mesh)
         state = jax.device_put(state, named_shardings(mesh, sspecs))
         jstep = jax.jit(step_fn, donate_argnums=0)
 
-        ckpt = (CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+        ckpt = (CheckpointManager(args.ckpt_dir, every=args.ckpt_every,
+                                  sharded=args.ckpt_sharded)
                 if args.ckpt_dir else None)
         start = 0
         if ckpt is not None:
             restored, rstep = ckpt.restore_latest(
                 jax.eval_shape(lambda: state),
-                named_shardings(mesh, sspecs))
+                named_shardings(mesh, sspecs),
+                allow_resize_1d=tcfg.zero)
             if restored is not None:
                 state, start = restored, rstep
                 logger.info("restored checkpoint at step %d", start)

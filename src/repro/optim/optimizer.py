@@ -40,8 +40,8 @@ def global_norm(tree) -> jax.Array:
                         for x in jax.tree_util.tree_leaves(tree)))
 
 
-def clip_by_global_norm(tree, max_norm: float):
-    n = global_norm(tree)
+def clip_by_global_norm(tree, max_norm: float, norm=None):
+    n = global_norm(tree) if norm is None else norm
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
     return jax.tree_util.tree_map(
         lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), n
@@ -104,12 +104,12 @@ def make_adamw(cfg: AdamWCfg) -> Optimizer:
                 "v": jax.tree_util.tree_map(zeros, params),
                 "step": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params):
+    def update(grads, state, params, global_norm_fn=None):
         step = state["step"] + 1
+        gnorm = (global_norm_fn or global_norm)(grads)
         if cfg.clip_norm:
-            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
-        else:
-            gnorm = global_norm(grads)
+            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm,
+                                               norm=gnorm)
         t = step.astype(jnp.float32)
         bc1 = 1 - cfg.b1 ** t
         bc2 = 1 - cfg.b2 ** t
@@ -150,14 +150,14 @@ def make_adamw(cfg: AdamWCfg) -> Optimizer:
 # Adafactor
 # ---------------------------------------------------------------------------
 
-def _factored(shape) -> bool:
-    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+def _factored(shape, min_dim: int = 128) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
 
 
 def make_adafactor(cfg: AdafactorCfg) -> Optimizer:
     def init(params):
         def leaf(p):
-            if _factored(p.shape):
+            if _factored(p.shape, cfg.min_dim_factored):
                 return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
                         "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
                                         jnp.float32)}
@@ -165,12 +165,12 @@ def make_adafactor(cfg: AdafactorCfg) -> Optimizer:
         return {"f": jax.tree_util.tree_map(leaf, params),
                 "step": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params):
+    def update(grads, state, params, global_norm_fn=None):
         step = state["step"] + 1
+        gnorm = (global_norm_fn or global_norm)(grads)
         if cfg.clip_norm:
-            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
-        else:
-            gnorm = global_norm(grads)
+            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm,
+                                               norm=gnorm)
         t = step.astype(jnp.float32)
         beta2 = 1.0 - t ** (-cfg.decay)
         lr = _lr_at(cfg.lr, step)
@@ -217,8 +217,8 @@ def make_adafactor(cfg: AdafactorCfg) -> Optimizer:
             # vr drops the last axis of the spec, vc the second-to-last —
             # but only for leaves the init actually factors (shape-based).
             entries = tuple(spec)
-            factored = (_factored(p.shape) if p is not None
-                        else len(entries) >= 2)
+            factored = (_factored(p.shape, cfg.min_dim_factored)
+                        if p is not None else len(entries) >= 2)
             if factored:
                 while len(entries) < (len(p.shape) if p is not None else 2):
                     entries = entries + (None,)

@@ -37,6 +37,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.runtime import elastic, health, substrate
@@ -45,6 +46,25 @@ from repro.runtime.watchdog import StepWatchdog
 logger = logging.getLogger("repro.runtime")
 
 LOSE, GAIN, STALL = "lose", "gain", "stall"
+
+
+def _resize_1d_leaves(tree, abstract_tree):
+    """Truncate / zero-pad 1-D leaves to the abstract tree's lengths —
+    the live-re-mesh twin of ``restore_checkpoint(allow_resize_1d=True)``
+    for ZeRO states, whose flat padded leaves change global length with
+    the data-parallel size (layout is [logical values, trailing zeros],
+    so the resize only ever touches padding)."""
+    def leaf(x, ref):
+        if (getattr(ref, "ndim", None) == 1 and getattr(x, "ndim", None) == 1
+                and tuple(x.shape) != tuple(ref.shape)):
+            arr = np.asarray(jax.device_get(x))
+            n = int(ref.shape[0])
+            if n <= arr.shape[0]:
+                return arr[:n]
+            return np.concatenate(
+                [arr, np.zeros((n - arr.shape[0],), arr.dtype)])
+        return x
+    return jax.tree_util.tree_map(leaf, tree, abstract_tree)
 
 
 class DeviceLoss(RuntimeError):
@@ -189,6 +209,7 @@ class ElasticController:
                  comm=None,
                  ckpt_every: int = 10,
                  ckpt_keep: int = 3,
+                 ckpt_sharded: bool = False,
                  fault_plan: Optional[FaultPlan] = None,
                  max_recoveries: int = 8,
                  watchdog_timeout: float = 300.0,
@@ -212,7 +233,12 @@ class ElasticController:
         self.preemption = preemption
         self.on_step = on_step
         self.ckpt = CheckpointManager(ckpt_dir, every=ckpt_every,
-                                      keep=ckpt_keep)
+                                      keep=ckpt_keep, sharded=ckpt_sharded)
+        # ZeRO sessions: the state layout depends on the data-parallel
+        # size, so every abstract_state/state_specs call below is made
+        # against an explicit mesh and restores may resize 1-D leaves.
+        self._zero = bool(getattr(getattr(session, "cfg", None),
+                                  "zero", False))
         self.watchdog = StepWatchdog(
             timeout=watchdog_timeout, on_stall=self._on_stall,
             on_straggler=lambda beat, dt: self.report.stragglers.append(beat))
@@ -250,6 +276,20 @@ class ElasticController:
             n *= s
         return elastic.make_mesh_from_shape(shape, self._axis_names,
                                             devices=devs[:n])
+
+    # mesh-aware session views: only ZeRO sessions take (or need) mesh=,
+    # so plain sessions — including test doubles — keep the bare calls.
+    def _state_specs(self, mesh):
+        return (self.session.state_specs(mesh=mesh) if self._zero
+                else self.session.state_specs())
+
+    def _abstract_state(self, mesh):
+        return (self.session.abstract_state(mesh=mesh) if self._zero
+                else self.session.abstract_state())
+
+    def _init_state(self, rng, mesh):
+        return (self.session.init_state(rng, mesh=mesh) if self._zero
+                else self.session.init_state(rng))
 
     def _bind(self, mesh) -> None:
         """Bind every mesh-dependent piece: step fn, comm session (plan +
@@ -359,7 +399,10 @@ class ElasticController:
         self.ckpt.wait()
         new_mesh = self._planned_mesh()
         t0 = time.perf_counter()
-        self.state = elastic.remesh(self.state, self.session.state_specs(),
+        state = self.state
+        if self._zero:   # padded 1-D state leaves track the new DP size
+            state = _resize_1d_leaves(state, self._abstract_state(new_mesh))
+        self.state = elastic.remesh(state, self._state_specs(new_mesh),
                                     new_mesh)
         remesh_s = time.perf_counter() - t0
         rebuilt, replan_s = self._engine_reinit(new_mesh)
@@ -379,21 +422,23 @@ class ElasticController:
         before_shape = tuple(dict(self.mesh.shape).values())
         self.ckpt.wait()                       # drain any in-flight save
 
-        # (1) restore the latest atomic checkpoint (host-side arrays).
+        # (1) plan the survivors' mesh FIRST: a ZeRO restore needs the
+        # target data-parallel size to shape (and resize) the state.
+        new_mesh = self._planned_mesh()
+
+        # (2) restore the latest atomic checkpoint (host-side arrays).
         t0 = time.perf_counter()
         restored, rstep = self.ckpt.restore_latest(
-            self.session.abstract_state())
+            self._abstract_state(new_mesh),
+            allow_resize_1d=self._zero)
         restore_s = time.perf_counter() - t0
         if restored is None:                   # failed before any save
-            restored, rstep = self.session.init_state(
-                jax.random.PRNGKey(self.rng_seed)), 0
-
-        # (2) plan + build the survivors' mesh.
-        new_mesh = self._planned_mesh()
+            restored, rstep = self._init_state(
+                jax.random.PRNGKey(self.rng_seed), new_mesh), 0
 
         # (3) re-mesh the state onto it.
         t0 = time.perf_counter()
-        self.state = elastic.remesh(restored, self.session.state_specs(),
+        self.state = elastic.remesh(restored, self._state_specs(new_mesh),
                                     new_mesh)
         remesh_s = time.perf_counter() - t0
 
@@ -416,16 +461,17 @@ class ElasticController:
         with substrate.set_mesh(self.mesh):
             if self.state is None:
                 restored, rstep = self.ckpt.restore_latest(
-                    self.session.abstract_state())
+                    self._abstract_state(self.mesh),
+                    allow_resize_1d=self._zero)
                 if restored is not None:
                     self.state = elastic.remesh(
-                        restored, self.session.state_specs(), self.mesh)
+                        restored, self._state_specs(self.mesh), self.mesh)
                     step = rstep
                 else:
                     self.state = elastic.remesh(
-                        self.session.init_state(
-                            jax.random.PRNGKey(self.rng_seed)),
-                        self.session.state_specs(), self.mesh)
+                        self._init_state(jax.random.PRNGKey(self.rng_seed),
+                                         self.mesh),
+                        self._state_specs(self.mesh), self.mesh)
                     step = 0
                     self.ckpt.maybe_save(0, self.state, force=True)
             else:

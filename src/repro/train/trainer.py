@@ -52,6 +52,7 @@ from repro import comm as comm_mod
 from repro.core import plan as plan_mod
 from repro.core import schedule as schedule_mod
 from repro.core.compression import EFState, bucket_ef_zeros
+from repro.parallel.sharding import shard_hint
 from repro.runtime import substrate
 
 Params = Any
@@ -76,6 +77,30 @@ class TrainCfg:
     # bit-identity reference); >=3 adds per-stage progress() hops that
     # drain wait-phase stages of younger in-flight units early.
     overlap_depth: int = 2
+    # ZeRO-1: gradients sync with only the reduce-scatter half of the
+    # planned all-reduce, each data-parallel rank updates its shard of a
+    # data-axis-sharded optimizer state (1/N memory), and updated params
+    # all-gather back through the schedule IR.  Elementwise updates make
+    # losses bit-identical to the unsharded composed path at clip_norm=0
+    # on pow2 data-parallel sizes; elsewhere odd per-rank chunks drop the
+    # bidir-ring RS to plain ring, whose summation order differs from the
+    # all-reduce's in the last ulp.
+    zero: bool = False
+
+    def __post_init__(self):
+        if not self.zero:
+            return
+        if self.sync_mode != "composed":
+            raise ValueError(
+                f"zero=True shards the optimizer update on the planned "
+                f"all-reduce's RS/AG seam, which only the composed sync "
+                f"path exposes (compression's EF residual would defeat "
+                f"the sharding); got sync_mode={self.sync_mode!r}")
+        if self.bucket_grads:
+            raise ValueError(
+                "zero=True runs one RS/AG pair per parameter leaf — "
+                "fused buckets cross leaf boundaries and have no "
+                "per-param shard to update; disable bucket_grads")
 
 
 def _tree_size(tree) -> int:
@@ -98,16 +123,84 @@ def grad_bucket_plan(params, cfg: TrainCfg) -> tuple:
     return plan_mod.plan_buckets(_grad_structs(params, cfg), cfg.bucket_bytes)
 
 
+# ---------------------------------------------------------------------------
+# ZeRO-1 state layout (data-parallel-degree dependent, hence mesh=)
+# ---------------------------------------------------------------------------
+
+def zero_layout(cfg: TrainCfg, mesh) -> Tuple[str, int]:
+    """(axis, size) of the single data axis ZeRO-1 shards over."""
+    if mesh is None:
+        raise ValueError("zero=True makes the optimizer-state layout "
+                         "data-parallel-degree dependent; pass mesh=")
+    sizes = dict(mesh.shape)
+    axes = tuple(a for a in cfg.data_axes if a in sizes)
+    if len(axes) != 1:
+        raise ValueError(
+            f"zero=True shards optimizer state over exactly ONE data "
+            f"axis; cfg.data_axes={cfg.data_axes} resolves to {axes} on "
+            f"mesh axes {tuple(sizes)}")
+    return axes[0], int(sizes[axes[0]])
+
+
+def _zero_pad_len(n: int, p: int) -> int:
+    return ((int(n) + p - 1) // p) * p
+
+
+def _zero_flat_params(params, p: int, abstract: bool):
+    """The global ZeRO optimizer-state layout: each param leaf flattened
+    and zero-padded to a multiple of the data-parallel size — i.e. the
+    concatenation of the per-rank padded-flat chunks the RS protocols
+    produce, with all padding as TRAILING zeros (which is what makes
+    restore-time re-sharding onto a different survivor mesh a pure
+    truncate/re-pad)."""
+    def leaf(l):
+        n = _zero_pad_len(l.size, p)
+        if abstract:
+            return jax.ShapeDtypeStruct((n,), l.dtype)
+        return jnp.zeros((n,), l.dtype)
+    return jax.tree_util.tree_map(leaf, params)
+
+
+def _zero_chunk(x, p: int, idx):
+    """This rank's padded-flat chunk of ``x`` — the exact pad-and-split
+    layout the RS protocols use, so param chunks line up element-for-
+    element with the reduced grad chunks."""
+    flat = x.reshape(-1)
+    rem = (-flat.shape[0]) % p
+    if rem:
+        flat = jnp.concatenate([flat, jnp.zeros((rem,), flat.dtype)])
+    c = flat.shape[0] // p
+    return jax.lax.dynamic_slice_in_dim(flat, idx * c, c)
+
+
+def _zero_opt_specs(model, optimizer, cfg: TrainCfg, mesh):
+    """Optimizer-state specs for the ZeRO layout: every flat leaf sharded
+    over the data axis on dim 0 (the optimizer's own state_specs machinery
+    runs over the flat layout, so AdamW and Adafactor both land here —
+    1-D leaves take Adafactor's unfactored branch)."""
+    ax, zp = zero_layout(cfg, mesh)
+    params = model.abstract_params()
+    pspecs = jax.tree_util.tree_map(lambda _: P(ax), params)
+    return optimizer.state_specs(pspecs, _zero_flat_params(params, zp, True))
+
+
 def make_train_state(model, optimizer, rng=None, abstract: bool = False,
-                     cfg: TrainCfg = TrainCfg()):
-    """{"params", "opt", "step"[, "ef"]} pytree."""
+                     cfg: TrainCfg = TrainCfg(), mesh=None):
+    """{"params", "opt", "step"[, "ef"]} pytree.  With ``cfg.zero`` the
+    optimizer state is laid out over FLAT padded leaves (see
+    ``_zero_flat_params``) sharded on the data axis — ``mesh=`` is then
+    required because the padding depends on the data-parallel size."""
     if abstract:
         params = model.abstract_params()
-        opt = jax.eval_shape(optimizer.init, params)
+        opt_params = (_zero_flat_params(params, zero_layout(cfg, mesh)[1],
+                                        True) if cfg.zero else params)
+        opt = jax.eval_shape(optimizer.init, opt_params)
         step = jax.ShapeDtypeStruct((), jnp.int32)
     else:
         params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
-        opt = optimizer.init(params)
+        opt_params = (_zero_flat_params(params, zero_layout(cfg, mesh)[1],
+                                        False) if cfg.zero else params)
+        opt = optimizer.init(opt_params)
         step = jnp.zeros((), jnp.int32)
     state = {"params": params, "opt": opt, "step": step}
     if cfg.sync_mode == "compressed":
@@ -121,11 +214,13 @@ def make_train_state(model, optimizer, rng=None, abstract: bool = False,
     return state
 
 
-def state_specs(model, optimizer, cfg: TrainCfg = TrainCfg()
+def state_specs(model, optimizer, cfg: TrainCfg = TrainCfg(), mesh=None
                 ) -> Dict[str, Any]:
     ps = model.param_specs()
+    opt_specs = (_zero_opt_specs(model, optimizer, cfg, mesh) if cfg.zero
+                 else optimizer.state_specs(ps, model.abstract_params()))
     specs = {"params": ps,
-             "opt": optimizer.state_specs(ps, model.abstract_params()),
+             "opt": opt_specs,
              "step": P()}
     if cfg.sync_mode == "compressed":
         if cfg.bucket_grads:
@@ -395,6 +490,7 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
             return ({"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}, {"loss": loss, **om})
         train_step.schedule = None
+        train_step.ag_schedule = None
         train_step.schedule_pass_us = {}
         return train_step
 
@@ -446,7 +542,7 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
                 dcomm.persistent("all_reduce", (b.size,), b.wire_dtype,
                                  mean=True, sync_stats=True)
                 for b in buckets)
-    if overlap:
+    if overlap and not cfg.zero:
         # the work-unit layout is static in (param shapes, dtypes,
         # bucket_bytes), so the sync program is built + rewritten ONCE
         # here; every traced step executes the same schedule.
@@ -461,13 +557,138 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
         sched = _overlap_sync_schedule(dcomm, specs, compress, depth,
                                        compute=tags)
 
+    # ZeRO-1: two persistent arms per leaf (RS of the grad, AG of the
+    # updated param chunk) plus the two schedule-IR programs sequencing
+    # them.  All of it is static in (param shapes, dtypes, DP size), so
+    # it is built ONCE here; the optimizer update sits between the two
+    # programs, which is why they cannot be one schedule.
+    zero = bool(cfg.zero)
+    rs_handles = ag_handles = ()
+    rs_sched = ag_sched = None
+    zstate_specs = None
+    if zero:
+        zax, zp = zero_layout(cfg, mesh)
+        zcomm = axis_comms[0]            # == dcomm: single data axis
+        params_abs = model.abstract_params()
+        pleaves_abs = jax.tree_util.tree_leaves(params_abs)
+        gstructs = _grad_structs(params_abs, cfg)
+        chunk_sizes = [_zero_pad_len(g.size, zp) // zp for g in gstructs]
+        rs_handles = tuple(
+            zcomm.persistent("reduce_scatter", g.shape, g.dtype,
+                             mean=True, sync_stats=True, zero=True)
+            for g in gstructs)
+        ag_handles = tuple(
+            zcomm.persistent("all_gather", (csz,), l.dtype, zero=True)
+            for csz, l in zip(chunk_sizes, pleaves_abs))
+        rs_specs = [(f"leaf{i}", math.prod(g.shape), g.dtype)
+                    for i, g in enumerate(gstructs)]
+        ag_specs = [(f"param{i}", csz * zp, l.dtype)
+                    for i, (csz, l) in enumerate(zip(chunk_sizes,
+                                                     pleaves_abs))]
+        tags = (("peeled_microbatch", True),) if peel else ()
+        rs_sched = zcomm.zero_sync_schedule(rs_specs, kind="rs",
+                                            compute=tags)
+        # the AG's compute op models the NEXT step's forward: the
+        # interleave/hoist passes place AG starts before it so the
+        # gather drains under compute the model says is there.
+        ag_sched = zcomm.zero_sync_schedule(
+            ag_specs, kind="ag", compute=(("next_forward", True),))
+        if overlap:
+            rs_sched, rs_us = plan_mod.run_passes(
+                rs_sched, plan_mod.canonical_overlap_passes(depth))
+            ag_sched, ag_us = plan_mod.run_passes(
+                ag_sched, plan_mod.canonical_overlap_passes(depth))
+            rs_sched.meta["depth"] = ag_sched.meta["depth"] = depth
+            rs_sched.meta["pass_us"] = rs_us
+            ag_sched.meta["pass_us"] = ag_us
+        # optimizer state is data-axis sharded: its specs (not P()) go
+        # into the step's shard_map so each rank holds 1/N of it.  The
+        # substrate's spec trees are leaf-wise (no subtree prefixes), so
+        # the replicated params get a per-leaf P() tree.
+        zstate_specs = {"params": jax.tree_util.tree_map(lambda _: P(),
+                                                         params_abs),
+                        "opt": _zero_opt_specs(model, optimizer, cfg, mesh),
+                        "step": P()}
+
+    def _zero_inner(st, loss, grads):
+        """The ZeRO-1 step body (runs inside the manual shard_map):
+        RS-schedule the grads down to this rank's chunks, update the
+        local state shard, AG-schedule the new param chunks back up."""
+        gleaves, gdef = jax.tree_util.tree_flatten(grads)
+        chunks = [None] * len(gleaves)
+
+        def rs_start(u):
+            return rs_handles[u.index].start(gleaves[u.index])
+
+        def rs_progress(u, tok, stages):
+            rs_handles[u.index].progress(tok, stages)
+            return tok
+
+        def rs_wait(u, tok):
+            chunks[u.index] = rs_handles[u.index].wait(tok)
+            return chunks[u.index]
+
+        schedule_mod.execute(rs_sched, start=rs_start, wait=rs_wait,
+                             progress=rs_progress)
+        for acomm in axis_comms:
+            loss = acomm.all_reduce(loss)
+        loss = loss * dcomm.mean_scale()
+        # global grad norm from shard-local partial sums + ONE scalar
+        # all-reduce (the unsharded path reduces over full leaves; same
+        # value up to float summation order, so bit-identity of the
+        # LOSSES needs clip_norm=0, where the norm is metric-only).
+        sq = sum(jnp.sum(jnp.square(ch.astype(jnp.float32)))
+                 for ch in chunks)
+        gsq = zcomm.all_reduce(sq)
+
+        def gnorm_fn(_tree, _n=gsq):
+            return jnp.sqrt(_n)
+
+        idx = zcomm.axis_index()
+        pleaves = jax.tree_util.tree_leaves(st["params"])
+        # Re-constrain the param read replicated over the auto axes: the
+        # forward's activation hints shard some leaves (embed/lm_head/
+        # mlp/final-norm) over "model", and feeding those into the
+        # pad/slice/all-gather chain unconstrained miscompiles under the
+        # legacy partitioner (see substrate._vmap_shard_map).
+        pchunks = [_zero_chunk(shard_hint(l, P()), zp, idx)
+                   for l in pleaves]
+        new_pc, new_opt, om = optimizer.update(
+            jax.tree_util.tree_unflatten(gdef, chunks), st["opt"],
+            jax.tree_util.tree_unflatten(gdef, pchunks),
+            global_norm_fn=gnorm_fn)
+        npc = jax.tree_util.tree_leaves(new_pc)
+        fulls = [None] * len(pleaves)
+
+        def ag_start(u):
+            return ag_handles[u.index].start(npc[u.index])
+
+        def ag_progress(u, tok, stages):
+            ag_handles[u.index].progress(tok, stages)
+            return tok
+
+        def ag_wait(u, tok):
+            y = ag_handles[u.index].wait(tok)
+            ref = pleaves[u.index]
+            fulls[u.index] = shard_hint(y[:ref.size].reshape(ref.shape),
+                                        P())
+            return fulls[u.index]
+
+        schedule_mod.execute(ag_sched, start=ag_start, wait=ag_wait,
+                             progress=ag_progress)
+        new_params = jax.tree_util.tree_unflatten(gdef, fulls)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": st["step"] + 1}, {"loss": loss, **om})
+
     def train_step(state, batch):
         bspecs = batch_specs(batch, data_axes)
 
+        st_specs = zstate_specs if zero else P()
+
         @functools.partial(
             substrate.shard_map, mesh=mesh,
-            in_specs=(P(), bspecs),
-            out_specs=(P(), P()),
+            in_specs=(st_specs, bspecs),
+            out_specs=(st_specs, P()),
             axis_names=manual, check_vma=False)
         def inner(st, local_batch):
             # overlap: peel the last microbatch out of the scan so the
@@ -475,6 +696,8 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
             loss, grads = _accumulate_grads(
                 loss_fn, st["params"], local_batch, cfg.microbatches,
                 cfg.grad_dtype, peel_last=peel)
+            if zero:
+                return _zero_inner(st, loss, grads)
             ef = st.get("ef")
             if cfg.bucket_grads:
                 if overlap:
@@ -505,9 +728,13 @@ def make_train_step(model, optimizer, cfg: TrainCfg = TrainCfg(),
         return inner(state, batch)
 
     # introspection: the executed sync program + per-pass rewrite timings
-    train_step.schedule = sched
-    train_step.schedule_pass_us = (dict(sched.meta.get("pass_us", {}))
-                                   if sched is not None else {})
+    # (zero mode runs TWO programs; .schedule is the RS half, the AG half
+    # hangs off .ag_schedule)
+    active = rs_sched if zero else sched
+    train_step.schedule = active
+    train_step.ag_schedule = ag_sched
+    train_step.schedule_pass_us = (dict(active.meta.get("pass_us", {}))
+                                   if active is not None else {})
     return train_step
 
 
@@ -531,16 +758,18 @@ class TrainSession:
     optimizer: Any
     cfg: TrainCfg = TrainCfg()
 
-    def state_specs(self) -> Dict[str, Any]:
-        return state_specs(self.model, self.optimizer, self.cfg)
+    def state_specs(self, mesh=None) -> Dict[str, Any]:
+        """``mesh=`` is required with ``cfg.zero`` (state layout depends
+        on the data-parallel size) and ignored otherwise."""
+        return state_specs(self.model, self.optimizer, self.cfg, mesh=mesh)
 
-    def abstract_state(self):
+    def abstract_state(self, mesh=None):
         return make_train_state(self.model, self.optimizer, abstract=True,
-                                cfg=self.cfg)
+                                cfg=self.cfg, mesh=mesh)
 
-    def init_state(self, rng=None):
+    def init_state(self, rng=None, mesh=None):
         return make_train_state(self.model, self.optimizer, rng,
-                                cfg=self.cfg)
+                                cfg=self.cfg, mesh=mesh)
 
     def step_fn(self, mesh=None, engine=None,
                 comm: Optional["comm_mod.Communicator"] = None) -> Callable:
