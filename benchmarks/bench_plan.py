@@ -226,6 +226,15 @@ def run(smoke: bool = False):
            f"{sv['p99_ttft_s'] * 1e3:.0f} ms")
     t6.add("recovery (drain+remesh+rebuild rehearsal)",
            f"{sv['recovery_s'] * 1e3:.0f} ms")
+    t6.add("cache bytes resident/contiguous (paged pool)",
+           f"{sv['cache_resident_bytes']:,d} / "
+           f"{sv['cache_contiguous_bytes']:,d}")
+    t6.add("re-mesh snapshot bytes paged/contiguous",
+           f"{sv['snapshot_bytes']:,d} / "
+           f"{sv['snapshot_bytes_contiguous']:,d}")
+    t6.add("mixed-prompt p50 TTFT chunked on/off",
+           f"{sv['p50_ttft_chunked_s'] * 1e3:.0f} / "
+           f"{sv['p50_ttft_oneshot_s'] * 1e3:.0f} ms")
     z = p["zero"]
     t7 = Table("bench_plan: ZeRO-1 on the RS/AG seam "
                f"(DP={P}, adamw)", ["metric", "value"])

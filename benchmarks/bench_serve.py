@@ -1,5 +1,6 @@
-"""Serving bench: throughput, admission-to-first-token latency, and
-elastic recovery latency for the ``serve`` block of ``BENCH_plan.json``.
+"""Serving bench: throughput, admission-to-first-token latency, paged
+KV-cache residency, and elastic recovery latency for the ``serve`` block
+of ``BENCH_plan.json``.
 
 Runs the continuous-batching scheduler on a reduced decoder under a
 ``repro.comm`` session, measures tokens/s and per-request TTFT from the
@@ -8,6 +9,13 @@ rehearse_recovery()`` — the REAL drain -> snapshot -> re-mesh -> rebuild
 -> re-admit machinery fired over the current healthy set — for the
 recovery-seconds number (a smoke run on one host device cannot lose a
 device, and a rehearsal exercises the identical code path).
+
+PR 9 additions: the pool's page-granular accounting (peak cache bytes
+resident vs what the contiguous ``batch x max_len`` layout would pin),
+the snapshot bytes a re-mesh actually moves (live pages, not full rows),
+and TTFT under a mixed long/short prompt workload with chunked prefill
+on vs off — the long prompts stall admission one-shot but interleave
+page-sized chunks with decode when chunking is on.
 """
 
 from __future__ import annotations
@@ -28,6 +36,36 @@ def _percentile(sorted_vals, q: float) -> float:
     return float(sorted_vals[idx])
 
 
+def _mixed_prompts(rng, n: int, max_len: int, max_new: int):
+    """Alternating long/short prompts: the chunked-prefill stressor."""
+    out = []
+    for i in range(n):
+        size = (max_len - max_new - 2) if i % 2 == 0 else rng.randint(3, 6)
+        out.append(rng.randint(0, 64, size=size).tolist())
+    return out
+
+
+def _mixed_ttft(model, params, scfg, session, prompts, max_new: int,
+                chunked: bool):
+    """Run the mixed workload on a fresh scheduler; returns (sorted ttft
+    list, peak resident bytes, contiguous bytes)."""
+    import dataclasses
+
+    from repro.serve import BatchScheduler, Request
+
+    cfg = dataclasses.replace(scfg, chunked_prefill=chunked)
+    sched = BatchScheduler(model, params, cfg, comm=session.world)
+    for rid, p in enumerate(prompts):
+        sched.submit(Request(rid=rid, prompt=list(p), max_new=max_new))
+    peak = sched.pool.resident_bytes()
+    while sched.pending():
+        sched.step()
+        peak = max(peak, sched.pool.resident_bytes())
+    ttft = sorted(r.ttft_s for r in sched.completed
+                  if r.ttft_s is not None)
+    return ttft, peak, sched.pool.contiguous_bytes()
+
+
 def serve_metrics(smoke: bool = True) -> dict:
     from repro import comm as comm_mod
     from repro.configs import get_config
@@ -43,7 +81,7 @@ def serve_metrics(smoke: bool = True) -> dict:
     n_requests = 8 if smoke else 24
     max_new = 6 if smoke else 16
     scfg = ServeCfg(max_len=64 if smoke else 128, batch=4,
-                    cache_dtype=jax.numpy.float32)
+                    cache_dtype=jax.numpy.float32, page_tokens=8)
     ctl = ServeController(model, params, scfg, comm=session.world)
     rng = np.random.RandomState(0)
 
@@ -60,6 +98,7 @@ def serve_metrics(smoke: bool = True) -> dict:
     ttft = report.ttft_s()
 
     # Recovery: fire-drill the full lifecycle with requests in flight.
+    # Paged drain — the snapshot moves live pages, not max_len rows.
     for rid in range(n_requests, n_requests + 3):
         ctl.submit(Request(
             rid=rid,
@@ -69,10 +108,19 @@ def serve_metrics(smoke: bool = True) -> dict:
     rec = ctl.rehearse_recovery()
     ctl.run()
 
+    # Mixed long/short prompts: chunked prefill on vs off, plus the
+    # pool's peak page residency vs the contiguous layout.
+    prompts = _mixed_prompts(rng, n_requests, scfg.max_len, max_new)
+    ttft_on, peak_on, contiguous = _mixed_ttft(
+        model, params, scfg, session, prompts, max_new, chunked=True)
+    ttft_off, _, _ = _mixed_ttft(
+        model, params, scfg, session, prompts, max_new, chunked=False)
+
     return {
         "arch": cfg.name,
         "n_requests": n_requests,
         "batch": scfg.batch,
+        "page_tokens": scfg.page_tokens,
         "tokens_per_s": tokens / wall_s if wall_s > 0 else 0.0,
         "p50_ttft_s": _percentile(ttft, 0.50),
         "p99_ttft_s": _percentile(ttft, 0.99),
@@ -81,13 +129,22 @@ def serve_metrics(smoke: bool = True) -> dict:
         "recovery_remesh_s": rec.remesh_s,
         "recovery_rebuild_s": rec.rebuild_s,
         "recovery_resumed": rec.resumed,
+        "snapshot_bytes": rec.snapshot_bytes,
+        "snapshot_bytes_contiguous": rec.snapshot_bytes_contiguous,
+        "cache_resident_bytes": peak_on,
+        "cache_contiguous_bytes": contiguous,
+        "p50_ttft_chunked_s": _percentile(ttft_on, 0.50),
+        "p99_ttft_chunked_s": _percentile(ttft_on, 0.99),
+        "p50_ttft_oneshot_s": _percentile(ttft_off, 0.50),
+        "p99_ttft_oneshot_s": _percentile(ttft_off, 0.99),
     }
 
 
 def run(smoke: bool = True):
     m = serve_metrics(smoke=smoke)
     t = Table(f"bench_serve: elastic serving ({m['arch']}, "
-              f"{m['n_requests']} requests, {m['batch']} slots)",
+              f"{m['n_requests']} requests, {m['batch']} slots, "
+              f"{m['page_tokens']}-token pages)",
               ["metric", "value"])
     t.add("throughput", f"{m['tokens_per_s']:.1f} tok/s")
     t.add("p50 admission-to-first-token", f"{m['p50_ttft_s'] * 1e3:.0f} ms")
@@ -97,6 +154,17 @@ def run(smoke: bool = True):
           f"{m['recovery_snapshot_s'] * 1e3:.0f} snap + "
           f"{m['recovery_remesh_s'] * 1e3:.0f} remesh + "
           f"{m['recovery_rebuild_s'] * 1e3:.0f} rebuild")
+    t.add("re-mesh snapshot bytes (paged vs contiguous)",
+          f"{m['snapshot_bytes']:,d} / {m['snapshot_bytes_contiguous']:,d}")
+    t.add("peak cache bytes resident (paged vs contiguous)",
+          f"{m['cache_resident_bytes']:,d} / "
+          f"{m['cache_contiguous_bytes']:,d}")
+    t.add("mixed-prompt p50/p99 TTFT, chunked prefill ON",
+          f"{m['p50_ttft_chunked_s'] * 1e3:.0f} / "
+          f"{m['p99_ttft_chunked_s'] * 1e3:.0f} ms")
+    t.add("mixed-prompt p50/p99 TTFT, chunked prefill OFF",
+          f"{m['p50_ttft_oneshot_s'] * 1e3:.0f} / "
+          f"{m['p99_ttft_oneshot_s'] * 1e3:.0f} ms")
     return t, m
 
 

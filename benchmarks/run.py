@@ -35,7 +35,11 @@ REQUIRED_KEYS = {
     "schedule": ("depth", "pass_us", "predicted_phase_bytes",
                  "measured_phase_bytes", "exposed_comm_frac_depth2",
                  "exposed_comm_frac_depthN"),
-    "serve": ("tokens_per_s", "p50_ttft_s", "p99_ttft_s", "recovery_s"),
+    "serve": ("tokens_per_s", "p50_ttft_s", "p99_ttft_s", "recovery_s",
+              "cache_resident_bytes", "cache_contiguous_bytes",
+              "snapshot_bytes", "snapshot_bytes_contiguous",
+              "p50_ttft_chunked_s", "p99_ttft_chunked_s",
+              "p50_ttft_oneshot_s", "p99_ttft_oneshot_s"),
     "zero": ("opt_state_bytes_per_device_unsharded",
              "opt_state_bytes_per_device_sharded", "state_shrink_x",
              "grad_sync_wire_bytes_allreduce",

@@ -71,6 +71,41 @@ def main():
           f"{rec.rebuild_s * 1e3:.0f}ms -> {rec.total_s * 1e3:.0f}ms; "
           f"resumed={rec.resumed} in-flight bit-identically")
 
+    # --- paged KV cache + chunked prefill (PR 9) ------------------------
+    # One LONG prompt next to short ones: one-shot prefill would stall
+    # every slot while the long prompt runs; chunked prefill feeds it to
+    # the pool one page (16 tokens here) per step, interleaved with the
+    # short requests' decode.  The pool backs each request with only the
+    # pages its tokens occupy — resident bytes track generated length,
+    # not batch * max_len — and the streams are bit-identical to the
+    # one-shot path (chunking never shows up in the tokens).
+    from repro.serve import BatchScheduler
+
+    scfg = ServeCfg(max_len=96, batch=4, cache_dtype=jnp.float32,
+                    page_tokens=16, chunked_prefill=True)
+    sched = BatchScheduler(model, params, scfg, comm=comm)
+    long_prompt = rng.randint(0, cfg.vocab_size, size=70).tolist()
+    sched.submit(Request(rid=0, prompt=long_prompt, max_new=8))
+    for rid in range(1, 4):
+        sched.submit(Request(rid=rid,
+                             prompt=rng.randint(0, cfg.vocab_size,
+                                                size=5).tolist(),
+                             max_new=8))
+    pool = sched.pool
+    steps_while_prefilling = 0
+    peak = pool.resident_bytes()
+    while sched.pending():
+        sched.step()
+        peak = max(peak, pool.resident_bytes())
+        if 0 in sched._prefills:
+            steps_while_prefilling += 1
+    print(f"[paged + chunked prefill] 70-token prompt prefilled in "
+          f"{-(-70 // scfg.page_tokens)} page chunks while short requests "
+          f"decoded ({steps_while_prefilling} interleaved steps); pool "
+          f"{pool.pages_total} pages x {pool.page_tokens} tokens, peak "
+          f"resident {peak:,d} B vs contiguous "
+          f"{pool.contiguous_bytes():,d} B")
+
     # --- MLA absorbed-decode (compressed KV cache) ----------------------
     cfg = get_config("deepseek-v3-671b", reduced=True)
     model = build_model(cfg)

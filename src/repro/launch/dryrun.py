@@ -35,6 +35,7 @@ from repro.models.encdec import EncDecCfg
 from repro.optim import make_optimizer
 from repro.parallel.sharding import filter_spec, named_shardings
 from repro.runtime import substrate
+from repro.serve import paging
 from repro.train import trainer
 
 HBM_PER_CHIP = 16 * 1024 ** 3          # v5e-class
@@ -198,12 +199,9 @@ def serve_cache_shardings(model, mesh, batch: int, max_len: int,
     divide (batch=1 long-context, kv_heads < model), the sequence dim is
     sharded instead (context-parallel cache)."""
     specs = model.cache_specs()
-    abstract = jax.eval_shape(
-        lambda: model.init_caches(batch, max_len, enc_len=enc_len,
-                                  dtype=jnp.bfloat16)) \
-        if model.kind == "encdec" else \
-        jax.eval_shape(lambda: model.init_caches(batch, max_len,
-                                                 dtype=jnp.bfloat16))
+    abstract = paging.abstract_caches(
+        model, batch, max_len, dtype=jnp.bfloat16,
+        enc_len=enc_len if model.kind == "encdec" else 0)
 
     mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
@@ -352,14 +350,12 @@ def build_prefill_cell(arch_id: str, shape_name: str, mesh) -> Cell:
         mesh, fit_spec(P(("pod", "data"), "model"),
                        (b, cfg.vocab_size), mesh))
 
-    if model.kind == "encdec":
-        def fn(p, bt):
-            caches = model.init_caches(b, s, enc_len=s, dtype=jnp.bfloat16)
-            return model.prefill(p, bt, caches)
-    else:
-        def fn(p, bt):
-            caches = model.init_caches(b, s, dtype=jnp.bfloat16)
-            return model.prefill(p, bt, caches)
+    el = s if model.kind == "encdec" else 0
+
+    def fn(p, bt):
+        caches = paging.contiguous_caches(model, b, s, dtype=jnp.bfloat16,
+                                          enc_len=el)
+        return model.prefill(p, bt, caches)
 
     return Cell(fn=fn, args=(params, batch),
                 in_shardings=(params_sh, batch_sh),

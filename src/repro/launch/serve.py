@@ -40,6 +40,16 @@ def main() -> None:
                     help="sampling seed (ServeCfg.seed)")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="admission-control backlog bound (shed beyond)")
+    ap.add_argument("--page-tokens", type=int, default=None,
+                    help="KV page size (pow2 dividing max-len; equal to "
+                         "max-len = contiguous layout; default auto)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="page-pool capacity (default batch*max_len/"
+                         "page_tokens; smaller values overcommit and "
+                         "exercise preemption)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="run prompts one-shot at admission instead of "
+                         "page-sized chunks interleaved with decode")
     ap.add_argument("--elastic", action="store_true",
                     help="supervise with ServeController (drain/re-mesh/"
                          "re-admit on device loss)")
@@ -69,7 +79,10 @@ def main() -> None:
 
     scfg = ServeCfg(max_len=args.max_len, batch=args.batch,
                     cache_dtype=jax.numpy.float32, seed=args.seed,
-                    max_queue=args.max_queue)
+                    max_queue=args.max_queue,
+                    page_tokens=args.page_tokens,
+                    pool_pages=args.pool_pages,
+                    chunked_prefill=not args.no_chunked_prefill)
     rng = np.random.RandomState(0)
     requests = [
         Request(rid=rid,
@@ -91,13 +104,19 @@ def main() -> None:
             ctl.submit(req)
         report = ctl.run()
         done, shed = report.completed, report.shed
+        pool = ctl.sched.pool
         logger.info("%s", report.describe())
     else:
         sched = BatchScheduler(model, params, scfg, comm=session.world)
         for req in requests:
             sched.submit(req)
         done, shed = sched.run(), sched.shed
+        pool = sched.pool
     dt = time.time() - t0
+    logger.info("page pool: %d-token pages, %d/%d allocated at exit, "
+                "%d bytes resident (contiguous layout: %d)",
+                pool.page_tokens, pool.pages_allocated, pool.pages_total,
+                pool.resident_bytes(), pool.contiguous_bytes())
     total_tokens = sum(len(r.generated) for r in done)
     logger.info("served %d requests (%d shed), %d tokens in %.2fs "
                 "(%.1f tok/s)", len(done), len(shed), total_tokens, dt,

@@ -296,6 +296,35 @@ def _flash_vjp(causal: bool, q_offset: int, block_k: int, scale: float):
     return attn
 
 
+def chunk_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                    q_pos: jax.Array, sm_scale: float | None = None
+                    ) -> jax.Array:
+    """Chunked-prefill attention: a chunk of queries against the FULL
+    cache (prior chunks + this one already written), causal-masked by
+    absolute position.
+
+    q: (B, Sq, H, D); caches: (B, Smax, Hkv, D); q_pos: (B, Sq) absolute
+    positions of the queries.  Unlike ``flash_attention_jnp`` the offset
+    is a *traced* value — one trace serves every chunk index, which is
+    what bounds the serving tier's prefill trace count.  Cache positions
+    above a query (pad tail, unwritten pages) are causal-masked, so
+    page-pool garbage never leaks into the softmax.  Serving chunks are
+    page-sized, so the (Sq, Smax) score tensor stays small.
+    """
+    b, sq, h, d = q.shape
+    _, smax, hkv, _ = k_cache.shape
+    group = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, hkv, group, d).astype(jnp.float32) * scale
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kf)       # (B,Sq,Hkv,G,Smax)
+    mask = jnp.arange(smax)[None, None, :] <= q_pos[:, :, None]
+    s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      kv_len: jax.Array, sm_scale: float | None = None
                      ) -> jax.Array:
@@ -395,8 +424,17 @@ def attention_forward(params: Params, cfg: AttentionCfg, x: jax.Array, *,
                       positions: Optional[jax.Array] = None,
                       q_offset=0,
                       kv_cache: Optional[Dict[str, jax.Array]] = None,
-                      block_k: int = 512) -> Tuple[jax.Array, Optional[Dict]]:
-    """Full-sequence (train/prefill) path.  Returns (out, new_cache)."""
+                      block_k: int = 512, chunked: bool = False,
+                      valid_len: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence (train/prefill) path.  Returns (out, new_cache).
+
+    ``chunked=True`` is the paged-prefill variant: ``q_offset`` may be a
+    TRACED chunk offset, queries attend the whole cache through
+    ``chunk_attention`` (earlier chunks included), and ``valid_len``
+    clamps the length counter so a chunk right-padded to the page
+    boundary doesn't count its pad positions.
+    """
     b, sq, _ = x.shape
     q, k, v = _project_qkv(params, cfg, x)
     if positions is None:
@@ -406,15 +444,25 @@ def attention_forward(params: Params, cfg: AttentionCfg, x: jax.Array, *,
     k = apply_rope(k, cos, sin)
     new_cache = None
     if kv_cache is not None:
+        new_len = kv_cache["len"] + sq
+        if valid_len is not None:
+            new_len = jnp.minimum(new_len, valid_len)
         new_cache = {
             "k": jax.lax.dynamic_update_slice_in_dim(
                 kv_cache["k"], k.astype(kv_cache["k"].dtype), q_offset, 1),
             "v": jax.lax.dynamic_update_slice_in_dim(
                 kv_cache["v"], v.astype(kv_cache["v"].dtype), q_offset, 1),
-            "len": kv_cache["len"] + sq,
+            "len": new_len,
         }
-    out = flash_attention_jnp(q, k, v, causal=cfg.causal, q_offset=q_offset,
-                              block_k=block_k)
+    if chunked:
+        assert new_cache is not None, "chunked prefill needs a cache"
+        q_pos = jnp.arange(sq)[None, :] + jnp.asarray(q_offset).reshape(
+            (1, 1))
+        q_pos = jnp.broadcast_to(q_pos, (b, sq))
+        out = chunk_attention(q, new_cache["k"], new_cache["v"], q_pos)
+    else:
+        out = flash_attention_jnp(q, k, v, causal=cfg.causal,
+                                  q_offset=q_offset, block_k=block_k)
     out = out.reshape(b, sq, cfg.num_heads * cfg.head_dim)
     return out @ params["wo"], new_cache
 

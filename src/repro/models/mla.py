@@ -93,9 +93,17 @@ def _latent_kv(params, cfg: MLACfg, x, cos, sin):
 def mla_forward(params, cfg: MLACfg, x: jax.Array, *,
                 positions: Optional[jax.Array] = None, q_offset=0,
                 kv_cache: Optional[Dict[str, jax.Array]] = None,
-                block_k: int = 512) -> Tuple[jax.Array, Optional[Dict]]:
+                block_k: int = 512, chunked: bool = False,
+                valid_len: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
     """Train/prefill path: materialize per-head K/V from the latent and run
-    blockwise attention (dh_qk scores, dh_v values)."""
+    blockwise attention (dh_qk scores, dh_v values).
+
+    ``chunked=True`` (paged prefill): ``q_offset`` may be traced; the
+    chunk attends the full latent cache in the *absorbed* formulation
+    (same math as ``mla_decode``, Sq queries at once) under an absolute
+    causal mask, and ``valid_len`` clamps the length counter for chunks
+    right-padded to the page boundary."""
     b, s, _ = x.shape
     H = cfg.num_heads
     if positions is None:
@@ -104,15 +112,11 @@ def mla_forward(params, cfg: MLACfg, x: jax.Array, *,
     q_nope, q_rope = _project_q(params, cfg, x, cos, sin)
     ckv, krope = _latent_kv(params, cfg, x, cos, sin)
 
-    kv = (ckv @ params["w_ukv"]).reshape(b, s, H, cfg.dh_nope + cfg.dh_v)
-    k_nope, v = kv[..., :cfg.dh_nope], kv[..., cfg.dh_nope:]
-    k = jnp.concatenate(
-        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
-                                  (b, s, H, cfg.dh_rope))], axis=-1)
-    q = jnp.concatenate([q_nope, q_rope], axis=-1)
-
     new_cache = None
     if kv_cache is not None:
+        new_len = kv_cache["len"] + s
+        if valid_len is not None:
+            new_len = jnp.minimum(new_len, valid_len)
         new_cache = {
             "ckv": jax.lax.dynamic_update_slice_in_dim(
                 kv_cache["ckv"], ckv.astype(kv_cache["ckv"].dtype),
@@ -120,13 +124,54 @@ def mla_forward(params, cfg: MLACfg, x: jax.Array, *,
             "krope": jax.lax.dynamic_update_slice_in_dim(
                 kv_cache["krope"], krope.astype(kv_cache["krope"].dtype),
                 q_offset, 1),
-            "len": kv_cache["len"] + s,
+            "len": new_len,
         }
+
+    if chunked:
+        assert new_cache is not None, "chunked MLA prefill needs a cache"
+        out = _absorbed_attention(params, cfg, q_nope, q_rope,
+                                  new_cache["ckv"], new_cache["krope"],
+                                  positions)
+        return out.astype(x.dtype) @ params["w_o"], new_cache
+
+    kv = (ckv @ params["w_ukv"]).reshape(b, s, H, cfg.dh_nope + cfg.dh_v)
+    k_nope, v = kv[..., :cfg.dh_nope], kv[..., cfg.dh_nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  (b, s, H, cfg.dh_rope))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
     out = L.flash_attention_jnp(q, k, v, causal=True, q_offset=q_offset,
                                 block_k=block_k,
                                 sm_scale=1.0 / math.sqrt(cfg.dh_qk))
     out = out.reshape(b, s, H * cfg.dh_v)
     return out @ params["w_o"], new_cache
+
+
+def _absorbed_attention(params, cfg: MLACfg, q_nope, q_rope, ckv_c, kr_c,
+                        q_pos):
+    """Absorbed attention for Sq queries over the full latent cache with
+    an absolute-position causal mask (``mla_decode`` generalized to
+    chunks; cache positions above a query are masked, so unwritten pool
+    pages never contribute)."""
+    b, sq = q_nope.shape[:2]
+    H = cfg.num_heads
+    smax = ckv_c.shape[1]
+    w_ukv = params["w_ukv"].reshape(cfg.kv_lora, H, cfg.dh_nope + cfg.dh_v)
+    w_uk = w_ukv[..., :cfg.dh_nope]
+    w_uv = w_ukv[..., cfg.dh_nope:]
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))           # (B,Sq,H,kv_lora)
+    scale = 1.0 / math.sqrt(cfg.dh_qk)
+    s_nope = jnp.einsum("bqhl,bkl->bhqk", q_lat, ckv_c.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        kr_c.astype(jnp.float32))
+    s = (s_nope + s_rope) * scale                          # (B,H,Sq,Smax)
+    mask = jnp.arange(smax)[None, None, :] <= q_pos[:, :, None]  # (B,Sq,Smax)
+    s = jnp.where(mask[:, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhqk,bkl->bqhl", p, ckv_c.astype(jnp.float32))
+    out = jnp.einsum("bqhl,lhd->bqhd", out_lat, w_uv.astype(jnp.float32))
+    return out.reshape(b, sq, H * cfg.dh_v)
 
 
 def mla_decode(params, cfg: MLACfg, x: jax.Array,

@@ -92,6 +92,33 @@ class Model:
         logits = T._unembed(params, self.cfg, h[:, -1:])
         return logits[:, 0], new_caches
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Whether every mixer has an absolute-position chunked prefill
+        path (attn/mla).  Mamba's recurrent state is value-dependent, so
+        a right-padded chunk would corrupt it — those models (and the
+        enc-dec stack) prefill one-shot."""
+        if self.kind == "encdec":
+            return False
+        return all(spec.mixer in ("attn", "mla")
+                   for st in self.cfg.stages for spec in st.layers)
+
+    def prefill_chunk(self, params: Params, batch: Dict[str, jax.Array],
+                      caches: Params, *, q_offset, valid_len, last_index
+                      ) -> Tuple[jax.Array, Params]:
+        """One page-sized prefill chunk at TRACED ``q_offset`` (chunk
+        index never forces a retrace).  The chunk is right-padded to the
+        page boundary; ``valid_len`` clamps the cache length counters so
+        pad positions don't count, and ``last_index`` (chunk-local, also
+        traced) picks which position's logits to return — meaningful on
+        the final chunk, where it is the prompt's last real token."""
+        h, new_caches, _ = T.forward(
+            params, self.cfg, batch, caches=caches, q_offset=q_offset,
+            decode=False, chunked=True, valid_len=valid_len)
+        h_last = jax.lax.dynamic_slice_in_dim(h, last_index, 1, axis=1)
+        logits = T._unembed(params, self.cfg, h_last)
+        return logits[:, 0], new_caches
+
     def decode_step(self, params: Params, batch: Dict[str, jax.Array],
                     caches: Params) -> Tuple[jax.Array, Params]:
         """One token for every sequence.  batch: {"tokens": (B, 1)} or

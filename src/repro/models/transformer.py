@@ -129,7 +129,8 @@ def _mixer_cache_specs(cfg: TransformerCfg, spec: LayerSpec):
 
 def apply_layer(params: Params, cfg: TransformerCfg, spec: LayerSpec,
                 x: jax.Array, *, positions=None, q_offset=0,
-                cache: Optional[Params] = None, decode: bool = False
+                cache: Optional[Params] = None, decode: bool = False,
+                chunked: bool = False, valid_len=None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x_out, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -143,15 +144,22 @@ def apply_layer(params: Params, cfg: TransformerCfg, spec: LayerSpec,
         else:
             out, new_cache = L.attention_forward(
                 params["attn"], cfg.attn, h, positions=positions,
-                q_offset=q_offset, kv_cache=cache, block_k=cfg.block_k)
+                q_offset=q_offset, kv_cache=cache, block_k=cfg.block_k,
+                chunked=chunked, valid_len=valid_len)
     elif spec.mixer == "mla":
         if decode:
             out, new_cache = MLA.mla_decode(params["mla"], cfg.mla, h, cache)
         else:
             out, new_cache = MLA.mla_forward(
                 params["mla"], cfg.mla, h, positions=positions,
-                q_offset=q_offset, kv_cache=cache, block_k=cfg.block_k)
+                q_offset=q_offset, kv_cache=cache, block_k=cfg.block_k,
+                chunked=chunked, valid_len=valid_len)
     else:
+        if chunked:
+            raise ValueError(
+                "mamba mixers have value-dependent recurrent state and "
+                "no chunked-prefill path (Model.supports_chunked_prefill "
+                "gates this)")
         if decode:
             out, new_cache = M.mamba_decode(params["mamba"], cfg.mamba, h,
                                             cache)
@@ -192,7 +200,8 @@ def init_stage(key, cfg: TransformerCfg, stage: StageSpec):
 
 def apply_stage(params_stage: Params, cfg: TransformerCfg, stage: StageSpec,
                 x: jax.Array, *, positions=None, q_offset=0,
-                caches: Optional[Params] = None, decode: bool = False
+                caches: Optional[Params] = None, decode: bool = False,
+                chunked: bool = False, valid_len=None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Scan the stage's ``repeat`` super-blocks.  ``caches``: stacked cache
     pytree with leading dim = repeat (or None)."""
@@ -206,7 +215,7 @@ def apply_stage(params_stage: Params, cfg: TransformerCfg, stage: StageSpec,
             x, nc, aux = apply_layer(
                 layer_params[f"layer{i}"], cfg, spec, x,
                 positions=positions, q_offset=q_offset, cache=cache_i,
-                decode=decode)
+                decode=decode, chunked=chunked, valid_len=valid_len)
             if new_caches is not None:
                 new_caches[f"layer{i}"] = nc
             aux_total = aux_total + aux
@@ -277,7 +286,7 @@ def _unembed(params, cfg: TransformerCfg, h: jax.Array) -> jax.Array:
 
 def forward(params: Params, cfg: TransformerCfg, batch: Dict[str, jax.Array],
             *, caches: Optional[Params] = None, q_offset=0,
-            decode: bool = False
+            decode: bool = False, chunked: bool = False, valid_len=None
             ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (hidden (B,S,D), new_caches, aux_loss)."""
     h = _embed(params, cfg, batch)
@@ -289,7 +298,7 @@ def forward(params: Params, cfg: TransformerCfg, batch: Dict[str, jax.Array],
         h, nc, aux = apply_stage(
             params[f"stage{i}"], cfg, cfg.stages[i], h,
             positions=positions, q_offset=q_offset, caches=cache_i,
-            decode=decode)
+            decode=decode, chunked=chunked, valid_len=valid_len)
         if new_caches is not None:
             new_caches[f"stage{i}"] = nc
         aux_total = aux_total + aux

@@ -3,11 +3,14 @@ from repro.serve.controller import (ServeController, ServeRecovery,
 from repro.serve.engine import (BatchScheduler, Request, ServeCfg,
                                 extract_cache, generate, make_decode_step,
                                 make_prefill_step, splice_cache)
+from repro.serve.paging import (OutOfPages, PagePool, PageTable,
+                                RequestCache, resolve_page_tokens)
 from repro.serve.state import (SchedulerSnapshot, SlotSnapshot,
                                load_snapshot, save_snapshot)
 
-__all__ = ["BatchScheduler", "Request", "ServeCfg", "ServeController",
+__all__ = ["BatchScheduler", "OutOfPages", "PagePool", "PageTable",
+           "Request", "RequestCache", "ServeCfg", "ServeController",
            "ServeRecovery", "ServeReport", "SchedulerSnapshot",
            "SlotSnapshot", "extract_cache", "generate", "load_snapshot",
            "make_decode_step", "make_prefill_step", "plan_serve_batch",
-           "save_snapshot", "splice_cache"]
+           "resolve_page_tokens", "save_snapshot", "splice_cache"]

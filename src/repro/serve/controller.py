@@ -89,6 +89,9 @@ class ServeRecovery:
     snapshot_s: float = 0.0
     remesh_s: float = 0.0
     rebuild_s: float = 0.0
+    snapshot_bytes: int = 0          # page-granular bytes the drain moved
+    snapshot_bytes_contiguous: int = 0   # what full max_len rows would
+                                         # have cost (pre-PR-9 layout)
 
     @property
     def total_s(self) -> float:
@@ -307,6 +310,11 @@ class ServeController:
         t0 = time.perf_counter()
         snap = self._snapshot()
         snapshot_s = time.perf_counter() - t0
+        # Page-granular drain cost vs the contiguous layout it replaced:
+        # bytes moved scale with each request's live pages, not max_len.
+        row_bytes = self.sched.pool.layout.row_bytes()
+        snapshot_bytes = sum(s.cache.nbytes() for s in snap.resumable)
+        snapshot_bytes_contig = len(snap.resumable) * row_bytes
         if self.snapshot_dir is not None and kind != "rehearsal":
             save_snapshot(self.snapshot_dir, snap, self._step)
 
@@ -338,7 +346,9 @@ class ServeController:
             parked=len(self.sched.parked),
             shed=len(self.sched.shed) - len(snap.shed),
             plan_rebuilt=rebuilt, snapshot_s=snapshot_s,
-            remesh_s=remesh_s, rebuild_s=rebuild_s)
+            remesh_s=remesh_s, rebuild_s=rebuild_s,
+            snapshot_bytes=snapshot_bytes,
+            snapshot_bytes_contiguous=snapshot_bytes_contig)
         self.report.recoveries.append(rec)
         self._note_mesh(mesh)
         logger.warning("recovered: %s", self.report.describe()

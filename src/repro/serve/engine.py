@@ -1,9 +1,19 @@
-"""Serving: prefill/decode steps + a slot-based continuous batcher.
+"""Serving: prefill/decode steps + a slot-based continuous batcher over
+the paged KV-cache pool (``repro.serve.paging``).
 
 ``decode_step`` advances EVERY slot one token per call (the decode_32k /
 long_500k dry-run shapes lower exactly this function); the scheduler keeps
 the slot batch full by admitting queued requests into finished slots —
 continuous batching at fixed shapes (no recompilation).
+
+Cache memory (PR 9) is owned by one entity: ``PagePool``.  Slots hold
+page *tables*, not ``max_len`` rows — admission is against free pages,
+resident bytes scale with generated tokens, and prefill is *chunked*:
+prompts run ``page_tokens`` at a time (right-padded to the page
+boundary, so the chunk trace is shared by every prompt length)
+interleaved with decode steps, so a long prompt never stalls the batch.
+Models whose mixers carry value-dependent recurrent state (mamba) fall
+back to one-shot prefill; the pool adopts the finished row page by page.
 
 Device placement goes through the ``repro.comm`` facade: pass ``comm=``
 (a ``repro.comm.Communicator``, e.g. ``Session(mesh=...).world``) and
@@ -13,19 +23,22 @@ params and caches keep their placement.
 Elasticity contract (PR 7, driven by ``repro.serve.controller.
 ServeController``): the scheduler only mutates at decode-step boundaries,
 so ``snapshot()`` at any boundary is a *drained* image — queue, per-slot
-requests with their generated tokens, and per-slot KV-cache rows
-(``extract_cache``, the inverse of ``splice_cache``) exactly consistent
-with those tokens.  ``from_snapshot`` rebuilds a scheduler from that
-image on a different (usually smaller) batch over a re-meshed session:
-in-flight requests re-splice into the new cache and continue decoding
-where they left off — no re-prefill, no token replay — and the ones the
-shrunk batch cannot hold wait *parked* (cache rows in host memory) for a
-freed slot instead of losing their progress.
+requests with their generated tokens, and per-slot caches, now
+page-granular (``PagePool.extract``): only LIVE pages move, so re-mesh
+snapshot cost is proportional to generated tokens, not ``max_len``.
+Mid-prefill requests return to the queue head (no tokens emitted yet;
+re-prefilling them is token-identical).  ``from_snapshot`` rebuilds a
+scheduler from that image on a different (usually smaller) batch over a
+re-meshed session: in-flight requests re-splice their pages and continue
+decoding where they left off — no re-prefill, no token replay — and the
+ones the shrunk batch cannot hold wait *parked* (pages in host memory)
+for a freed slot instead of losing their progress.
 
 Determinism: sampling is a pure function of ``(cfg.seed, rid, position)``
 — every request's token stream is independent of batch composition, slot
-index, and admission order, which is what makes tokens bit-identical
-across an elastic re-mesh (same contract the training tier proves in
+index, admission order, and prefill chunking (chunked vs one-shot is
+bit-identical), which is what makes tokens bit-identical across an
+elastic re-mesh (same contract the training tier proves in
 tests/test_controller.py).
 """
 
@@ -40,6 +53,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.serve import paging
+from repro.serve.paging import (OutOfPages, PagePool, RequestCache,
+                                extract_cache, splice_cache)
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeCfg:
@@ -53,6 +70,17 @@ class ServeCfg:
                                     # (seed, rid, position)
     max_queue: Optional[int] = None  # admission control: waiting backlog
                                      # bound, excess is SHED not crashed
+    page_tokens: Optional[int] = None  # KV page size (pow2 dividing
+                                       # max_len; == max_len is the
+                                       # degenerate contiguous layout);
+                                       # None auto-picks (<= 16)
+    pool_pages: Optional[int] = None   # pool capacity; None = capacity
+                                       # parity with contiguous
+                                       # (batch * max_len / page_tokens)
+    chunked_prefill: bool = True    # interleave prompt chunks with decode
+                                    # steps; False runs all chunks at
+                                    # admission (same numerics — the
+                                    # bit-identity contract)
 
 
 def _sample_keys(seed: int, rids, pos):
@@ -94,6 +122,14 @@ def make_decode_step(model, cfg: ServeCfg) -> Callable:
     return decode_step
 
 
+def make_prefill_chunk_step(model) -> Callable:
+    def chunk_step(params, tokens, caches, q_offset, valid_len, last_index):
+        return model.prefill_chunk(params, {"tokens": tokens}, caches,
+                                   q_offset=q_offset, valid_len=valid_len,
+                                   last_index=last_index)
+    return chunk_step
+
+
 def _mesh_scope(comm) -> contextlib.AbstractContextManager:
     """The communicator's mesh context (no-op without a communicator)."""
     return comm.session.activate() if comm is not None \
@@ -111,7 +147,8 @@ def generate(model, params, prompts: jax.Array, max_new: int,
     b, s = prompts.shape
     cfg = cfg or ServeCfg(max_len=s + max_new, batch=b)
     with _mesh_scope(comm):
-        caches = model.init_caches(b, cfg.max_len, dtype=cfg.cache_dtype)
+        caches = paging.contiguous_caches(model, b, cfg.max_len,
+                                          dtype=cfg.cache_dtype)
         logits, caches = model.prefill(params, {"tokens": prompts}, caches)
         decode = jax.jit(make_decode_step(model, cfg))
         rids = jnp.arange(b, dtype=jnp.int32)
@@ -125,49 +162,8 @@ def generate(model, params, prompts: jax.Array, max_new: int,
 
 
 # ---------------------------------------------------------------------------
-# Continuous batching
+# Continuous batching over the page pool
 # ---------------------------------------------------------------------------
-
-
-def _batch_axis(spec) -> int:
-    """Locate the batch axis of a cache leaf from its PartitionSpec (the
-    entry sharded over the data axes)."""
-    for i, entry in enumerate(spec):
-        if entry in ("data", ("pod", "data"), ("data",), "pod"):
-            return i
-        if isinstance(entry, tuple) and "data" in entry:
-            return i
-    return 0
-
-
-def splice_cache(full, one, index: int, specs):
-    """Insert a batch-1 cache pytree into slot ``index`` of a full-batch
-    cache, batch axis located per-leaf via the spec tree."""
-    from jax.sharding import PartitionSpec as P
-
-    def leaf(f, o, s):
-        ax = _batch_axis(s)
-        return jax.lax.dynamic_update_slice_in_dim(
-            f, jnp.asarray(o).astype(f.dtype), index, axis=ax)
-
-    return jax.tree_util.tree_map(
-        leaf, full, one, specs,
-        is_leaf=lambda x: isinstance(x, P))
-
-
-def extract_cache(full, index: int, specs):
-    """The inverse of ``splice_cache``: slice slot ``index`` out of a
-    full-batch cache as a batch-1 pytree (the per-slot KV extraction the
-    serving drain path snapshots to host)."""
-    from jax.sharding import PartitionSpec as P
-
-    def leaf(f, s):
-        return jax.lax.dynamic_slice_in_dim(f, index, 1,
-                                            axis=_batch_axis(s))
-
-    return jax.tree_util.tree_map(
-        leaf, full, specs,
-        is_leaf=lambda x: isinstance(x, P))
 
 
 @dataclasses.dataclass
@@ -191,13 +187,33 @@ class Request:
         return self.t_first - self.t_submit
 
 
-class BatchScheduler:
-    """Slot-based continuous batching over a fixed decode batch.
+@dataclasses.dataclass
+class _Prefill:
+    """A slot mid-chunked-prefill: the request, its carried batch-1 state
+    leaves, and how many page-sized chunks have run."""
+    req: Request
+    state: List[Any]
+    chunks_done: int = 0
 
-    Each slot holds one in-flight request; finished slots are refilled from
-    the queue.  Prefill runs per-admission on the single-sequence path
-    (production systems chunk it; here it keeps shapes static), decode runs
-    one fused step for all slots.
+
+class BatchScheduler:
+    """Slot-based continuous batching over a fixed decode batch backed by
+    a ``PagePool``.
+
+    Each slot holds one in-flight request; finished slots are refilled
+    from the queue.  Admission is against free *pages*: a request only
+    needs its first page to start prefilling and grows page by page as it
+    prefills/decodes.  Chunk-capable models (attn/mla mixers) prefill one
+    ``page_tokens`` chunk per ``step()`` interleaved with decode — a long
+    prompt never stalls the batch; other models prefill one-shot on a
+    contiguous batch-1 row that the pool then adopts page by page
+    (``splice_row``).  Decode runs one fused step for all slots over an
+    arena gathered from the pool inside the jit.
+
+    If decode outgrows the pool (overcommitted ``pool_pages``), the most
+    recently admitted active slot is preempted — parked page-granular to
+    host — and resumes later with its token stream intact (determinism
+    makes preemption invisible in the tokens).
 
     Admission control: ``cfg.max_queue`` bounds the *waiting* backlog
     (queued + re-mesh-parked); a submit over the bound is shed (recorded
@@ -215,15 +231,21 @@ class BatchScheduler:
         self.parked: deque = deque()   # SlotSnapshots awaiting a slot
         self.slots: List[Optional[Request]] = [None] * cfg.batch
         with _mesh_scope(comm):
-            self.caches = model.init_caches(cfg.batch, cfg.max_len,
-                                            dtype=cfg.cache_dtype)
-        self._decode = jax.jit(make_decode_step(model, cfg))
+            self.pool = PagePool(model, cfg, comm=comm)
+        self._decode = self.pool.bind_decode(make_decode_step(model, cfg))
+        self._chunkable = bool(getattr(model, "supports_chunked_prefill",
+                                       False))
+        self._chunk = self.pool.bind_prefill_chunk(
+            make_prefill_chunk_step(model)) if self._chunkable else None
+        self._prefills: Dict[int, _Prefill] = {}   # slot -> in-progress
         self._next_tok = jnp.zeros((cfg.batch,), jnp.int32)
         self._rids = jnp.zeros((cfg.batch,), jnp.int32)
         self._pos = jnp.zeros((cfg.batch,), jnp.int32)
         self.completed: List[Request] = []
         self.shed: List[Request] = []
         self.decode_steps = 0
+        self._admit_seq: Dict[int, int] = {}   # rid -> admission order
+        self._seq = 0
 
     # -- admission ---------------------------------------------------------
 
@@ -248,22 +270,66 @@ class BatchScheduler:
     def _has_free_slot(self) -> bool:
         return any(s is None for s in self.slots)
 
+    def _n_chunks(self, req: Request) -> int:
+        return -(-len(req.prompt) // self.pool.page_tokens)
+
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
             if slot is not None:
                 continue
             if self.parked:
-                # Re-admission after a re-mesh: resume from the drained
-                # cache rows, never re-prefill (that would replay tokens).
-                self._resume_into(i, self.parked.popleft())
+                # Re-admission after a re-mesh or a preemption: resume
+                # from the parked pages, never re-prefill (that would
+                # replay tokens).  Needs room for every live page.
+                snap = self.parked[0]
+                if not self.pool.has_room(snap.cache.tokens):
+                    break
+                self.parked.popleft()
+                self._resume_into(i, snap)
                 continue
+            admitted = False
             while self.queue:
-                req = self.queue.popleft()
-                # Single-slot prefill: run the prompt through a batch-1
-                # cache, then splice the slot's cache rows into the live
-                # batch cache.
-                c1 = self.model.init_caches(1, self.cfg.max_len,
-                                            dtype=self.cfg.cache_dtype)
+                req = self.queue[0]
+                if self._chunkable:
+                    # Chunked prefill starts with just the first page and
+                    # grows chunk by chunk.
+                    first = min(self.pool.page_tokens, len(req.prompt))
+                    if not self.pool.has_room(first):
+                        break
+                    self.queue.popleft()
+                    self.pool.ensure(req.rid, first)
+                    self._prefills[i] = _Prefill(req,
+                                                 self.pool.fresh_state1())
+                    self.slots[i] = req
+                    self._admit_seq[req.rid] = self._seq
+                    self._seq += 1
+                    # Run the first chunk eagerly (short prompts keep
+                    # their submit-time TTFT); with interleaving off, run
+                    # them all — same numerics, no decode overlap.
+                    self._advance_prefill(i)
+                    while (not self.cfg.chunked_prefill
+                           and i in self._prefills):
+                        if not self._advance_prefill(i):
+                            raise OutOfPages(
+                                f"pool too small for one-shot prefill of "
+                                f"rid {req.rid} "
+                                f"({len(req.prompt)} prompt tokens)")
+                    if self.slots[i] is None:
+                        # Single-chunk prompt finished at prefill
+                        # (max_new=1 or eos): the slot is free again —
+                        # try the next queued request for it.
+                        continue
+                    admitted = True
+                    break
+                # One-shot fallback (mamba / enc-dec / plain test fakes):
+                # run the prompt through a contiguous batch-1 row, then
+                # the pool adopts it page by page.
+                if not self.pool.has_room(len(req.prompt)):
+                    break
+                self.queue.popleft()
+                c1 = paging.contiguous_caches(self.model, 1,
+                                              self.cfg.max_len,
+                                              dtype=self.cfg.cache_dtype)
                 prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 logits, c1 = self.model.prefill(self.params,
                                                 {"tokens": prompt}, c1)
@@ -276,40 +342,155 @@ class BatchScheduler:
                 if req.done or (self.cfg.eos_id >= 0
                                 and tok == self.cfg.eos_id):
                     # Finished at prefill (max_new=1 or eos): never takes
-                    # the slot (and never pays the cache splice) — try
+                    # the slot (and never pays the page splice) — try
                     # the next queued request for it.
                     self.completed.append(req)
                     continue
-                self._place(i, req, c1)
+                self.pool.splice_row(req.rid, i, c1, len(req.prompt))
+                self._place(i, req)
+                admitted = True
+                break
+            if self.queue and not admitted:
+                # Head of the queue can't fit in the pool: stop admitting
+                # (FIFO order is the policy; no head-of-line skipping).
                 break
 
-    def _place(self, i: int, req: Request, cache_one) -> None:
-        """Wire a request into slot ``i``: cache rows, next token, and the
-        (rid, pos) sampling coordinates."""
-        self.caches = splice_cache(self.caches, cache_one, i,
-                                   self.model.cache_specs())
+    def _place(self, i: int, req: Request) -> None:
+        """Wire a request into slot ``i``: next token and the (rid, pos)
+        sampling coordinates (its pages are already in the pool)."""
         self._next_tok = self._next_tok.at[i].set(req.generated[-1])
         self._rids = self._rids.at[i].set(req.rid)
         self._pos = self._pos.at[i].set(len(req.generated))
         self.slots[i] = req
+        self._admit_seq.setdefault(req.rid, self._seq)
+        self._seq += 1
 
     def _resume_into(self, i: int, snap) -> None:
-        self._place(i, snap.req, snap.cache)
+        self.pool.splice(snap.req.rid, i, snap.cache)
+        self._place(i, snap.req)
+
+    # -- chunked prefill ---------------------------------------------------
+
+    def _advance_prefill(self, i: int) -> bool:
+        """Run ONE page-sized chunk for the prefilling slot ``i``.
+        Returns False when the pool had no page for the next chunk (the
+        slot waits; decode continues and frees pages).  On the final
+        chunk, samples the first token and flips the slot to decoding."""
+        pf = self._prefills[i]
+        req = pf.req
+        pt = self.pool.page_tokens
+        c = pf.chunks_done
+        valid_len = min((c + 1) * pt, len(req.prompt))
+        try:
+            self.pool.ensure(req.rid, valid_len)
+        except OutOfPages:
+            return False
+        chunk = req.prompt[c * pt:(c + 1) * pt]
+        chunk = list(chunk) + [0] * (pt - len(chunk))   # pad to the page
+        last_index = (len(req.prompt) - 1) - c * pt     # final-chunk only
+        logits, pf.state = self._chunk(
+            self.params, req.rid, jnp.asarray(chunk, jnp.int32)[None, :],
+            c, valid_len, max(0, min(last_index, pt - 1)), pf.state)
+        pf.chunks_done += 1
+        if pf.chunks_done < self._n_chunks(req):
+            return True
+        # Prefill complete: first token is sampled at (rid, pos=0) —
+        # identical whether the chunks ran interleaved or back-to-back.
+        rid1 = jnp.asarray([req.rid], jnp.int32)
+        tok = int(_pick_tokens(logits, self.cfg, rid1,
+                               jnp.zeros_like(rid1))[0])
+        req.generated.append(tok)
+        if req.t_first is None:
+            req.t_first = time.time()
+        self.pool.write_state(i, pf.state)
+        del self._prefills[i]
+        if req.done or (self.cfg.eos_id >= 0 and tok == self.cfg.eos_id):
+            self.completed.append(req)
+            self.slots[i] = None
+            self.pool.release(req.rid)
+            self._admit_seq.pop(req.rid, None)
+            return True
+        self._next_tok = self._next_tok.at[i].set(tok)
+        self._rids = self._rids.at[i].set(req.rid)
+        self._pos = self._pos.at[i].set(1)
+        return True
+
+    # -- preemption --------------------------------------------------------
+
+    def _park_slot(self, i: int) -> None:
+        """Preempt slot ``i``: its pages move to host (page-granular) and
+        it rejoins at the parked queue's head — resumed first once pages
+        free up, tokens bit-identical (determinism hides preemption)."""
+        from repro.serve.state import SlotSnapshot
+        req = self.slots[i]
+        snap = SlotSnapshot(req=req, cache=self.pool.park(req.rid, i))
+        self.parked.appendleft(snap)
+        self.slots[i] = None
+        self._admit_seq.pop(req.rid, None)
+
+    def _ensure_decode_pages(self, active: List[int]) -> List[int]:
+        """Every active slot needs a page for the position it is about to
+        write.  On exhaustion, preempt the most recently admitted active
+        slot (LIFO — the one with least sunk cost) and retry; ``ensure``
+        is idempotent so rescanning is safe."""
+        active = list(active)
+        while True:
+            try:
+                for s in active:
+                    rid = self.slots[s].rid
+                    self.pool.ensure(rid, self.pool.tables[rid].tokens + 1)
+                return active
+            except OutOfPages:
+                if len(active) <= 1:
+                    raise OutOfPages(
+                        "page pool cannot sustain a single active "
+                        "request; raise pool_pages")
+                victim = max(active,
+                             key=lambda s2: self._admit_seq.get(
+                                 self.slots[s2].rid, -1))
+                self._park_slot(victim)
+                active.remove(victim)
 
     # -- the decode loop ---------------------------------------------------
 
     def step(self) -> int:
-        """Admit + one decode step for all active slots (under the comm
-        session's mesh when one was given).  Returns number of active
-        requests."""
+        """Admit + advance prefill chunks + one fused decode step for all
+        decoding slots (under the comm session's mesh when one was
+        given).  Returns the number of in-flight requests touched."""
         with _mesh_scope(self.comm):
+            before = set(self._prefills)
+            n_done = len(self.completed)
             self._admit()
-            active = [i for i, s in enumerate(self.slots) if s is not None]
+            progressed = bool(set(self._prefills) - before) \
+                or len(self.completed) > n_done
+            if self.cfg.chunked_prefill:
+                # One chunk per prefilling slot per step — interleaved
+                # with decode so long prompts never stall the batch.
+                # Slots admitted THIS call already ran their first chunk.
+                for i in sorted(before & set(self._prefills)):
+                    progressed |= self._advance_prefill(i)
+            active = [i for i, s in enumerate(self.slots)
+                      if s is not None and i not in self._prefills]
+            prefilling = len(self._prefills)
             if not active:
-                return 0
-            nxt, self.caches = self._decode(
-                self.params, self._next_tok[:, None], self.caches,
-                self._rids, self._pos)
+                if not prefilling and (self.queue or self.parked):
+                    raise OutOfPages(
+                        "pool too small to admit any waiting request; "
+                        "raise pool_pages")
+                if prefilling and not progressed:
+                    raise OutOfPages(
+                        "page pool cannot cover the prefilling prompt(s) "
+                        "and nothing is decoding to free pages; raise "
+                        "pool_pages")
+                return prefilling
+            active = self._ensure_decode_pages(active)
+            mask = [False] * self.cfg.batch
+            for i in active:
+                mask[i] = True
+            slot_rids = [s.rid if s is not None and mask[j] else None
+                         for j, s in enumerate(self.slots)]
+            nxt = self._decode(self.params, self._next_tok[:, None],
+                               self._rids, self._pos, slot_rids, mask)
             self._pos = self._pos + 1
         self._next_tok = nxt
         self.decode_steps += 1
@@ -320,7 +501,9 @@ class BatchScheduler:
                             and req.generated[-1] == self.cfg.eos_id):
                 self.completed.append(req)
                 self.slots[i] = None
-        return len(active)
+                self.pool.release(req.rid)
+                self._admit_seq.pop(req.rid, None)
+        return len(active) + prefilling
 
     def pending(self) -> bool:
         """Anything left to do (queued, parked, or in a slot)?"""
@@ -336,30 +519,38 @@ class BatchScheduler:
 
     def snapshot(self):
         """Drained image of the scheduler at the current decode-step
-        boundary (the only place this object mutates): every in-flight
-        request with its host-copied cache rows, the parked backlog, the
-        queue, and the books.  Consistent by construction — the caches
-        match each request's ``generated`` exactly."""
+        boundary (the only place this object mutates): every decoding
+        request with its host-copied PAGES (``PagePool.extract`` — bytes
+        moved scale with generated tokens, not ``max_len``), the parked
+        backlog, the queue, and the books.  Mid-prefill slots (no token
+        emitted yet) rejoin at the queue's head — re-prefilling them
+        after restore is bit-identical.  Read-only: the live scheduler
+        keeps running."""
         from repro.serve.state import SchedulerSnapshot, SlotSnapshot
-        specs = self.model.cache_specs()
-        inflight = [
-            SlotSnapshot(req=req, cache=jax.device_get(
-                extract_cache(self.caches, i, specs)))
-            for i, req in enumerate(self.slots) if req is not None]
+        inflight = []
+        requeue = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if i in self._prefills:
+                requeue.append(req)
+            else:
+                inflight.append(SlotSnapshot(
+                    req=req, cache=self.pool.extract(req.rid, i)))
         return SchedulerSnapshot(
             cfg=self.cfg, decode_steps=self.decode_steps,
             inflight=inflight, parked=list(self.parked),
-            queue=list(self.queue), completed=list(self.completed),
+            queue=requeue + list(self.queue), completed=list(self.completed),
             shed=list(self.shed))
 
     @classmethod
     def from_snapshot(cls, model, params, cfg: ServeCfg, snap,
                       comm=None) -> "BatchScheduler":
         """Rebuild a scheduler from a drained snapshot on a (re-meshed,
-        possibly smaller) batch.  In-flight requests re-splice in slot
-        order; the ones past ``cfg.batch`` stay parked for freed slots;
-        the queue tail past the ``max_queue`` backlog bound is shed —
-        graceful degradation instead of a crash."""
+        possibly smaller) batch.  In-flight requests re-splice their
+        pages in slot order; the ones past ``cfg.batch`` stay parked for
+        freed slots; the queue tail past the ``max_queue`` backlog bound
+        is shed — graceful degradation instead of a crash."""
         sched = cls(model, params, cfg, comm=comm)
         sched.decode_steps = snap.decode_steps
         sched.completed = list(snap.completed)

@@ -6,11 +6,14 @@ produces at a decode-step boundary — the unit of recovery the
 ``save_snapshot``/``load_snapshot``, across a process death (on disk,
 through the same atomic tmp+rename checkpoint layer training uses).
 
-Everything non-array (requests, their generated tokens, the cfg) rides in
-the checkpoint manifest's JSON ``meta`` sidecar; the per-slot KV-cache
-pytrees are the array leaves.  ``load_snapshot`` rebuilds the abstract
-cache structure from the model itself (``jax.eval_shape`` over
-``init_caches``), so restore needs no pickled treedefs.
+Everything non-array (requests, their generated tokens, the cfg, each
+slot's token count) rides in the checkpoint manifest's JSON ``meta``
+sidecar; each slot's array leaves are its ``RequestCache`` — live pages
+plus per-slot state, page-granular, so snapshot bytes scale with
+generated tokens rather than ``max_len``.  ``load_snapshot`` rebuilds
+the abstract structure from the model's probed page layout
+(``repro.serve.paging.layout_for``), so restore needs no pickled
+treedefs.
 """
 
 from __future__ import annotations
@@ -23,14 +26,17 @@ import jax.numpy as jnp
 
 from repro.checkpoint import (load_manifest, restore_checkpoint,
                               save_checkpoint)
+from repro.serve import paging
+from repro.serve.paging import RequestCache
 
 
 @dataclasses.dataclass
 class SlotSnapshot:
     """One in-flight request frozen mid-decode: the request (with its
-    generated-so-far tokens) plus its batch-1 KV-cache rows on host."""
+    generated-so-far tokens) plus its ``RequestCache`` — the live pages
+    and slot state ``PagePool.extract`` copied to host."""
     req: Any                      # repro.serve.engine.Request
-    cache: Any                    # batch-1 cache pytree (host)
+    cache: Any                    # repro.serve.paging.RequestCache (host)
 
 
 @dataclasses.dataclass
@@ -82,14 +88,16 @@ def _cfg_from_json(d: dict):
 def save_snapshot(directory: str, snap: SchedulerSnapshot,
                   step: int) -> None:
     """Persist a drained snapshot (atomic tmp+rename, same layout as the
-    training checkpoints): cache rows as array leaves, books as manifest
-    meta."""
-    slots = [s.cache for s in snap.resumable]
+    training checkpoints): each slot's live pages + state as array
+    leaves, books (and per-slot token counts) as manifest meta."""
+    slots = [{"pages": list(s.cache.pages), "state": list(s.cache.state)}
+             for s in snap.resumable]
     meta = {
         "kind": "serve_scheduler",
         "cfg": _cfg_to_json(snap.cfg),
         "decode_steps": snap.decode_steps,
         "n_inflight": len(snap.resumable),
+        "tokens": [int(s.cache.tokens) for s in snap.resumable],
         "inflight": [_req_to_json(s.req) for s in snap.resumable],
         "queue": [_req_to_json(r) for r in snap.queue],
         "completed": [_req_to_json(r) for r in snap.completed],
@@ -100,9 +108,10 @@ def save_snapshot(directory: str, snap: SchedulerSnapshot,
 
 def load_snapshot(directory: str, model,
                   step: Optional[int] = None) -> SchedulerSnapshot:
-    """Load a persisted snapshot.  The abstract cache layout comes from
-    the model (``eval_shape`` over a batch-1 ``init_caches``), so shape
-    checking still runs without any stored treedef."""
+    """Load a persisted snapshot.  The abstract per-slot structure comes
+    from the model's probed page layout plus the stored token counts
+    (page count = ceil(tokens / page_tokens)), so shape checking still
+    runs without any stored treedef."""
     manifest = load_manifest(directory, step=step)
     meta = manifest["meta"]
     if meta.get("kind") != "serve_scheduler":
@@ -110,15 +119,21 @@ def load_snapshot(directory: str, model,
             f"checkpoint under {directory} is not a serve-scheduler "
             f"snapshot (meta.kind={meta.get('kind')!r})")
     cfg = _cfg_from_json(meta["cfg"])
-    n = int(meta["n_inflight"])
-    abs1 = jax.eval_shape(
-        lambda: model.init_caches(1, cfg.max_len, dtype=cfg.cache_dtype))
-    tree = restore_checkpoint(directory, {"slots": [abs1] * n},
+    layout = paging.layout_for(model, cfg)
+    tokens = [int(t) for t in meta["tokens"]]
+    abstract = [
+        {"pages": list(paging.abstract_request_cache(layout, t).pages),
+         "state": list(paging.abstract_request_cache(layout, t).state)}
+        for t in tokens]
+    tree = restore_checkpoint(directory, {"slots": abstract},
                               step=manifest["step"])
     inflight = [
         SlotSnapshot(req=_req_from_json(rj),
-                     cache=jax.device_get(cache))
-        for rj, cache in zip(meta["inflight"], tree["slots"])]
+                     cache=RequestCache(
+                         pages=[jax.device_get(p) for p in slot["pages"]],
+                         state=[jax.device_get(s) for s in slot["state"]],
+                         tokens=t))
+        for rj, slot, t in zip(meta["inflight"], tree["slots"], tokens)]
     return SchedulerSnapshot(
         cfg=cfg, decode_steps=int(meta["decode_steps"]),
         inflight=inflight, parked=[],

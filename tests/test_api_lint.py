@@ -1,7 +1,8 @@
 """tools/check_api.py wired into tier-1: the repo's own training/serving/
 elastic paths must route distributed work through repro.comm — no
 CollectiveEngine construction and no direct jax.lax collectives outside
-src/repro/core and src/repro/comm."""
+src/repro/core and src/repro/comm — and (rule 5) all serving cache
+memory through repro.serve.paging."""
 
 import os
 import sys
@@ -62,6 +63,27 @@ def test_lint_catches_private_phase_arms():
           "wd.start()\nckpt.wait()\n"
           "srv._startup()\nloop._restart_watchdog()\n")
     assert not check_api.check_source(ok, "x.py")
+
+
+def test_lint_catches_cache_creation_outside_pool():
+    """PR 9 (rule 5): cache rows are created/spliced/extracted ONLY by
+    repro.serve.paging — direct init_caches / splice_cache /
+    extract_cache calls anywhere else bypass the PagePool."""
+    for snippet in ("c = model.init_caches(4, 512, dtype=dt)\n",
+                    "c = init_caches(4, 512)\n",
+                    "row = extract_cache(c, 2, specs)\n",
+                    "c2 = engine.splice_cache(c, one, 2, specs)\n"):
+        out = check_api.check_source(snippet, "src/repro/serve/engine.py")
+        assert out and "paging" in out[0], snippet
+    # the chokepoint module itself and the model defs stay exempt
+    ok = "c = model.init_caches(4, 512, dtype=dt)\n"
+    assert not check_api.check_source(ok, "src/repro/serve/paging.py")
+    assert not check_api.check_source(ok, "src/repro/models/model.py")
+    # cache creation THROUGH the chokepoints is the blessed path
+    blessed = ("c = paging.contiguous_caches(model, 4, 512, dtype=dt)\n"
+               "a = paging.abstract_caches(model, 1, 512, dtype=dt)\n")
+    assert not check_api.check_source(blessed,
+                                      "src/repro/serve/engine.py")
 
 
 def test_lint_exempts_core_and_comm():

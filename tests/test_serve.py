@@ -281,10 +281,14 @@ def test_snapshot_shrink_resume_bit_identical():
 
     snap = sched.snapshot()
     assert len(snap.inflight) == 3 and len(snap.queue) == 2
-    # the drained cache rows must match each request's progress:
-    # pos = prompt len (2) + decode steps (generated minus the prefill tok)
+    # the drained pages must match each request's progress: cache
+    # positions = prompt len (2) + decode steps (generated minus the
+    # prefill token), and only that many positions' pages moved
     for s in snap.inflight:
-        assert int(s.cache["pos"][0, 0]) == 2 + len(s.req.generated) - 1
+        want = 2 + len(s.req.generated) - 1
+        assert s.cache.tokens == want
+        pt = sched.pool.page_tokens
+        assert all(p.shape[0] == -(-want // pt) for p in s.cache.pages)
 
     small = ServeCfg(max_len=64, batch=2, cache_dtype=jnp.float32)
     sched2 = BatchScheduler.from_snapshot(model, {"w": jnp.zeros(())},
@@ -319,6 +323,149 @@ def test_snapshot_disk_roundtrip(tmp_path):
     assert sorted(r.rid for r in done) == [0, 1, 2]
     for r in done:
         assert r.generated == _expected_cache_lm(r.prompt, r.max_new)
+
+
+# ---------------------------------------------------------------------------
+# PR 9: paged pool + chunked prefill
+# ---------------------------------------------------------------------------
+
+
+class ChunkLM(CacheLM):
+    """Chunk-capable cache-sensitive fake: same token chain as CacheLM,
+    with a ``prefill_chunk`` that accumulates ``acc`` one page at a time
+    (masked by ``valid_len``, so right-padding must not leak) and a
+    ``chunk_traces`` counter — the chunked-vs-one-shot bit-identity and
+    prefill trace-count tests run on this."""
+
+    supports_chunked_prefill = True
+
+    def __init__(self):
+        super().__init__()
+        self.chunk_traces = 0
+
+    def prefill_chunk(self, params, batch, caches, *, q_offset, valid_len,
+                      last_index):
+        self.chunk_traces += 1
+        toks = batch["tokens"]                       # (1, pt), 0-padded
+        pt = toks.shape[1]
+        posn = q_offset + jnp.arange(pt)[None, :]
+        valid = posn < valid_len
+        acc = caches["acc"] + jnp.where(valid, toks, 0).sum(
+            axis=1, keepdims=True)
+        nxt = (toks[:, last_index] + acc[:, 0]) % VOCAB
+        pos = jnp.minimum(caches["pos"] + pt, valid_len)
+        return (jax.nn.one_hot(nxt, VOCAB),
+                {"pos": pos, "kv": caches["kv"], "acc": acc})
+
+
+def _chunk_sched(batch=2, max_len=32, page_tokens=4, pool_pages=None,
+                 chunked=True):
+    model = ChunkLM()
+    cfg = ServeCfg(max_len=max_len, batch=batch, cache_dtype=jnp.float32,
+                   page_tokens=page_tokens, pool_pages=pool_pages,
+                   chunked_prefill=chunked)
+    return model, BatchScheduler(model, {"w": jnp.zeros(())}, cfg)
+
+
+def test_chunked_prefill_bit_identical_to_one_shot():
+    """Prompts spanning 1 to 3+ pages, chunked on vs off: every stream
+    must equal the uninterrupted CacheLM reference bit for bit."""
+    prompts = [[5], [1, 2, 3], [2] * 4, [1] * 5, [3] * 11]
+
+    def run(chunked):
+        _, sched = _chunk_sched(batch=2, page_tokens=4, chunked=chunked)
+        for i, p in enumerate(prompts):
+            sched.submit(Request(rid=i, prompt=list(p), max_new=4))
+        return {r.rid: r.generated for r in sched.run()}
+
+    on, off = run(True), run(False)
+    assert on == off
+    for i, p in enumerate(prompts):
+        assert on[i] == _expected_cache_lm(p, 4), (i, on[i])
+
+
+def test_no_recompilation_across_chunked_prefills():
+    """Chunks are padded to the page boundary, so prefill compiles ONCE
+    across every prompt length (and decode stays at one trace)."""
+    model, sched = _chunk_sched(batch=2, page_tokens=4)
+    for i, n in enumerate([1, 2, 4, 5, 9, 12]):
+        sched.submit(Request(rid=i, prompt=[(i + j) % VOCAB
+                                            for j in range(n)], max_new=3))
+    done = sched.run()
+    assert len(done) == 6
+    assert model.chunk_traces == 1, model.chunk_traces
+    assert model.decode_traces == 1, model.decode_traces
+    for r in done:
+        assert r.generated == _expected_cache_lm(r.prompt, 3), r.rid
+
+
+def test_resident_bytes_scale_with_generated_not_max_len():
+    """Page-granular residency: live bytes track allocated pages (=
+    ceil(tokens/pt) per request), strictly under the contiguous
+    batch*max_len layout for short requests."""
+    _, sched = _chunk_sched(batch=2, max_len=32, page_tokens=4)
+    sched.submit(Request(rid=0, prompt=[1, 2], max_new=8))
+    sched.submit(Request(rid=1, prompt=[3], max_new=8))
+    sched.step()
+    pool = sched.pool
+    want_pages = sum(-(-t.tokens // pool.page_tokens)
+                     for t in pool.tables.values())
+    assert pool.pages_allocated == want_pages
+    assert pool.resident_bytes() < pool.contiguous_bytes()
+    # and the pool is capacity-par with contiguous when fully allocated
+    assert pool.pages_total == 2 * (32 // 4)
+
+
+def test_preemption_parks_lifo_and_streams_stay_bit_identical():
+    """An undercommitted pool preempts the most recently admitted slot
+    mid-decode (pages parked to host), resumes it after the survivor
+    frees pages — and determinism keeps every stream equal to the
+    uninterrupted reference."""
+    # 4 pages of 4 = 16 positions; two rid streams need ~14 each, so they
+    # cannot coexist to completion: one must park and resume.
+    _, sched = _chunk_sched(batch=2, max_len=32, page_tokens=4,
+                            pool_pages=4)
+    reqs = [Request(rid=i, prompt=[i + 1, i + 2], max_new=12)
+            for i in range(2)]
+    for r in reqs:
+        sched.submit(r)
+    parked_seen = 0
+    while sched.pending():
+        sched.step()
+        parked_seen = max(parked_seen, len(sched.parked))
+        sched.pool.check_integrity()
+    assert parked_seen >= 1                    # preemption actually fired
+    for r in sched.completed:
+        assert r.generated == _expected_cache_lm(r.prompt, r.max_new), \
+            (r.rid, r.generated)
+
+
+def test_pool_too_small_for_one_request_raises():
+    _, sched = _chunk_sched(batch=1, max_len=32, page_tokens=4,
+                            pool_pages=2)
+    sched.submit(Request(rid=0, prompt=[1, 2], max_new=12))  # ~14 tokens
+    with pytest.raises(Exception) as ei:
+        sched.run()
+    assert "pool" in str(ei.value) or "page" in str(ei.value)
+
+
+def test_snapshot_mid_chunked_prefill_requeues_and_matches():
+    """Draining while a long prompt is mid-prefill (no token emitted)
+    returns it to the queue head; the rebuilt scheduler re-prefills it
+    bit-identically."""
+    model, sched = _chunk_sched(batch=1, max_len=32, page_tokens=4)
+    long = Request(rid=0, prompt=[1] * 10, max_new=4)      # 3 chunks
+    sched.submit(long)                                     # chunk 1 ran
+    assert 0 in sched._prefills and long.generated == []
+    snap = sched.snapshot()
+    assert len(snap.inflight) == 0
+    assert [r.rid for r in snap.queue] == [0]
+    cfg = ServeCfg(max_len=32, batch=1, cache_dtype=jnp.float32,
+                   page_tokens=4)
+    sched2 = BatchScheduler.from_snapshot(model, {"w": jnp.zeros(())},
+                                          cfg, snap)
+    done = sched2.run()
+    assert done[0].generated == _expected_cache_lm(long.prompt, 4)
 
 
 def test_from_snapshot_sheds_queue_tail_under_max_queue():

@@ -27,7 +27,10 @@ from repro.serve import (BatchScheduler, Request, ServeCfg,
 cfg = get_config("granite-34b", reduced=True)
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
-scfg = ServeCfg(max_len=32, batch=8, cache_dtype=jax.numpy.float32)
+# explicit paged layout (4 pages of 8 per slot) + chunked prefill: the
+# recovery below moves page-granular snapshots and must stay bit-identical
+scfg = ServeCfg(max_len=32, batch=8, cache_dtype=jax.numpy.float32,
+                page_tokens=8, chunked_prefill=True)
 
 def make_requests():
     rng = np.random.RandomState(0)
@@ -59,6 +62,10 @@ assert len(rec.healthy_after) == 6
 assert rec.resumed == 6 and rec.parked == 2, rec
 assert rec.shed == 0
 assert rec.plan_rebuilt and rec.total_s > 0.0
+# page-granular drain: snapshot bytes moved scale with each request's
+# live tokens, strictly under the contiguous full-row cost
+assert rec.snapshot_bytes > 0
+assert rec.snapshot_bytes < rec.snapshot_bytes_contiguous, rec
 assert report.mesh_history == [(8, 1), (6, 1)], report.mesh_history
 assert report.batch_history == [8, 6], report.batch_history
 assert len(report.completed) == 10 and not report.shed
@@ -73,7 +80,8 @@ session6 = comm_mod.Session(mesh=mesh6)
 with session6.activate():
     params6 = remesh(params, model.param_specs(), mesh6)
 bcfg = ServeCfg(max_len=32, batch=plan_serve_batch(8, 8, 6),
-                cache_dtype=jax.numpy.float32)
+                cache_dtype=jax.numpy.float32, page_tokens=8,
+                chunked_prefill=True)
 sched = BatchScheduler(model, params6, bcfg, comm=session6.world)
 for r in make_requests():
     sched.submit(r)

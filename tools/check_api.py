@@ -23,7 +23,15 @@ EXCEPT the implementation layers ``src/repro/core`` and ``src/repro/comm``:
   4. no construction of schedule-IR nodes (``CommUnit``, ``CommOp``,
      ``ComputeOp``, ``Schedule``) — sync programs come from
      ``Communicator.sync_schedule`` / ``Session.schedule_for`` and are
-     rewritten by ``repro.core.plan`` passes, never hand-built.
+     rewritten by ``repro.core.plan`` passes, never hand-built;
+
+  5. no ``init_caches`` calls and no contiguous cache-row
+     ``splice_cache``/``extract_cache`` calls outside
+     ``src/repro/serve/paging.py`` (the pool is the ONE owner of serving
+     cache memory — PR 9) and the model definitions under
+     ``src/repro/models/`` that implement ``init_caches`` themselves.
+     Everything else creates caches via ``paging.contiguous_caches`` /
+     ``paging.abstract_caches`` and moves rows via ``PagePool``.
 
 Pure AST walk, no imports of the checked code.  Wired into tier-1 via
 ``tests/test_api_lint.py``; also runnable standalone:
@@ -67,6 +75,12 @@ def _is_private_phase_arm(attr: str) -> bool:
 #: outside the implementation layers bypasses the planner's pass pipeline.
 IR_NODES = frozenset({"CommUnit", "CommOp", "ComputeOp", "Schedule"})
 
+#: cache-memory chokepoints (rule 5): ``init_caches`` may only be called
+#: here — the pool module itself, plus the model definitions that
+#: implement/delegate it.
+CACHE_CALLS = frozenset({"init_caches", "splice_cache", "extract_cache"})
+CACHE_EXEMPT = ("src/repro/serve/paging.py", "src/repro/models/")
+
 #: path prefixes (relative to repo root, "/"-separated) that ARE the
 #: implementation and may touch engines/lax freely.
 EXEMPT = ("src/repro/core/", "src/repro/comm/")
@@ -103,6 +117,7 @@ def check_source(src: str, relpath: str) -> List[str]:
         return [f"{relpath}:{e.lineno}: syntax error: {e.msg}"]
     out: List[str] = []
     aliases = _lax_aliases(tree)
+    cache_exempt = any(relpath.startswith(p) for p in CACHE_EXEMPT)
     for node in ast.walk(tree):
         # from jax.lax import psum — aliasing a collective out of lax
         if isinstance(node, ast.ImportFrom) and node.module == "jax.lax":
@@ -125,6 +140,13 @@ def check_source(src: str, relpath: str) -> List[str]:
             out.append(f"{relpath}:{node.lineno}: constructs schedule-IR "
                        f"node {fn.id} — build programs with "
                        f"Communicator.sync_schedule / Session.schedule_for")
+        # init_caches(...) / splice_cache(...) outside the pool (rule 5)
+        elif (isinstance(fn, ast.Name) and fn.id in CACHE_CALLS
+              and not cache_exempt):
+            out.append(f"{relpath}:{node.lineno}: calls {fn.id} outside "
+                       f"repro.serve.paging — cache memory is owned by "
+                       f"PagePool (use paging.contiguous_caches / "
+                       f"paging.abstract_caches)")
         elif isinstance(fn, ast.Attribute):
             # <anything>.CollectiveEngine(...)
             if fn.attr == "CollectiveEngine":
@@ -148,6 +170,12 @@ def check_source(src: str, relpath: str) -> List[str]:
                 out.append(f"{relpath}:{node.lineno}: direct jax.lax."
                            f"{fn.attr} — route through repro.comm "
                            f"(Communicator or repro.comm.collectives)")
+            # model.init_caches(...) etc. outside the pool (rule 5)
+            elif fn.attr in CACHE_CALLS and not cache_exempt:
+                out.append(f"{relpath}:{node.lineno}: calls {fn.attr} "
+                           f"outside repro.serve.paging — cache memory is "
+                           f"owned by PagePool (use paging."
+                           f"contiguous_caches / paging.abstract_caches)")
             # engine._allreduce_1d_start(...) etc. — private phase arms
             elif _is_private_phase_arm(fn.attr):
                 out.append(f"{relpath}:{node.lineno}: calls private "
