@@ -1,0 +1,130 @@
+"""Control-plane overhead bench: what membership costs the step loop.
+
+Measures the three numbers that decide whether the PR 10 control plane
+is affordable: (1) the per-heartbeat send cost the beat thread pays (the
+only recurring tax a healthy job sees), (2) the failure-detection
+latency from a peer's last message to its declared death, against the
+configured ``heartbeat_timeout * suspicions`` budget, and (3) the wall
+RTT of the two-phase survivor vote as the member count grows (2/4/8
+simulated members over ``LocalFabric`` — same wire format as TCP, every
+message takes the JSON round-trip).  Feeds the ``control`` block of
+``BENCH_plan.json``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from benchmarks.common import Table
+from repro.runtime import ctrlplane
+
+
+def _heartbeat_send_us(repeat: int) -> float:
+    fab = ctrlplane.LocalFabric()
+    tx, _rx = fab.transport("tx"), fab.transport("rx")
+    msg = {"kind": "hb", "src": "tx"}
+    for _ in range(10):
+        tx.send("rx", msg)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        tx.send("rx", msg)
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def _detection_latency_s(cfg: ctrlplane.CtrlConfig) -> float:
+    fab = ctrlplane.LocalFabric()
+    m = ctrlplane.Membership(fab.transport("a"), peers=["a", "ghost"],
+                             config=cfg)
+    m.start()
+    try:
+        t0 = time.monotonic()   # ghost's "last heard" is start time
+        while m.alive_peers():
+            time.sleep(cfg.heartbeat_interval / 4)
+            if time.monotonic() - t0 > 20 * cfg.detection_s:
+                raise RuntimeError("detector never fired")
+        return time.monotonic() - t0
+    finally:
+        m.close()
+
+
+def _agree_rtt_ms(n_members: int, cfg: ctrlplane.CtrlConfig,
+                  trials: int) -> float:
+    """Wall time for ``n_members`` concurrent ``agree`` calls to all
+    return one committed view (min over trials: the protocol floor,
+    not scheduler noise)."""
+    best = None
+    for trial in range(trials):
+        fab = ctrlplane.LocalFabric()
+        names = [f"m{i}" for i in range(n_members)]
+        view = list(range(8))
+        ms = []
+        for name in names:
+            m = ctrlplane.Membership(fab.transport(name), peers=names,
+                                     config=cfg)
+            m.bind_view(lambda: view)
+            ms.append(m.start())
+        try:
+            out = {}
+            def vote(m):
+                out[m.member] = m.agree(view)
+            threads = [threading.Thread(target=vote, args=(m,))
+                       for m in ms]
+            t0 = time.monotonic()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=cfg.agree_timeout)
+            dt = time.monotonic() - t0
+            assert len(set(out.values())) == 1, out   # one committed view
+            best = dt if best is None else min(best, dt)
+        finally:
+            for m in ms:
+                m.close()
+    return best * 1e3
+
+
+def control_metrics(smoke: bool = False) -> dict:
+    # Tight detector for the latency probe: one member + one silent
+    # ghost, so there is no message load to flap it.
+    probe = ctrlplane.CtrlConfig(heartbeat_interval=0.02,
+                                 heartbeat_timeout=0.08, suspicions=3)
+    # Realistic detector for the vote: the two-phase commit assumes an
+    # eventually-accurate failure detector — 8 chatty members on a
+    # shared host with a hair-trigger timeout flap in and out of the
+    # alive set, and conflicting participant views keep escalating the
+    # epoch instead of committing.
+    vote = ctrlplane.CtrlConfig(heartbeat_interval=0.05,
+                                heartbeat_timeout=0.5, suspicions=3,
+                                vote_interval=0.05, agree_timeout=20.0)
+    out = {
+        "heartbeat_send_us": _heartbeat_send_us(200 if smoke else 2000),
+        "detection_latency_s": _detection_latency_s(probe),
+        "detection_configured_s": probe.detection_s,
+    }
+    trials = 1 if smoke else 3
+    for n in (2, 4, 8):
+        out[f"agree_rtt_ms_{n}"] = _agree_rtt_ms(n, vote, trials)
+    return out
+
+
+def run(smoke: bool = False):
+    m = control_metrics(smoke=smoke)
+    t = Table("bench_ctrlplane: membership overhead", ["metric", "value"])
+    t.add("heartbeat send", f"{m['heartbeat_send_us']:.1f} us")
+    t.add("detection latency (configured budget)",
+          f"{m['detection_latency_s'] * 1e3:.0f} ms "
+          f"({m['detection_configured_s'] * 1e3:.0f} ms)")
+    for n in (2, 4, 8):
+        t.add(f"agree RTT, {n} members", f"{m[f'agree_rtt_ms_{n}']:.1f} ms")
+    return [t], m
+
+
+def main():
+    tables, _ = run()
+    for t in tables:
+        print(t.render())
+
+
+if __name__ == "__main__":
+    main()

@@ -154,6 +154,7 @@ def zero_metrics(smoke: bool = False) -> dict:
 
 
 def payload(smoke: bool = False) -> dict:
+    from benchmarks.bench_ctrlplane import control_metrics
     from benchmarks.bench_elastic import recovery_latency
     from benchmarks.bench_layers import dispatch_overhead, layer_numbers
     from benchmarks.bench_overlap import overlap_metrics
@@ -168,6 +169,7 @@ def payload(smoke: bool = False) -> dict:
         "schedule": ov["schedule"],
         "serve": serve_metrics(smoke=smoke),
         "zero": zero_metrics(smoke=smoke),
+        "control": control_metrics(smoke=smoke),
     }
 
 
@@ -252,7 +254,17 @@ def run(smoke: bool = False):
     t7.add("param AG exposed frac (modeled, under next forward)",
            f"{z['ag_exposed_frac_blocking']:.3f} -> "
            f"{z['ag_exposed_frac']:.3f}")
-    return [t, t2, t3, t4, t5, t6, t7], p
+    c = p["control"]
+    t8 = Table("bench_plan: control-plane membership overhead",
+               ["metric", "value"])
+    t8.add("heartbeat send", f"{c['heartbeat_send_us']:.1f} us")
+    t8.add("failure detection latency (configured)",
+           f"{c['detection_latency_s'] * 1e3:.0f} ms "
+           f"({c['detection_configured_s'] * 1e3:.0f} ms)")
+    t8.add("survivor-vote RTT 2/4/8 members",
+           f"{c['agree_rtt_ms_2']:.1f} / {c['agree_rtt_ms_4']:.1f} / "
+           f"{c['agree_rtt_ms_8']:.1f} ms")
+    return [t, t2, t3, t4, t5, t6, t7, t8], p
 
 
 def main():

@@ -40,6 +40,9 @@ REQUIRED_KEYS = {
               "snapshot_bytes", "snapshot_bytes_contiguous",
               "p50_ttft_chunked_s", "p99_ttft_chunked_s",
               "p50_ttft_oneshot_s", "p99_ttft_oneshot_s"),
+    "control": ("heartbeat_send_us", "detection_latency_s",
+                "detection_configured_s", "agree_rtt_ms_2",
+                "agree_rtt_ms_4", "agree_rtt_ms_8"),
     "zero": ("opt_state_bytes_per_device_unsharded",
              "opt_state_bytes_per_device_sharded", "state_shrink_x",
              "grad_sync_wire_bytes_allreduce",

@@ -23,6 +23,7 @@ from repro import comm as comm_mod
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
+from repro.runtime import ctrlplane, health
 from repro.runtime.controller import FaultPlan
 from repro.serve import BatchScheduler, Request, ServeCfg, ServeController
 
@@ -60,6 +61,18 @@ def main() -> None:
     ap.add_argument("--watchdog-timeout", type=float, default=300.0)
     ap.add_argument("--snapshot-dir", default=None,
                     help="persist drained scheduler snapshots here")
+    ap.add_argument("--ctrl-peers", default="",
+                    help="control-plane peers as 'host:port,host:port' "
+                         "(the OTHER members); enables the multi-host "
+                         "membership vote")
+    ap.add_argument("--ctrl-port", type=int, default=0,
+                    help="TCP port this member's control plane listens "
+                         "on (0 = ephemeral)")
+    ap.add_argument("--heartbeat-interval", type=float, default=0.5,
+                    help="control-plane heartbeat cadence in seconds")
+    ap.add_argument("--ctrl-fault-plan", default="",
+                    help="injected control-plane message faults, e.g. "
+                         "'drop@3:2,partition@0:40'")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -95,14 +108,38 @@ def main() -> None:
     if args.elastic:
         plan = (FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
                 if args.fault_plan else None)
-        ctl = ServeController(
-            model, params, scfg, comm=session.world, fault_plan=plan,
-            max_recoveries=args.max_recoveries,
-            watchdog_timeout=args.watchdog_timeout,
-            snapshot_dir=args.snapshot_dir)
-        for req in requests:
-            ctl.submit(req)
-        report = ctl.run()
+        notice = health.PreemptionNotice()
+        try:                  # SIGTERM -> graceful drain, not a corpse
+            health.install_preemption_handler(notice)
+        except ValueError:                  # not the main thread
+            logger.warning("not on the main thread: SIGTERM preemption "
+                           "handler not installed")
+        membership = None
+        if args.ctrl_peers:
+            cplan = (ctrlplane.CtrlFaultPlan.parse(args.ctrl_fault_plan,
+                                                   seed=args.fault_seed)
+                     if args.ctrl_fault_plan else None)
+            membership = ctrlplane.connect(
+                port=args.ctrl_port, peers=args.ctrl_peers,
+                config=ctrlplane.CtrlConfig(
+                    heartbeat_interval=args.heartbeat_interval,
+                    heartbeat_timeout=5 * args.heartbeat_interval),
+                fault_plan=cplan)
+            logger.info("control plane: %s with peers %s",
+                        membership.member, membership.peers)
+        try:
+            ctl = ServeController(
+                model, params, scfg, comm=session.world, fault_plan=plan,
+                max_recoveries=args.max_recoveries,
+                watchdog_timeout=args.watchdog_timeout,
+                snapshot_dir=args.snapshot_dir,
+                preemption=notice, membership=membership)
+            for req in requests:
+                ctl.submit(req)
+            report = ctl.run()
+        finally:
+            if membership is not None:
+                membership.close()
         done, shed = report.completed, report.shed
         pool = ctl.sched.pool
         logger.info("%s", report.describe())

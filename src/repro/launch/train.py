@@ -37,6 +37,7 @@ from repro.optim import cosine_schedule, make_optimizer
 from repro.parallel.sharding import named_shardings
 from repro.runtime import (ElasticController, FaultPlan, StepWatchdog,
                            substrate)
+from repro.runtime import ctrlplane, health
 from repro.train import trainer
 
 logger = logging.getLogger("repro.train")
@@ -136,6 +137,22 @@ def main() -> None:
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for fault-victim selection")
     ap.add_argument("--watchdog-timeout", type=float, default=300.0)
+    ap.add_argument("--ctrl-peers", default="",
+                    help="control-plane peers as 'host:port,host:port' "
+                         "(the OTHER members); enables the multi-host "
+                         "membership vote — re-meshes then happen only "
+                         "on committed, fenced epochs")
+    ap.add_argument("--ctrl-port", type=int, default=0,
+                    help="TCP port this member's control plane listens "
+                         "on (0 = ephemeral; peers must name the real "
+                         "port)")
+    ap.add_argument("--heartbeat-interval", type=float, default=0.5,
+                    help="control-plane heartbeat cadence in seconds "
+                         "(peer declared dead after interval-derived "
+                         "suspicion strikes)")
+    ap.add_argument("--ctrl-fault-plan", default="",
+                    help="injected control-plane message faults, e.g. "
+                         "'drop@3:2,delay@5:4,partition@0:40'")
     args = ap.parse_args()
 
     if args.zero and args.sync != "composed":
@@ -182,17 +199,44 @@ def main() -> None:
         session = trainer.TrainSession(model, opt, tcfg)
         fplan = (FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
                  if args.fault_plan else None)
-        ctl = ElasticController(
-            session, ds, mesh, total_steps=args.steps,
-            ckpt_dir=args.ckpt_dir, comm=comm_session,
-            ckpt_every=args.ckpt_every, ckpt_sharded=args.ckpt_sharded,
-            fault_plan=fplan,
-            max_recoveries=args.max_recoveries,
-            watchdog_timeout=args.watchdog_timeout,
-            on_step=lambda s, l: (s % args.log_every == 0
-                                  and logger.info("step %4d  loss %.4f",
-                                                  s, l)))
-        report = ctl.run()
+        # SIGTERM (what cloud schedulers send ahead of eviction) becomes
+        # a step-boundary drain + re-mesh instead of a corpse.
+        notice = health.PreemptionNotice()
+        try:
+            health.install_preemption_handler(notice)
+        except ValueError:                  # not the main thread
+            logger.warning("not on the main thread: SIGTERM preemption "
+                           "handler not installed")
+        membership = None
+        if args.ctrl_peers:
+            cplan = (ctrlplane.CtrlFaultPlan.parse(args.ctrl_fault_plan,
+                                                   seed=args.fault_seed)
+                     if args.ctrl_fault_plan else None)
+            membership = ctrlplane.connect(
+                port=args.ctrl_port, peers=args.ctrl_peers,
+                config=ctrlplane.CtrlConfig(
+                    heartbeat_interval=args.heartbeat_interval,
+                    heartbeat_timeout=5 * args.heartbeat_interval),
+                fault_plan=cplan)
+            logger.info("control plane: %s with peers %s",
+                        membership.member, membership.peers)
+        try:
+            ctl = ElasticController(
+                session, ds, mesh, total_steps=args.steps,
+                ckpt_dir=args.ckpt_dir, comm=comm_session,
+                ckpt_every=args.ckpt_every,
+                ckpt_sharded=args.ckpt_sharded,
+                fault_plan=fplan,
+                max_recoveries=args.max_recoveries,
+                watchdog_timeout=args.watchdog_timeout,
+                preemption=notice, membership=membership,
+                on_step=lambda s, l: (s % args.log_every == 0
+                                      and logger.info("step %4d  "
+                                                      "loss %.4f", s, l)))
+            report = ctl.run()
+        finally:
+            if membership is not None:
+                membership.close()
         logger.info("elastic run done:\n%s", report.describe())
         if comm_session is not None:
             logger.info("session stats:\n%s", comm_session.finalize())

@@ -5,11 +5,17 @@ from repro.runtime.controller import (ControllerReport, DeviceLoss,
                                       ElasticController, FaultEvent,
                                       FaultPlan, RecoveryRecord,
                                       TooManyRecoveries)
+from repro.runtime.ctrlplane import (CtrlConfig, CtrlFaultEvent,
+                                     CtrlFaultPlan, Membership,
+                                     MembershipView, QuorumLostError,
+                                     StaleEpochError)
 from repro.runtime.elastic import (make_mesh_from_shape, plan_from_mesh,
                                    plan_mesh_shape, remesh)
 from repro.runtime.watchdog import StepWatchdog
 
-__all__ = ["ControllerReport", "DeviceLoss", "ElasticController",
-           "FaultEvent", "FaultPlan", "RecoveryRecord", "StepWatchdog",
-           "TooManyRecoveries", "make_mesh_from_shape", "plan_from_mesh",
-           "plan_mesh_shape", "remesh", "substrate"]
+__all__ = ["ControllerReport", "CtrlConfig", "CtrlFaultEvent",
+           "CtrlFaultPlan", "DeviceLoss", "ElasticController",
+           "FaultEvent", "FaultPlan", "Membership", "MembershipView",
+           "QuorumLostError", "RecoveryRecord", "StaleEpochError",
+           "StepWatchdog", "TooManyRecoveries", "make_mesh_from_shape",
+           "plan_from_mesh", "plan_mesh_shape", "remesh", "substrate"]

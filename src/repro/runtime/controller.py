@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.runtime import elastic, health, substrate
+from repro.runtime.ctrlplane import Membership, QuorumLostError
 from repro.runtime.watchdog import StepWatchdog
 
 logger = logging.getLogger("repro.runtime")
@@ -145,6 +146,8 @@ class RecoveryRecord:
     restore_s: float = 0.0
     remesh_s: float = 0.0
     replan_s: float = 0.0
+    epoch: Optional[int] = None     # committed membership epoch (None:
+                                    # no control plane attached)
 
     @property
     def total_s(self) -> float:
@@ -200,6 +203,11 @@ class ElasticController:
     session internally.  ``fault_plan`` injects deterministic failures;
     with none, this is a plain fault-*tolerant* driver (watchdog + atomic
     checkpoints) that a real device error would steer the same way.
+    ``membership`` (a ``repro.runtime.ctrlplane.Membership``) attaches
+    the multi-host control plane: every recovery then re-meshes only on
+    a committed, fenced membership epoch, commits from peers' votes are
+    drained at step boundaries, and quorum loss checkpoints + halts with
+    ``QuorumLostError`` instead of re-meshing.
     """
 
     def __init__(self, session, dataset, mesh, *,
@@ -215,6 +223,7 @@ class ElasticController:
                  watchdog_timeout: float = 300.0,
                  rng_seed: int = 0,
                  preemption: Optional[health.PreemptionNotice] = None,
+                 membership: Optional[Membership] = None,
                  on_step: Optional[Callable[[int, float], None]] = None):
         self.session = session
         self.dataset = dataset
@@ -231,6 +240,8 @@ class ElasticController:
         self.max_recoveries = max_recoveries
         self.rng_seed = rng_seed
         self.preemption = preemption
+        self.membership = membership
+        self._ctrl_epoch = 0        # last membership epoch acted on
         self.on_step = on_step
         self.ckpt = CheckpointManager(ckpt_dir, every=ckpt_every,
                                       keep=ckpt_keep, sharded=ckpt_sharded)
@@ -248,6 +259,11 @@ class ElasticController:
         self._pool: List[Any] = devs                  # canonical order
         self._healthy = {d.id for d in devs}
         self._axis_names = tuple(mesh.axis_names)
+        if membership is not None:
+            # Passive vote path: peers' rounds are answered with this
+            # controller's live healthy view even mid-step.
+            membership.bind_view(lambda: sorted(self._healthy))
+            membership.start()
         # The *original* parallelism layout: re-planning always aims back
         # at it, so a run degraded by deep shrinks (TP halved, pods
         # collapsed) regains the full layout when devices return.
@@ -319,10 +335,54 @@ class ElasticController:
         """Production surface for real health probes: devices reported
         dead here are excluded from the next re-mesh; the loop notices at
         the next stall signal or step failure.  The survivor set runs
-        through the cross-host agreement seam (single-host stub today) so
-        every host re-meshes over the same devices."""
-        self._healthy = health.agree_survivors(
-            self._healthy - set(device_ids))
+        through cross-host agreement — the full epoch-stamped vote when a
+        ``Membership`` is attached, its in-process fast path
+        (``health.agree_survivors``, same intersection rule) otherwise —
+        so every host re-meshes over the same devices."""
+        local = self._healthy - set(device_ids)
+        if self.membership is not None:
+            view = self.membership.agree(sorted(local))
+            self._healthy = set(view.survivors)
+            self._ctrl_epoch = view.epoch
+        else:
+            self._healthy = health.agree_survivors(local)
+
+    def _drain_membership(self) -> None:
+        """Step-boundary drain of votes this member served *passively*:
+        a commit that shrank the survivor set below our healthy view is a
+        device loss decided elsewhere — recover over it (same epoch, no
+        re-vote)."""
+        if self.membership is None:
+            return
+        view = self.membership.poll_commit()
+        if view is None or view.epoch <= self._ctrl_epoch:
+            return
+        lost = self._healthy - set(view.survivors)
+        self._healthy = set(view.survivors)
+        self._ctrl_epoch = view.epoch
+        if lost:
+            logger.warning("membership epoch %d committed without "
+                           "devices %s — recovering", view.epoch,
+                           sorted(lost))
+            raise DeviceLoss(tuple(lost))
+
+    def _sync_membership(self) -> Optional[int]:
+        """Pre-re-mesh agreement: every recovery re-meshes only on a
+        *committed* epoch.  A drain- or mark_unhealthy-triggered recovery
+        already holds one (the committed view IS our healthy set) and
+        reuses it; a locally detected loss votes here.  The fence makes
+        the decision final: if a later epoch committed meanwhile, this
+        recovery must not re-mesh."""
+        if self.membership is None:
+            return None
+        view = self.membership.poll_commit()
+        if not (view is not None and view.epoch == self._ctrl_epoch
+                and set(view.survivors) == self._healthy):
+            view = self.membership.agree(sorted(self._healthy))
+            self._healthy = set(view.survivors)
+            self._ctrl_epoch = view.epoch
+        self.membership.fence(view.epoch)
+        return view.epoch
 
     def _drain_preemptions(self) -> None:
         """Step-boundary drain of the preemption mailbox: an announced
@@ -396,6 +456,7 @@ class ElasticController:
         """Devices came back: live re-mesh — nothing was lost, so the
         current state moves to the bigger mesh without a restore."""
         before_shape = tuple(dict(self.mesh.shape).values())
+        epoch = self._sync_membership()    # re-admission is a vote too
         self.ckpt.wait()
         new_mesh = self._planned_mesh()
         t0 = time.perf_counter()
@@ -411,7 +472,7 @@ class ElasticController:
             after_shape=tuple(dict(new_mesh.shape).values()),
             healthy_after=tuple(sorted(self._healthy)),
             restored_step=None, plan_rebuilt=rebuilt,
-            remesh_s=remesh_s, replan_s=replan_s))
+            remesh_s=remesh_s, replan_s=replan_s, epoch=epoch))
 
     def _recover(self, step: int, exc: DeviceLoss) -> int:
         """The full crash-recovery path; returns the step to resume at."""
@@ -420,6 +481,10 @@ class ElasticController:
                 f"{len(self.report.recoveries)} recoveries reached the "
                 f"--max-recoveries cap") from exc
         before_shape = tuple(dict(self.mesh.shape).values())
+        # (0) agree before re-meshing: the survivor set must be a
+        # *committed* epoch, and the fence inside guarantees no later
+        # epoch superseded it — the split-brain guard.
+        epoch = self._sync_membership()
         self.ckpt.wait()                       # drain any in-flight save
 
         # (1) plan the survivors' mesh FIRST: a ZeRO restore needs the
@@ -451,7 +516,8 @@ class ElasticController:
             after_shape=tuple(dict(new_mesh.shape).values()),
             healthy_after=tuple(sorted(self._healthy)),
             restored_step=rstep, plan_rebuilt=rebuilt,
-            restore_s=restore_s, remesh_s=remesh_s, replan_s=replan_s))
+            restore_s=restore_s, remesh_s=remesh_s, replan_s=replan_s,
+            epoch=epoch))
         logger.warning("recovered: %s", self.report.recoveries[-1])
         return rstep
 
@@ -482,6 +548,7 @@ class ElasticController:
             while step < self.total_steps:
                 try:
                     self._drain_preemptions()
+                    self._drain_membership()
                     self._apply_faults(step)
                     with substrate.set_mesh(self.mesh):
                         batch = self.dataset.sharded_batch(
@@ -512,6 +579,16 @@ class ElasticController:
                     step = self._recover(step, DeviceLoss(victims))
             self.ckpt.maybe_save(self.total_steps, self.state, force=True)
             self.ckpt.wait()
+        except QuorumLostError:
+            # Quorum lost: this member may be the minority island of a
+            # partition — re-meshing would split the brain.  Degrade
+            # gracefully instead: persist the state we hold, then halt.
+            logger.error("quorum lost at step %d: checkpointing and "
+                         "halting (no re-mesh without agreement)", step)
+            self.ckpt.wait()
+            self.ckpt.maybe_save(step, self.state, force=True)
+            self.ckpt.wait()
+            raise
         finally:
             self.watchdog.stop()
         return self.report

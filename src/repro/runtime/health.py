@@ -1,30 +1,47 @@
 """Real failure signals -> the controllers' ``mark_unhealthy`` path.
 
-The injected ``FaultPlan`` drives tests; production failures arrive as
+The injected ``FaultPlan`` drives tests; production failures arrive
+through three channels, and this module is the funnel that turns each
+into the one recovery path the controllers already own:
 
 * **runtime errors** — XLA surfaces dead devices as
   ``jax.errors.XlaRuntimeError`` (older stacks:
-  ``jaxlib.xla_extension.XlaRuntimeError``).  ``classify_failure`` decides
-  whether an exception is a device failure (vs. a plain bug that must
-  propagate) and extracts victim device ids from the message when XLA
-  names them;
+  ``jaxlib.xla_extension.XlaRuntimeError``).  ``classify_failure``
+  decides whether an exception is a device failure (vs. a plain bug that
+  must propagate) and extracts victim device ids when XLA names them.
+  Classification is deliberately two-tiered: strong markers ("device
+  lost", "preempt", ...) classify on their own, weak markers ("halted",
+  "terminated") only count next to the word "device" — a compile-time
+  "compilation terminated" is a bug to surface, not a failure to eat;
+
 * **preemption notices** — cloud schedulers announce evictions ahead of
-  time (SIGTERM handler, maintenance-event poller).  ``PreemptionNotice``
-  is the pluggable, thread-safe mailbox controllers drain at each step
-  boundary: post from any thread, the loop turns it into a graceful
-  drain + re-mesh *before* the hardware disappears;
+  time.  ``PreemptionNotice`` is the pluggable, thread-safe mailbox
+  controllers drain at each step boundary: post from any thread, the
+  loop turns it into a graceful drain + re-mesh *before* the hardware
+  disappears.  ``install_preemption_handler`` binds the mailbox to a
+  real signal (SIGTERM by default, chaining any previous handler), so
+  ``kill -TERM`` on a training process is a rehearsed drain, not a
+  corpse;
+
 * **survivor agreement** — on multi-host deployments every host sees its
   own failure evidence and the hosts must agree on one survivor set
   before re-meshing (MPIX_Comm_agree in the fault-tolerant MPI lineage).
-  ``agree_survivors`` is the single-host stub of that vote (intersection
-  over views) so the controllers already route through the right seam.
+  The real vote lives in ``repro.runtime.ctrlplane`` (heartbeats,
+  two-phase epoch-stamped agreement, quorum); ``agree_survivors`` here
+  is its single-host fast path — the same intersection rule
+  (``ctrlplane.intersect_views``) without the wire.  Controllers that
+  are handed a ``Membership`` route ``mark_unhealthy`` through the full
+  vote; everyone else gets identical semantics in-process.
 """
 
 from __future__ import annotations
 
 import re
+import signal
 import threading
-from typing import Iterable, Optional, Sequence, Set, Tuple
+from typing import Callable, Iterable, Optional, Sequence, Set, Tuple
+
+from repro.runtime.ctrlplane import intersect_views
 
 # Message fragments that mark a runtime error as a *device* failure.
 # Sources: XLA status payloads for device loss / preemption / collective
@@ -37,8 +54,6 @@ _DEVICE_FAILURE_MARKERS = (
     "unavailable:",
     "failed precondition",
     "preempt",
-    "halted",
-    "terminated",
     "socket closed",
     "connection reset",
     "peer down",
@@ -46,7 +61,18 @@ _DEVICE_FAILURE_MARKERS = (
     "dead device",
 )
 
-_DEVICE_ID_RE = re.compile(r"device[ _:#]*(\d+)", re.IGNORECASE)
+# Weak markers appear in non-failure payloads too ("compilation
+# terminated", "execution halted on error"): they classify only when the
+# word "device" appears as well.  \b keeps "device_count" from
+# qualifying — underscore is a word character, so there is no boundary
+# between "device" and "_count".
+_WEAK_FAILURE_MARKERS = ("halted", "terminated")
+_DEVICE_WORD_RE = re.compile(r"\bdevices?\b", re.IGNORECASE)
+
+# Victim extraction: "device 3", "device:5", "device #2" — but not
+# "device_count=8" (no boundary after "device" there: the id must be a
+# standalone number at most two punctuation chars after the word).
+_DEVICE_ID_RE = re.compile(r"\bdevice[ :#]{1,2}(\d+)\b", re.IGNORECASE)
 
 
 def _runtime_error_types() -> Tuple[type, ...]:
@@ -83,7 +109,10 @@ def classify_failure(exc: BaseException) -> Optional[Tuple[int, ...]]:
     if not isinstance(exc, _runtime_error_types()):
         return None
     msg = str(exc).lower()
-    if not any(marker in msg for marker in _DEVICE_FAILURE_MARKERS):
+    strong = any(marker in msg for marker in _DEVICE_FAILURE_MARKERS)
+    weak = (any(marker in msg for marker in _WEAK_FAILURE_MARKERS)
+            and _DEVICE_WORD_RE.search(msg) is not None)
+    if not (strong or weak):
         return None
     return tuple(sorted({int(m) for m in _DEVICE_ID_RE.findall(msg)}))
 
@@ -120,17 +149,46 @@ class PreemptionNotice:
             return bool(self._pending)
 
 
+def install_preemption_handler(notice: PreemptionNotice,
+                               device_ids: Optional[Sequence[int]] = None,
+                               signum: int = signal.SIGTERM) -> Callable:
+    """Bind ``notice`` to a real OS signal (default SIGTERM — what cloud
+    schedulers send ahead of eviction).  On delivery the handler posts
+    ``device_ids`` (default: every local jax device at signal time) into
+    the mailbox; the controller's step-boundary drain turns that into a
+    graceful drain + re-mesh.  Chains any previously installed callable
+    handler and returns it so callers can restore.  Must run on the main
+    thread (CPython restriction) — launch drivers call it; libraries
+    should not.
+    """
+    previous = signal.getsignal(signum)
+
+    def _handler(sig, frame):
+        if device_ids is not None:
+            ids = tuple(int(d) for d in device_ids)
+        else:
+            try:
+                import jax
+                ids = tuple(d.id for d in jax.devices())
+            except Exception:                        # pragma: no cover
+                ids = ()
+        notice.post(ids)
+        if callable(previous):
+            previous(sig, frame)
+
+    signal.signal(signum, _handler)
+    return previous
+
+
 def agree_survivors(local_view: Iterable[int],
                     peer_views: Sequence[Iterable[int]] = ()
                     ) -> Set[int]:
-    """Cross-host agreement stub on the survivor set (MPIX_Comm_agree
+    """Single-host fast path of the survivor vote (MPIX_Comm_agree
     shape): a device survives only if EVERY view still trusts it — the
     conservative intersection, so no host re-meshes over a device another
-    host watched die.  Single-host today: ``peer_views`` is empty and
-    this is the identity; multi-host wiring replaces the transport, not
-    the callers.
+    host watched die.  The multi-host protocol in
+    ``repro.runtime.ctrlplane`` commits exactly this rule
+    (``intersect_views``) under an epoch; here it is applied in-process
+    with no epoch to bump.
     """
-    survivors = set(int(d) for d in local_view)
-    for view in peer_views:
-        survivors &= set(int(d) for d in view)
-    return survivors
+    return intersect_views(local_view, peer_views)

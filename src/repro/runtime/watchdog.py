@@ -31,6 +31,7 @@ class StepWatchdog:
         self.stalls: List[float] = []
         self.stragglers: List[int] = []
         self._last = time.monotonic()
+        self._stall_fired = False
         self._beats = 0
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -71,16 +72,21 @@ class StepWatchdog:
                     self.on_straggler(self._beats, dt)
         self._beats += 1
         self._last = now
+        self._stall_fired = False        # re-arm: episode (if any) is over
 
     # -- monitor -----------------------------------------------------------
 
     def _run(self) -> None:
+        # One stall *episode* (beat silence crossing the timeout) fires
+        # on_stall exactly once; only the next beat() re-arms.  Without
+        # the debounce a 10-minute hang with a 5s timeout would fire the
+        # callback ~120 times — 119 redundant abort/restore attempts.
         while not self._stop.wait(min(self.timeout / 4, 1.0)):
             silence = time.monotonic() - self._last
-            if silence > self.timeout:
+            if silence > self.timeout and not self._stall_fired:
+                self._stall_fired = True
                 self.stalls.append(silence)
                 self.on_stall(silence)
-                self._last = time.monotonic()    # re-arm
 
     def _default_stall(self, silence: float) -> None:
         logger.error("watchdog: no step heartbeat for %.1fs (timeout %.1fs)",

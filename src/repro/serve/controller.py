@@ -46,6 +46,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from repro.runtime import elastic, health
 from repro.runtime.controller import (DeviceLoss, FaultPlan,
                                       TooManyRecoveries)
+from repro.runtime.ctrlplane import Membership, QuorumLostError
 from repro.runtime.watchdog import StepWatchdog
 from repro.serve.engine import BatchScheduler, Request, ServeCfg
 from repro.serve.state import load_snapshot, save_snapshot
@@ -92,6 +93,8 @@ class ServeRecovery:
     snapshot_bytes: int = 0          # page-granular bytes the drain moved
     snapshot_bytes_contiguous: int = 0   # what full max_len rows would
                                          # have cost (pre-PR-9 layout)
+    epoch: Optional[int] = None      # committed membership epoch (None:
+                                     # no control plane attached)
 
     @property
     def total_s(self) -> float:
@@ -148,7 +151,10 @@ class ServeController:
     for real XLA runtime errors steer real signals into the same
     recovery.  ``snapshot_dir`` persists each drained snapshot through
     the atomic checkpoint layer — the fallback image when a loss is so
-    hard the live drain itself fails.
+    hard the live drain itself fails.  ``membership`` (a
+    ``repro.runtime.ctrlplane.Membership``) attaches the multi-host
+    control plane: re-meshes happen only on committed, fenced epochs and
+    quorum loss snapshots + halts with ``QuorumLostError``.
     """
 
     def __init__(self, model, params, cfg: ServeCfg, *, comm,
@@ -157,7 +163,8 @@ class ServeController:
                  watchdog_timeout: float = 300.0,
                  snapshot_dir: Optional[str] = None,
                  snapshot_every: int = 0,
-                 preemption: Optional[health.PreemptionNotice] = None):
+                 preemption: Optional[health.PreemptionNotice] = None,
+                 membership: Optional[Membership] = None):
         self.model = model
         self.cfg0 = cfg
         self.comm = comm
@@ -166,12 +173,17 @@ class ServeController:
         self.snapshot_dir = snapshot_dir
         self.snapshot_every = snapshot_every
         self.preemption = preemption
+        self.membership = membership
+        self._ctrl_epoch = 0         # last membership epoch acted on
         self.report = ServeReport()
 
         mesh = comm.mesh
         devs = list(mesh.devices.flatten())
         self._pool: List[Any] = devs                 # canonical order
         self._healthy = {d.id for d in devs}
+        if membership is not None:
+            membership.bind_view(lambda: sorted(self._healthy))
+            membership.start()
         sizes = dict(mesh.shape)
         # The ORIGINAL layout: re-planning aims back at it, so a shrunken
         # deployment regains full batch + parallelism when devices return.
@@ -217,9 +229,48 @@ class ServeController:
 
     def mark_unhealthy(self, device_ids: Sequence[int]) -> None:
         """Health probes / preemption notices land here; the survivor set
-        goes through the cross-host agreement seam before any re-mesh."""
-        self._healthy = health.agree_survivors(
-            self._healthy - set(device_ids))
+        goes through cross-host agreement before any re-mesh — the full
+        epoch-stamped vote when a ``Membership`` is attached, its
+        in-process fast path (``health.agree_survivors``) otherwise."""
+        local = self._healthy - set(device_ids)
+        if self.membership is not None:
+            view = self.membership.agree(sorted(local))
+            self._healthy = set(view.survivors)
+            self._ctrl_epoch = view.epoch
+        else:
+            self._healthy = health.agree_survivors(local)
+
+    def _drain_membership(self) -> None:
+        """Decode-step-boundary drain of passively served votes: a commit
+        that shrank the survivor set below our view is a device loss
+        decided elsewhere — drain + re-mesh over it (same epoch)."""
+        if self.membership is None:
+            return
+        view = self.membership.poll_commit()
+        if view is None or view.epoch <= self._ctrl_epoch:
+            return
+        lost = self._healthy - set(view.survivors)
+        self._healthy = set(view.survivors)
+        self._ctrl_epoch = view.epoch
+        if lost:
+            logger.warning("membership epoch %d committed without "
+                           "devices %s — draining", view.epoch,
+                           sorted(lost))
+            raise DeviceLoss(tuple(lost))
+
+    def _sync_membership(self) -> Optional[int]:
+        """Pre-re-mesh agreement + fence (see ElasticController): every
+        recovery re-meshes only on a committed, un-superseded epoch."""
+        if self.membership is None:
+            return None
+        view = self.membership.poll_commit()
+        if not (view is not None and view.epoch == self._ctrl_epoch
+                and set(view.survivors) == self._healthy):
+            view = self.membership.agree(sorted(self._healthy))
+            self._healthy = set(view.survivors)
+            self._ctrl_epoch = view.epoch
+        self.membership.fence(view.epoch)
+        return view.epoch
 
     def _drain_preemptions(self) -> None:
         if self.preemption is None or not self.preemption.pending:
@@ -306,6 +357,9 @@ class ServeController:
                 f"--max-recoveries cap")
         before_shape = tuple(dict(self.comm.mesh.shape).values())
         batch_before = self.sched.cfg.batch
+        # (0) agree before re-meshing: survivors must be a committed,
+        # fenced epoch (rehearsals vote too — the drill is the protocol).
+        epoch = self._sync_membership()
 
         t0 = time.perf_counter()
         snap = self._snapshot()
@@ -348,7 +402,8 @@ class ServeController:
             plan_rebuilt=rebuilt, snapshot_s=snapshot_s,
             remesh_s=remesh_s, rebuild_s=rebuild_s,
             snapshot_bytes=snapshot_bytes,
-            snapshot_bytes_contiguous=snapshot_bytes_contig)
+            snapshot_bytes_contiguous=snapshot_bytes_contig,
+            epoch=epoch)
         self.report.recoveries.append(rec)
         self._note_mesh(mesh)
         logger.warning("recovered: %s", self.report.describe()
@@ -374,6 +429,7 @@ class ServeController:
             while self.sched.pending():
                 try:
                     self._drain_preemptions()
+                    self._drain_membership()
                     self._apply_faults(self._step)
                     self._check_stall(self._step)
                     self.sched.step()
@@ -392,6 +448,17 @@ class ServeController:
                                    victims, e)
                     self.mark_unhealthy(victims)
                     self._recover(self._step, kind="lose")
+        except QuorumLostError:
+            # Below quorum this member must not re-mesh (it may be the
+            # minority island of a partition): snapshot what it holds,
+            # then halt — the saved image re-admits on restart.
+            logger.error("quorum lost at decode step %d: snapshotting "
+                         "and halting (no re-mesh without agreement)",
+                         self._step)
+            snap = self.sched.snapshot()
+            if self.snapshot_dir is not None:
+                save_snapshot(self.snapshot_dir, snap, self._step)
+            raise
         finally:
             self.watchdog.stop()
         self.report.completed = list(self.sched.completed)

@@ -1,8 +1,9 @@
 """tools/check_api.py wired into tier-1: the repo's own training/serving/
 elastic paths must route distributed work through repro.comm — no
 CollectiveEngine construction and no direct jax.lax collectives outside
-src/repro/core and src/repro/comm — and (rule 5) all serving cache
-memory through repro.serve.paging."""
+src/repro/core and src/repro/comm — (rule 5) all serving cache memory
+through repro.serve.paging — and (rule 6) all control-plane transports
+and sockets inside repro.runtime.ctrlplane."""
 
 import os
 import sys
@@ -84,6 +85,39 @@ def test_lint_catches_cache_creation_outside_pool():
                "a = paging.abstract_caches(model, 1, 512, dtype=dt)\n")
     assert not check_api.check_source(blessed,
                                       "src/repro/serve/engine.py")
+
+
+def test_lint_catches_transports_and_sockets_outside_ctrlplane():
+    """PR 10 (rule 6): the control-plane wire format lives ONLY in
+    repro.runtime.ctrlplane — controllers hold a Membership, never a
+    transport or a socket."""
+    for snippet in ("t = TcpTransport(port=9001)\n",
+                    "t = ctrlplane.TcpTransport(port=9001)\n",
+                    "t = LocalTransport(fab, 'a')\n",
+                    "fab = LocalFabric()\n",
+                    "fab = cp.LocalFabric()\n",
+                    "import socket\n",
+                    "import socket as sk\n",
+                    "from socket import create_server\n",
+                    "import socket\ns = socket.socket()\n",
+                    "import socket\ns = socket.create_connection(a)\n",
+                    "import socket\ns = socket.create_server(a)\n"):
+        out = check_api.check_source(snippet,
+                                     "src/repro/runtime/controller.py")
+        assert out and "ctrlplane" in out[0], snippet
+    # the chokepoint module itself stays exempt
+    ok = ("import socket\n"
+          "t = TcpTransport(port=9001)\n"
+          "fab = LocalFabric()\n"
+          "s = socket.create_server(('127.0.0.1', 0))\n")
+    assert not check_api.check_source(ok,
+                                      "src/repro/runtime/ctrlplane.py")
+    # consuming the vote is the blessed path
+    blessed = ("m = ctrlplane.connect(port=9001, peers=peers)\n"
+               "view = m.agree(sorted(healthy))\n"
+               "m.fence(view.epoch)\n")
+    assert not check_api.check_source(blessed,
+                                      "src/repro/runtime/controller.py")
 
 
 def test_lint_exempts_core_and_comm():

@@ -1,0 +1,505 @@
+"""Control-plane membership protocol (PR 10).
+
+In-process tests drive transports, the heartbeat failure detector, the
+seeded message-fault injector, and the two-phase epoch-stamped survivor
+vote over ``LocalFabric`` (wire-compatible with TCP: every message takes
+a JSON round-trip).  The subprocess tests then prove the acceptance
+contract end-to-end: two REAL controller processes over ``TcpTransport``
+with a one-sided partition commit the same (survivor set, epoch) and
+each stays bit-identical to its own survivor-mesh baseline (the PR 3
+invariant, now cross-process); and a member that loses quorum
+checkpoints and halts with ``QuorumLostError`` instead of re-meshing.
+"""
+
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from conftest import REPO, run_subprocess_script
+from repro.runtime import ctrlplane as cp
+
+FAST = cp.CtrlConfig(heartbeat_interval=0.02, heartbeat_timeout=0.1,
+                     suspicions=3, vote_interval=0.02, agree_timeout=5.0)
+
+
+def _members(fabric, names, views, config=FAST, plans=None):
+    ms = {}
+    for n in names:
+        t = fabric.transport(n)
+        if plans and n in plans:
+            t = plans[n].wrap(t)
+        ms[n] = cp.Membership(t, peers=names, config=config)
+        ms[n].bind_view(lambda n=n: views[n])
+        ms[n].start()
+    return ms
+
+
+def _vote_all(ms, views, timeout=10.0):
+    out = {}
+    def vote(n):
+        out[n] = ms[n].agree(views[n])
+    threads = [threading.Thread(target=vote, args=(n,)) for n in ms]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+    assert len(out) == len(ms), "a vote never returned"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+def test_local_transport_takes_the_json_roundtrip():
+    fab = cp.LocalFabric()
+    a, b = fab.transport("a"), fab.transport("b")
+    a.send("b", {"kind": "x", "view": (3, 1, 2)})
+    msg = b.recv(timeout=1.0)
+    assert msg == {"kind": "x", "view": [3, 1, 2]}   # tuples -> lists
+    assert b.recv(timeout=0.01) is None
+    a.send("nobody", {"kind": "x"})                  # unknown dest: dropped
+
+
+def test_tcp_transport_length_prefixed_frames():
+    a = cp.TcpTransport(port=0)
+    b = cp.TcpTransport(port=0, peers={a.member: ("127.0.0.1", a.port)})
+    try:
+        assert a.member == f"127.0.0.1:{a.port}"
+        for i in range(5):
+            b.send(a.member, {"kind": "hb", "n": i, "src": b.member})
+        got = [a.recv(timeout=2.0) for _ in range(5)]
+        assert [m["n"] for m in got] == list(range(5))
+        assert all(m["src"] == b.member for m in got)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_tcp_send_to_dead_peer_is_best_effort():
+    t = cp.TcpTransport(port=0, peers={"x": ("127.0.0.1", 1)})
+    try:
+        t.send("x", {"kind": "hb"})                  # refused: no raise
+        t.send("x", {"kind": "hb"})                  # backing off: no raise
+        assert t._backoff["x"] > 0                   # backoff armed
+    finally:
+        t.close()
+
+
+def test_parse_peers():
+    assert cp.parse_peers("127.0.0.1:9001, 10.0.0.2:9002") == {
+        "127.0.0.1:9001": ("127.0.0.1", 9001),
+        "10.0.0.2:9002": ("10.0.0.2", 9002)}
+    assert cp.parse_peers("") == {}
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+# ---------------------------------------------------------------------------
+
+def test_ctrl_fault_plan_parse_and_validation():
+    plan = cp.CtrlFaultPlan.parse("drop@3:2,delay@5:4,dup@2,partition@0:40")
+    assert [(e.kind, e.step, e.count) for e in plan.events] == \
+        [("partition", 0, 40), ("dup", 2, 1), ("drop", 3, 2),
+         ("delay", 5, 4)]
+    with pytest.raises(ValueError):
+        cp.CtrlFaultEvent(0, "mangle")
+    with pytest.raises(ValueError):
+        cp.CtrlFaultEvent(0, "drop", count=0)
+    # delay jitter is pure in (seed, step)
+    ev = cp.CtrlFaultEvent(5, "delay", 4)
+    assert plan.delay_for(ev, 6) == plan.delay_for(ev, 6)
+    assert cp.CtrlFaultPlan([ev], seed=1).delay_for(ev, 6) \
+        != cp.CtrlFaultPlan([ev], seed=2).delay_for(ev, 6)
+
+
+def test_fault_plan_drop_dup_partition_semantics():
+    fab = cp.LocalFabric()
+    rx = fab.transport("rx")
+    plan = cp.CtrlFaultPlan([cp.CtrlFaultEvent(0, "drop", 2),
+                             cp.CtrlFaultEvent(2, "dup", 1),
+                             cp.CtrlFaultEvent(4, "partition", 3)])
+    tx = plan.wrap(fab.transport("tx"))
+    for n in range(8):                # sends 0..7
+        tx.send("rx", {"n": n})
+    got = []
+    while True:
+        m = rx.recv(timeout=0.2)
+        if m is None:
+            break
+        got.append(m["n"])
+    # 0,1 dropped; 2 duplicated; 3 passes; 4,5,6 partitioned; 7 passes
+    assert got == [2, 2, 3, 7], got
+    assert tx.sent == 8 and tx.dropped == 5
+
+
+def test_fault_plan_delay_defers_delivery():
+    fab = cp.LocalFabric()
+    rx = fab.transport("rx")
+    plan = cp.CtrlFaultPlan([cp.CtrlFaultEvent(0, "delay", 1,
+                                               delay_s=0.2)])
+    tx = plan.wrap(fab.transport("tx"))
+    t0 = time.monotonic()
+    tx.send("rx", {"n": 0})
+    assert rx.recv(timeout=0.05) is None             # not yet
+    assert rx.recv(timeout=2.0) == {"n": 0}
+    assert time.monotonic() - t0 >= 0.2
+
+
+# ---------------------------------------------------------------------------
+# Failure detector
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detector_suspicions_death_resurrection():
+    fab = cp.LocalFabric()
+    views = {"a": [0], "b": [0]}
+    m = cp.Membership(fab.transport("a"), peers=["a", "b"], config=FAST)
+    m.bind_view(lambda: views["a"])
+    m.start()
+    try:
+        ghost = fab.transport("b")                   # b: no beats yet
+        deadline = time.monotonic() + 3.0
+        while "b" in m.alive_peers() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert m.alive_peers() == ()                 # declared dead
+        assert m.suspicion_count("b") >= FAST.suspicions
+        # ANY message resurrects — a healed partition re-admits
+        ghost.send("a", {"kind": "hb", "src": "b"})
+        deadline = time.monotonic() + 2.0
+        while "b" not in m.alive_peers() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert m.alive_peers() == ("b",)
+        assert m.suspicion_count("b") == 0
+    finally:
+        m.close()
+
+
+# ---------------------------------------------------------------------------
+# The vote
+# ---------------------------------------------------------------------------
+
+def test_single_member_fast_path_matches_agree_survivors():
+    from repro.runtime import health
+    fab = cp.LocalFabric()
+    m = cp.Membership(fab.transport("solo"))
+    v1 = m.agree({0, 1, 2, 3})
+    assert v1.epoch == 1
+    assert set(v1.survivors) == health.agree_survivors({0, 1, 2, 3})
+    v2 = m.agree({0, 1})                             # epochs are monotone
+    assert v2.epoch == 2 and v2.survivors == (0, 1)
+    assert m.poll_commit() == v2
+
+
+def test_symmetric_vote_commits_identical_set_and_epoch():
+    fab = cp.LocalFabric()
+    names = ["a", "b", "c"]
+    views = {"a": [0, 1, 2, 3, 4, 5], "b": [0, 1, 2, 3, 4, 5, 6, 7],
+             "c": [0, 1, 2, 3, 4, 5, 7]}
+    ms = _members(fab, names, views)
+    try:
+        out = _vote_all(ms, views)
+        assert len(set(out.values())) == 1, out      # one (set, epoch)
+        v = out["a"]
+        assert v.survivors == (0, 1, 2, 3, 4, 5)     # intersection
+        assert v.members == ("a", "b", "c")
+    finally:
+        for m in ms.values():
+            m.close()
+
+
+def test_passive_member_adopts_the_commit():
+    fab = cp.LocalFabric()
+    views = {"a": [0, 1, 2], "b": [0, 1, 2, 3]}
+    ms = _members(fab, ["a", "b"], views)
+    try:
+        va = ms["a"].agree(views["a"])               # only a votes
+        assert va.survivors == (0, 1, 2)
+        deadline = time.monotonic() + 3.0
+        while ms["b"].poll_commit() != va and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert ms["b"].poll_commit() == va           # b served passively
+        assert ms["b"].epoch == va.epoch
+    finally:
+        for m in ms.values():
+            m.close()
+
+
+def test_vote_survives_dropped_and_duplicated_messages():
+    fab = cp.LocalFabric()
+    views = {"a": [0, 1, 2, 3], "b": [1, 2, 3, 4]}
+    plans = {"a": cp.CtrlFaultPlan([cp.CtrlFaultEvent(0, "drop", 4),
+                                    cp.CtrlFaultEvent(6, "dup", 3)])}
+    ms = _members(fab, ["a", "b"], views, plans=plans)
+    try:
+        out = _vote_all(ms, views)
+        assert out["a"] == out["b"]
+        assert out["a"].survivors == (1, 2, 3)
+    finally:
+        for m in ms.values():
+            m.close()
+
+
+def test_vote_survives_one_sided_partition():
+    # a's first 25 sends vanish (one-sided: b -> a still flows); the
+    # re-broadcast cadence heals the round once the window passes and
+    # both commit the same epoch
+    fab = cp.LocalFabric()
+    views = {"a": [0, 1, 2, 3, 4, 5], "b": [0, 1, 2, 3, 4, 5, 6, 7]}
+    plans = {"a": cp.CtrlFaultPlan([cp.CtrlFaultEvent(0, "partition",
+                                                      25)])}
+    ms = _members(fab, ["a", "b"], views, plans=plans)
+    try:
+        out = _vote_all(ms, views, timeout=15.0)
+        assert out["a"] == out["b"], out
+        assert out["a"].survivors == (0, 1, 2, 3, 4, 5)
+        assert ms["a"].transport.dropped == 25
+    finally:
+        for m in ms.values():
+            m.close()
+
+
+def test_fence_raises_on_stale_and_uncommitted_epochs():
+    fab = cp.LocalFabric()
+    m = cp.Membership(fab.transport("solo"))
+    with pytest.raises(cp.StaleEpochError):
+        m.fence(0)                                   # nothing committed
+    v1 = m.agree({0, 1, 2})
+    v2 = m.agree({0, 1})
+    assert m.fence(v2.epoch) == v2                   # committed: passes
+    with pytest.raises(cp.StaleEpochError):
+        m.fence(v1.epoch)                            # superseded
+    with pytest.raises(cp.StaleEpochError):
+        m.fence(v2.epoch + 1)                        # from the future
+
+
+def test_quorum_loss_raises_instead_of_minority_commit():
+    fab = cp.LocalFabric()
+    cfg = cp.CtrlConfig(heartbeat_interval=0.02, heartbeat_timeout=0.05,
+                        suspicions=2, vote_interval=0.02,
+                        agree_timeout=0.6)
+    m = cp.Membership(fab.transport("a"), peers=["a", "b", "c"],
+                      config=cfg)
+    m.start()
+    try:
+        assert m.quorum == 2
+        with pytest.raises(cp.QuorumLostError):
+            m.agree([0, 1, 2, 3])                    # b, c never answer
+        assert m.poll_commit() is None               # nothing committed
+    finally:
+        m.close()
+
+
+def test_membership_view_is_comparable_and_ordered():
+    v = cp.MembershipView(3, [5, 1, 3], ["b", "a"])
+    assert v.epoch == 3
+    assert v.survivors == (1, 3, 5)                  # sorted, deduped
+    assert v.members == ("a", "b")
+    assert v == cp.MembershipView(3, (1, 3, 5), ("a", "b"))
+    assert v != cp.MembershipView(4, (1, 3, 5), ("a", "b"))
+
+
+# ---------------------------------------------------------------------------
+# Controllers under the control plane (subprocess: 8 fake devices)
+# ---------------------------------------------------------------------------
+
+def test_quorum_loss_checkpoints_then_halts():
+    """A member whose peers are unreachable loses quorum on the first
+    device loss: the controller must save a final checkpoint and raise
+    QuorumLostError instead of re-meshing a minority island."""
+    run_subprocess_script("""
+import tempfile
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, TrainSession
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        registry, topology_from_mesh)
+from repro.data import SyntheticLMDataset
+from repro.runtime import (ElasticController, FaultEvent, FaultPlan,
+                           QuorumLostError, ctrlplane, substrate)
+
+# 3 declared members, but the two peers never come up -> quorum 2 of 3
+# can never assemble once a vote is needed
+membership = ctrlplane.connect(
+    port=0, peers="127.0.0.1:1,127.0.0.1:2",
+    config=ctrlplane.CtrlConfig(heartbeat_interval=0.1,
+                                heartbeat_timeout=0.3, suspicions=2,
+                                vote_interval=0.05, agree_timeout=3.0))
+tmp = tempfile.mkdtemp()
+cfg = get_config("granite-34b", reduced=True)
+tcfg = TrainCfg(sync_mode="composed", data_axes=("data",))
+session = TrainSession(build_model(cfg), make_optimizer("adamw", lr=1e-3),
+                       tcfg)
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=12)
+mesh0 = substrate.make_mesh((4, 2), ("data", "model"))
+engine = CollectiveEngine(topology_from_mesh(mesh0),
+                          library=compose_library(registry.ALL_FUNCTIONS),
+                          config=EngineConfig(mode="composed"))
+ctl = ElasticController(
+    session, ds, mesh0, total_steps=6, ckpt_dir=tmp, engine=engine,
+    ckpt_every=2, ckpt_keep=0,
+    fault_plan=FaultPlan([FaultEvent(3, "lose", 2)], seed=1),
+    watchdog_timeout=600.0, membership=membership)
+try:
+    ctl.run()
+    raise SystemExit("expected QuorumLostError")
+except QuorumLostError as e:
+    print("halted:", e)
+assert not ctl.report.recoveries            # no re-mesh happened
+# graceful degradation: state was checkpointed before the halt
+restored, rstep = ctl.ckpt.restore_latest(session.abstract_state())
+assert restored is not None and rstep == 3, rstep
+membership.close()
+print("OK quorum loss checkpointed at", rstep)
+""", timeout=600)
+
+
+_CHILD = """
+import tempfile
+import jax
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import TrainCfg, TrainSession
+from repro.core import (CollectiveEngine, EngineConfig, compose_library,
+                        registry, topology_from_mesh)
+from repro.checkpoint.manager import restore_checkpoint
+from repro.data import SyntheticLMDataset
+from repro.runtime import (ElasticController, FaultEvent, FaultPlan,
+                           ctrlplane, substrate)
+from repro.runtime.elastic import make_mesh_from_shape, remesh
+
+# Heartbeats are effectively off: the transport's send counter then
+# advances only with vote traffic, so the partition window @CPLAN@
+# deterministically covers the opening of the vote (the detector's
+# any-message resurrection path re-admits the peer when it heals).
+membership = ctrlplane.connect(
+    port=@PORT@, peers="127.0.0.1:@PEER@",
+    config=ctrlplane.CtrlConfig(heartbeat_interval=1000.0,
+                                heartbeat_timeout=0.5, suspicions=3,
+                                vote_interval=0.05, agree_timeout=240.0),
+    fault_plan=@CPLAN@)
+tmp = tempfile.mkdtemp()
+cfg = get_config("granite-34b", reduced=True)
+tcfg = TrainCfg(sync_mode="composed", data_axes=("data",))
+session = TrainSession(build_model(cfg), make_optimizer("adamw", lr=1e-3),
+                       tcfg)
+ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                        global_batch=12)
+mesh0 = substrate.make_mesh((4, 2), ("data", "model"))
+engine = CollectiveEngine(topology_from_mesh(mesh0),
+                          library=compose_library(registry.ALL_FUNCTIONS),
+                          config=EngineConfig(mode="composed"))
+ctl = ElasticController(
+    session, ds, mesh0, total_steps=@STEPS@, ckpt_dir=tmp, engine=engine,
+    ckpt_every=2, ckpt_keep=0, fault_plan=@FPLAN@,
+    watchdog_timeout=600.0, membership=membership, @THROTTLE@)
+report = ctl.run()
+
+assert len(report.recoveries) == 1, report.describe()
+rec = report.recoveries[0]
+assert rec.kind == "lose"
+assert rec.epoch == 1, rec                   # ONE committed epoch
+assert rec.after_shape == (3, 2), rec
+assert len(rec.healthy_after) == 6
+
+# The PR 3 invariant per member: every loss from the restored step on is
+# bit-identical to a run trained on this member's survivor mesh from the
+# same checkpoint.
+surv = [d for d in jax.devices() if d.id in rec.healthy_after]
+mesh6 = make_mesh_from_shape((3, 2), devices=surv)
+eng6 = CollectiveEngine(topology_from_mesh(mesh6),
+                        library=compose_library(registry.ALL_FUNCTIONS),
+                        config=EngineConfig(mode="composed"))
+state = restore_checkpoint(tmp, session.abstract_state(),
+                           step=rec.restored_step)
+state = remesh(state, session.state_specs(), mesh6)
+with substrate.set_mesh(mesh6):
+    jstep = jax.jit(session.step_fn(mesh=mesh6, engine=eng6),
+                    donate_argnums=0)
+    for s in range(rec.restored_step, @STEPS@):
+        batch = ds.sharded_batch(s, mesh6, batch_axes=("data",))
+        state, metrics = jstep(state, batch)
+        assert float(metrics["loss"]) == report.losses[s], s
+membership.close()
+print("COMMIT epoch=" + str(rec.epoch) + " survivors="
+      + ",".join(str(d) for d in rec.healthy_after))
+"""
+
+
+def test_two_processes_agree_under_one_sided_partition():
+    """The acceptance tentpole, cross-process: member A (which locally
+    injects lose@5:2 AND suffers a one-sided partition — its first 40
+    control-plane sends vanish) and member B (no local faults; it learns
+    of the loss purely from the committed vote it served passively) must
+    commit the identical (survivor set, epoch=1) pair, and each member's
+    recovery stays bit-identical to its own survivor-mesh baseline."""
+    import socket as _socket   # test scaffolding; src/ is lint-clean
+    srvs = [_socket.socket(), _socket.socket()]
+    for s in srvs:
+        s.bind(("127.0.0.1", 0))
+    pa, pb = (s.getsockname()[1] for s in srvs)
+    for s in srvs:
+        s.close()
+
+    def child(code):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        return subprocess.Popen([sys.executable, "-c", code], env=env,
+                                stdout=subprocess.PIPE,
+                                stderr=subprocess.PIPE, text=True)
+
+    # A: injects the device loss at step 5 and votes; partitioned out
+    # for its first 40 sends.  B: no local faults — its recovery is
+    # drain-triggered by A's committed vote.  B's step loop is throttled
+    # (1s/step) so its drain window stays open however the scheduler
+    # interleaves the two children; without it B can finish its run
+    # before A's step-5 vote even starts.
+    code_a = (_CHILD.replace("@PORT@", str(pa)).replace("@PEER@", str(pb))
+              .replace("@STEPS@", "8").replace("@THROTTLE@", "")
+              .replace("@FPLAN@", "FaultPlan([FaultEvent(5, 'lose', 2)], "
+                                  "seed=1)")
+              .replace("@CPLAN@",
+                       "ctrlplane.CtrlFaultPlan.parse('partition@0:40')"))
+    code_b = (_CHILD.replace("@PORT@", str(pb)).replace("@PEER@", str(pa))
+              .replace("@STEPS@", "40")
+              .replace("@THROTTLE@",
+                       "on_step=lambda s, l: "
+                       "__import__('time').sleep(1.0)")
+              .replace("@FPLAN@", "None").replace("@CPLAN@", "None"))
+    procs = [child(code_a), child(code_b)]
+    results = []
+    try:
+        for p in procs:
+            out, err = p.communicate(timeout=900)
+            results.append((p.returncode, out, err))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    for rc, out, err in results:
+        if rc != 0:
+            tail = err.strip()[-3000:]
+            if tail.splitlines() and any(
+                    tail.splitlines()[-1].startswith(m)
+                    for m in ("ImportError", "ModuleNotFoundError")):
+                pytest.skip("child died at import:\n" + tail[-800:])
+            raise AssertionError("child rc=%d:\n%s\n---- other child ----"
+                                 "\n%s" % (rc, tail,
+                                           "\n".join(r[2].strip()[-1500:]
+                                                     for r in results
+                                                     if r[0] == 0)))
+    outs = [r[1] for r in results]
+
+    commits = [line for out in outs for line in out.splitlines()
+               if line.startswith("COMMIT ")]
+    assert len(commits) == 2, outs
+    # split-brain-free: both processes committed the identical pair
+    assert commits[0] == commits[1], commits
+    assert "epoch=1" in commits[0], commits

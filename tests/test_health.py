@@ -1,6 +1,9 @@
 """Real-failure-signal plumbing: runtime-error classification, the
-preemption-notice mailbox, and the cross-host survivor-agreement stub."""
+preemption-notice mailbox (and its SIGTERM binding), and the single-host
+fast path of the cross-host survivor vote."""
 
+import os
+import signal
 import threading
 
 import jax
@@ -33,6 +36,44 @@ def test_classify_extracts_victim_ids():
     assert health.classify_failure(e) == (3, 5)
 
 
+def test_classify_rejects_user_valueerror_with_devicey_message():
+    # regression: "device_count=8" must neither classify nor yield a
+    # bogus victim id — a user bug propagates untouched
+    assert health.classify_failure(
+        ValueError("bad config: device_count=8")) is None
+
+
+def test_classify_rejects_compile_time_termination():
+    # regression: a compile-time XlaRuntimeError whose payload contains
+    # "terminated" + device-count noise is NOT a device failure —
+    # "terminated"/"halted" are weak markers that only count next to the
+    # word "device", and "device_count"/"devices available: 0" must not
+    # produce victim ids
+    e = _runtime_error("INTERNAL: compilation terminated: "
+                       "device_count=8")
+    assert health.classify_failure(e) is None
+    e2 = _runtime_error("INTERNAL: lowering terminated with errors; "
+                        "0 accelerators configured")
+    assert health.classify_failure(e2) is None
+
+
+def test_device_id_regex_ignores_count_like_phrases():
+    # the satellite's two exemplar strings must extract NO victim ids
+    assert health._DEVICE_ID_RE.findall("device_count=8") == []
+    assert health._DEVICE_ID_RE.findall("devices available: 0") == []
+    # while real victim spellings still do
+    assert health._DEVICE_ID_RE.findall(
+        "device 3 halted; device:5 halted; device #7 gone") \
+        == ["3", "5", "7"]
+
+
+def test_classify_weak_marker_with_device_context_still_fires():
+    # "halted"/"terminated" remain classifiable when XLA names a device
+    e = _runtime_error("UNAVAILABLE: execution halted: device 4 "
+                       "unreachable")
+    assert health.classify_failure(e) == (4,)
+
+
 def test_classify_device_failure_without_ids():
     # the runtime knows something died but not what: classified, empty
     # victim set — the controller leans on probes/watchdog to refine
@@ -62,6 +103,27 @@ def test_preemption_notice_mailbox_threadsafe():
     assert not notice.pending and notice.drain() == ()
 
 
+def test_preemption_handler_posts_on_sigterm():
+    # install on a spare signal so the test never races the harness's
+    # own SIGTERM handling; the handler chain + restore contract is the
+    # same code path as the SIGTERM default
+    notice = health.PreemptionNotice()
+    chained = []
+    prev_installed = signal.signal(
+        signal.SIGUSR1, lambda s, f: chained.append(s))
+    try:
+        previous = health.install_preemption_handler(
+            notice, device_ids=(1, 4), signum=signal.SIGUSR1)
+        os.kill(os.getpid(), signal.SIGUSR1)
+        deadline = 50
+        while not notice.pending and deadline:
+            deadline -= 1
+        assert notice.drain() == (1, 4)
+        assert chained == [signal.SIGUSR1]    # previous handler chained
+    finally:
+        signal.signal(signal.SIGUSR1, prev_installed)
+
+
 def test_agree_survivors_intersection():
     # single-host: identity
     assert health.agree_survivors({0, 1, 2}) == {0, 1, 2}
@@ -69,3 +131,10 @@ def test_agree_survivors_intersection():
     assert health.agree_survivors({0, 1, 2}, [{1, 2, 3}, {0, 1, 2}]) \
         == {1, 2}
     assert health.agree_survivors({0, 1}, [set()]) == set()
+
+
+def test_agree_survivors_is_the_ctrlplane_fast_path():
+    # the in-process helper and the protocol commit the same rule
+    from repro.runtime import ctrlplane
+    assert health.agree_survivors({0, 1, 2}, [{1, 2, 3}]) \
+        == ctrlplane.intersect_views({0, 1, 2}, [{1, 2, 3}])

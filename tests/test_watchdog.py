@@ -1,0 +1,50 @@
+"""StepWatchdog stall debounce: one ``on_stall`` per silence episode.
+
+The monitor polls at timeout/4, so an un-debounced watchdog would fire
+the stall callback on every poll for as long as one hang persists —
+each firing looks like a fresh stall to the controller.  The contract
+is: fire once when silence first crosses the timeout, stay quiet until
+the next ``beat()`` re-arms, then a second episode fires again.
+"""
+
+import time
+
+from repro.runtime import StepWatchdog
+
+
+def test_stall_fires_once_per_episode_and_rearms_on_beat():
+    events = []
+    wd = StepWatchdog(timeout=0.15, on_stall=lambda s: events.append(s))
+    wd.start()
+    try:
+        wd.beat()
+        # episode 1: stay silent for many poll intervals (~10 polls at
+        # timeout/4) — without the debounce this fires several times
+        time.sleep(0.6)
+        assert len(events) == 1, events
+        assert len(wd.stalls) == 1
+
+        # the next beat ends the episode and re-arms the detector
+        wd.beat()
+        time.sleep(0.05)
+        assert len(events) == 1           # no firing while beating
+
+        # episode 2: a fresh silence crossing fires exactly once more
+        time.sleep(0.6)
+        assert len(events) == 2, events
+        assert len(wd.stalls) == 2
+    finally:
+        wd.stop()
+
+
+def test_no_stall_while_beating():
+    events = []
+    wd = StepWatchdog(timeout=0.2, on_stall=lambda s: events.append(s))
+    wd.start()
+    try:
+        for _ in range(10):
+            time.sleep(0.03)
+            wd.beat()
+        assert events == []
+    finally:
+        wd.stop()

@@ -33,6 +33,14 @@ EXCEPT the implementation layers ``src/repro/core`` and ``src/repro/comm``:
      Everything else creates caches via ``paging.contiguous_caches`` /
      ``paging.abstract_caches`` and moves rows via ``PagePool``.
 
+  6. no control-plane transport construction (``TcpTransport``,
+     ``LocalTransport``, ``LocalFabric``) and no raw socket use
+     (``import socket`` or ``socket.socket``/``create_connection``/
+     ``create_server`` calls) outside ``src/repro/runtime/ctrlplane.py``
+     (PR 10): the controllers consume the membership vote through
+     ``ctrlplane.connect`` / ``Membership``, they never speak the wire
+     format.
+
 Pure AST walk, no imports of the checked code.  Wired into tier-1 via
 ``tests/test_api_lint.py``; also runnable standalone:
 
@@ -81,6 +89,13 @@ IR_NODES = frozenset({"CommUnit", "CommOp", "ComputeOp", "Schedule"})
 CACHE_CALLS = frozenset({"init_caches", "splice_cache", "extract_cache"})
 CACHE_EXEMPT = ("src/repro/serve/paging.py", "src/repro/models/")
 
+#: control-plane chokepoints (rule 6): transports and raw sockets exist
+#: only inside the ctrlplane module — everything else holds a Membership.
+TRANSPORT_CTORS = frozenset({"TcpTransport", "LocalTransport",
+                             "LocalFabric"})
+SOCKET_CALLS = frozenset({"socket", "create_connection", "create_server"})
+CTRL_EXEMPT = ("src/repro/runtime/ctrlplane.py",)
+
 #: path prefixes (relative to repo root, "/"-separated) that ARE the
 #: implementation and may touch engines/lax freely.
 EXEMPT = ("src/repro/core/", "src/repro/comm/")
@@ -118,7 +133,23 @@ def check_source(src: str, relpath: str) -> List[str]:
     out: List[str] = []
     aliases = _lax_aliases(tree)
     cache_exempt = any(relpath.startswith(p) for p in CACHE_EXEMPT)
+    ctrl_exempt = any(relpath.startswith(p) for p in CTRL_EXEMPT)
     for node in ast.walk(tree):
+        # import socket / from socket import ... — raw wire use (rule 6)
+        if not ctrl_exempt:
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.split(".")[0] == "socket":
+                        out.append(f"{relpath}:{node.lineno}: imports "
+                                   f"socket — the control-plane wire lives "
+                                   f"in repro.runtime.ctrlplane only (use "
+                                   f"ctrlplane.connect)")
+            elif (isinstance(node, ast.ImportFrom)
+                  and (node.module or "").split(".")[0] == "socket"):
+                out.append(f"{relpath}:{node.lineno}: imports from socket "
+                           f"— the control-plane wire lives in "
+                           f"repro.runtime.ctrlplane only (use "
+                           f"ctrlplane.connect)")
         # from jax.lax import psum — aliasing a collective out of lax
         if isinstance(node, ast.ImportFrom) and node.module == "jax.lax":
             for alias in node.names:
@@ -147,6 +178,13 @@ def check_source(src: str, relpath: str) -> List[str]:
                        f"repro.serve.paging — cache memory is owned by "
                        f"PagePool (use paging.contiguous_caches / "
                        f"paging.abstract_caches)")
+        # TcpTransport(...) etc. — transport construction (rule 6)
+        elif (isinstance(fn, ast.Name) and fn.id in TRANSPORT_CTORS
+              and not ctrl_exempt):
+            out.append(f"{relpath}:{node.lineno}: constructs {fn.id} — "
+                       f"control-plane transports are built only inside "
+                       f"repro.runtime.ctrlplane (use ctrlplane.connect "
+                       f"and pass the Membership around)")
         elif isinstance(fn, ast.Attribute):
             # <anything>.CollectiveEngine(...)
             if fn.attr == "CollectiveEngine":
@@ -176,6 +214,21 @@ def check_source(src: str, relpath: str) -> List[str]:
                            f"outside repro.serve.paging — cache memory is "
                            f"owned by PagePool (use paging."
                            f"contiguous_caches / paging.abstract_caches)")
+            # <anything>.TcpTransport(...) etc. (rule 6)
+            elif fn.attr in TRANSPORT_CTORS and not ctrl_exempt:
+                out.append(f"{relpath}:{node.lineno}: constructs "
+                           f"{fn.attr} — control-plane transports are "
+                           f"built only inside repro.runtime.ctrlplane "
+                           f"(use ctrlplane.connect and pass the "
+                           f"Membership around)")
+            # socket.socket(...) / socket.create_server(...) (rule 6)
+            elif (fn.attr in SOCKET_CALLS and not ctrl_exempt
+                  and isinstance(fn.value, ast.Name)
+                  and fn.value.id == "socket"):
+                out.append(f"{relpath}:{node.lineno}: calls socket."
+                           f"{fn.attr} — the control-plane wire lives in "
+                           f"repro.runtime.ctrlplane only (use "
+                           f"ctrlplane.connect)")
             # engine._allreduce_1d_start(...) etc. — private phase arms
             elif _is_private_phase_arm(fn.attr):
                 out.append(f"{relpath}:{node.lineno}: calls private "
