@@ -146,6 +146,15 @@ def main() -> None:
                     help="TCP port this member's control plane listens "
                          "on (0 = ephemeral; peers must name the real "
                          "port)")
+    ap.add_argument("--ctrl-host", default="127.0.0.1",
+                    help="address this member is ADVERTISED as — what "
+                         "the peers' --ctrl-peers lists call it (the "
+                         "member id defaults to '<ctrl-host>:<port>'); "
+                         "the listener binds all interfaces regardless")
+    ap.add_argument("--ctrl-member", default="",
+                    help="explicit member id, when the peers' lists use "
+                         "'name=host:port' entries instead of raw "
+                         "endpoints")
     ap.add_argument("--heartbeat-interval", type=float, default=0.5,
                     help="control-plane heartbeat cadence in seconds "
                          "(peer declared dead after interval-derived "
@@ -213,7 +222,9 @@ def main() -> None:
                                                    seed=args.fault_seed)
                      if args.ctrl_fault_plan else None)
             membership = ctrlplane.connect(
-                port=args.ctrl_port, peers=args.ctrl_peers,
+                args.ctrl_member or None,
+                port=args.ctrl_port, host=args.ctrl_host,
+                peers=args.ctrl_peers,
                 config=ctrlplane.CtrlConfig(
                     heartbeat_interval=args.heartbeat_interval,
                     heartbeat_timeout=5 * args.heartbeat_interval),

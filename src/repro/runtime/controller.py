@@ -41,7 +41,8 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.runtime import elastic, health, substrate
-from repro.runtime.ctrlplane import Membership, QuorumLostError
+from repro.runtime.ctrlplane import (Membership, QuorumLostError,
+                                     StaleEpochError)
 from repro.runtime.watchdog import StepWatchdog
 
 logger = logging.getLogger("repro.runtime")
@@ -261,7 +262,10 @@ class ElasticController:
         self._axis_names = tuple(mesh.axis_names)
         if membership is not None:
             # Passive vote path: peers' rounds are answered with this
-            # controller's live healthy view even mid-step.
+            # controller's live healthy view even mid-step.  The reader
+            # runs on the membership recv thread, so _healthy is only
+            # ever REBOUND to a new set, never mutated in place —
+            # sorted() over a set mutated mid-iteration raises.
             membership.bind_view(lambda: sorted(self._healthy))
             membership.start()
         # The *original* parallelism layout: re-planning always aims back
@@ -372,17 +376,31 @@ class ElasticController:
         already holds one (the committed view IS our healthy set) and
         reuses it; a locally detected loss votes here.  The fence makes
         the decision final: if a later epoch committed meanwhile, this
-        recovery must not re-mesh."""
+        recovery must not re-mesh — it adopts the newer committed view
+        and redoes the agreement on top of it (multi-failure races
+        supersede decisions, they must not crash the run)."""
         if self.membership is None:
             return None
-        view = self.membership.poll_commit()
-        if not (view is not None and view.epoch == self._ctrl_epoch
-                and set(view.survivors) == self._healthy):
-            view = self.membership.agree(sorted(self._healthy))
-            self._healthy = set(view.survivors)
-            self._ctrl_epoch = view.epoch
-        self.membership.fence(view.epoch)
-        return view.epoch
+        while True:
+            view = self.membership.poll_commit()
+            if not (view is not None and view.epoch == self._ctrl_epoch
+                    and set(view.survivors) == self._healthy):
+                view = self.membership.agree(sorted(self._healthy))
+                self._healthy = set(view.survivors)
+                self._ctrl_epoch = view.epoch
+            try:
+                self.membership.fence(view.epoch)
+            except StaleEpochError:
+                newer = self.membership.poll_commit()
+                logger.warning("membership epoch %d superseded before "
+                               "re-mesh (committed: %s) — retrying the "
+                               "agreement", view.epoch,
+                               newer.epoch if newer else None)
+                if newer is not None:
+                    self._healthy = set(newer.survivors)
+                    self._ctrl_epoch = newer.epoch
+                continue
+            return view.epoch
 
     def _drain_preemptions(self) -> None:
         """Step-boundary drain of the preemption mailbox: an announced
@@ -406,7 +424,7 @@ class ElasticController:
             if ev.kind == LOSE:
                 victims = self.fault_plan.pick_victims(
                     sorted(self._healthy), ev.count, step)
-                self._healthy -= set(victims)
+                self._healthy = self._healthy - set(victims)
                 logger.warning("step %d: injected loss of devices %s",
                                step, victims)
                 raise DeviceLoss(victims)
@@ -418,7 +436,7 @@ class ElasticController:
                     logger.warning("step %d: gain event with no lost "
                                    "devices — ignored", step)
                     continue
-                self._healthy |= set(back)
+                self._healthy = self._healthy | set(back)
                 logger.warning("step %d: devices %s returned", step, back)
                 self._grow(step)
             elif ev.kind == STALL:

@@ -166,21 +166,36 @@ _MAX_FRAME = 1 << 20
 class TcpTransport:
     """Length-prefixed JSON frames over sockets, one listener per member.
 
+    Addressing is split three ways for multi-host deployments: the
+    listener binds ``bind_host`` (default ``0.0.0.0`` — peers dial in
+    over whatever interface routes here), ``host`` is the *advertised*
+    address peers know this member by, and ``member`` is the id stamped
+    on every message (default ``host:<bound port>``).  The id must match
+    what peers carry in THEIR ``peers`` map, never the bind address —
+    on a real deployment the two differ and a loopback-derived id would
+    make every peer drop this member's messages as unknown.
+
     ``peers`` maps member id -> ``(host, port)``.  Sends are best-effort
     (the control plane tolerates loss by re-broadcasting): an
     unreachable peer costs one connect attempt, then goes into
     exponential backoff with jitter — ``reconnect_backoff`` doubling up
     to ``reconnect_backoff_max``, so a dead host is not hammered and a
-    healed one is re-dialed promptly."""
+    healed one is re-dialed promptly.  Connection state (conn, backoff,
+    lock) is per-peer: one peer blocking in its connect timeout must not
+    stall heartbeats and vote traffic to the healthy ones — that jitter
+    would land exactly during the partial failures the vote must
+    survive."""
 
     def __init__(self, member: Optional[str] = None, *, port: int = 0,
                  host: str = "127.0.0.1",
+                 bind_host: Optional[str] = None,
                  peers: Optional[Mapping[str, Tuple[str, int]]] = None,
                  reconnect_backoff: float = 0.2,
                  reconnect_backoff_max: float = 2.0,
                  reconnect_jitter: float = 0.25,
                  seed: int = 0):
-        self._server = socket.create_server((host, port))
+        self._server = socket.create_server(
+            (bind_host if bind_host is not None else "0.0.0.0", port))
         self._server.settimeout(0.2)
         self.port = self._server.getsockname()[1]
         self.member = member or f"{host}:{self.port}"
@@ -193,7 +208,8 @@ class TcpTransport:
         self._bmax = reconnect_backoff_max
         self._jitter = reconnect_jitter
         self._rnd = random.Random(seed)
-        self._send_lock = threading.Lock()
+        self._state_lock = threading.Lock()    # guards the per-peer maps
+        self._peer_locks: Dict[str, threading.Lock] = {}
         self._closed = threading.Event()
         self._accept_thread = threading.Thread(target=self._accept_loop,
                                                daemon=True)
@@ -245,12 +261,19 @@ class TcpTransport:
 
     # -- send side --------------------------------------------------------
 
+    def _peer_lock(self, dest: str) -> threading.Lock:
+        with self._state_lock:
+            lock = self._peer_locks.get(dest)
+            if lock is None:
+                lock = self._peer_locks[dest] = threading.Lock()
+            return lock
+
     def send(self, dest: str, msg: dict) -> None:
         if self._closed.is_set() or dest not in self._peers:
             return
         data = json.dumps(msg).encode()
         frame = _FRAME.pack(len(data)) + data
-        with self._send_lock:
+        with self._peer_lock(dest):
             now = time.monotonic()
             conn = self._conns.get(dest)
             if conn is None:
@@ -274,8 +297,9 @@ class TcpTransport:
     def _arm_backoff(self, dest: str, now: float) -> None:
         b = min(self._backoff.get(dest, self._b0 / 2) * 2, self._bmax)
         self._backoff[dest] = b
-        self._next_try[dest] = now + b * (1 + self._jitter
-                                          * self._rnd.random())
+        with self._state_lock:
+            jitter = self._jitter * self._rnd.random()
+        self._next_try[dest] = now + b * (1 + jitter)
 
     def close(self) -> None:
         self._closed.set()
@@ -283,13 +307,12 @@ class TcpTransport:
             self._server.close()
         except OSError:
             pass
-        with self._send_lock:
-            for conn in self._conns.values():
-                try:
-                    conn.close()
-                except OSError:
-                    pass
-            self._conns.clear()
+        for conn in list(self._conns.values()):
+            try:
+                conn.close()
+            except OSError:
+                pass
+        self._conns.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -810,12 +833,16 @@ class Membership:
 
 def parse_peers(spec: str) -> Dict[str, Tuple[str, int]]:
     """``"127.0.0.1:9001,10.0.0.2:9001"`` -> {member id: (host, port)}.
-    The member id IS the ``host:port`` string, so every process derives
-    the same name for the same endpoint."""
+    The member id defaults to the ``host:port`` string itself, so every
+    process derives the same name for the same endpoint; an explicit
+    ``name=host:port`` entry decouples the two (NAT, DNS aliases, or
+    any deployment where members dial an address that is not the id)."""
     peers: Dict[str, Tuple[str, int]] = {}
     for part in filter(None, (p.strip() for p in spec.split(","))):
-        host, _, port = part.rpartition(":")
-        peers[f"{host}:{int(port)}"] = (host, int(port))
+        name, eq, endpoint = part.partition("=")
+        endpoint = endpoint if eq else part
+        host, _, port = endpoint.rpartition(":")
+        peers[name if eq else f"{host}:{int(port)}"] = (host, int(port))
     return peers
 
 
@@ -826,6 +853,7 @@ def local_fabric() -> LocalFabric:
 
 def connect(member: Optional[str] = None, *, port: int = 0,
             host: str = "127.0.0.1",
+            bind_host: Optional[str] = None,
             peers: "str | Mapping[str, Tuple[str, int]]" = "",
             config: Optional[CtrlConfig] = None,
             quorum: Optional[int] = None,
@@ -833,10 +861,15 @@ def connect(member: Optional[str] = None, *, port: int = 0,
     """Build a TCP control-plane member and start its threads — the ONE
     public way to get on the wire (``tools/check_api.py`` rule 6 forbids
     transport construction and raw sockets everywhere else).  ``peers``
-    is the *other* members as a ``host:port`` comma list (or a prebuilt
-    mapping); this member's id defaults to ``host:<bound port>``."""
+    is the *other* members as a ``[name=]host:port`` comma list (or a
+    prebuilt mapping).  ``host`` is the address this member is
+    *advertised* as — what the peers' lists call it — and the member id
+    defaults to ``host:<bound port>``; the listener itself binds
+    ``bind_host`` (default all interfaces), which on a multi-host
+    deployment is a different thing from the advertised address."""
     pmap = parse_peers(peers) if isinstance(peers, str) else dict(peers)
-    transport = TcpTransport(member, port=port, host=host, peers=pmap)
+    transport = TcpTransport(member, port=port, host=host,
+                             bind_host=bind_host, peers=pmap)
     if fault_plan is not None:
         transport = fault_plan.wrap(transport)
     return Membership(transport, peers=tuple(pmap),

@@ -46,7 +46,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from repro.runtime import elastic, health
 from repro.runtime.controller import (DeviceLoss, FaultPlan,
                                       TooManyRecoveries)
-from repro.runtime.ctrlplane import Membership, QuorumLostError
+from repro.runtime.ctrlplane import (Membership, QuorumLostError,
+                                     StaleEpochError)
 from repro.runtime.watchdog import StepWatchdog
 from repro.serve.engine import BatchScheduler, Request, ServeCfg
 from repro.serve.state import load_snapshot, save_snapshot
@@ -182,6 +183,8 @@ class ServeController:
         self._pool: List[Any] = devs                 # canonical order
         self._healthy = {d.id for d in devs}
         if membership is not None:
+            # The reader runs on the membership recv thread: _healthy is
+            # only ever rebound to a new set, never mutated in place.
             membership.bind_view(lambda: sorted(self._healthy))
             membership.start()
         sizes = dict(mesh.shape)
@@ -260,17 +263,31 @@ class ServeController:
 
     def _sync_membership(self) -> Optional[int]:
         """Pre-re-mesh agreement + fence (see ElasticController): every
-        recovery re-meshes only on a committed, un-superseded epoch."""
+        recovery re-meshes only on a committed, un-superseded epoch; a
+        fence tripped by a concurrent later commit adopts that view and
+        retries the agreement instead of crashing the run."""
         if self.membership is None:
             return None
-        view = self.membership.poll_commit()
-        if not (view is not None and view.epoch == self._ctrl_epoch
-                and set(view.survivors) == self._healthy):
-            view = self.membership.agree(sorted(self._healthy))
-            self._healthy = set(view.survivors)
-            self._ctrl_epoch = view.epoch
-        self.membership.fence(view.epoch)
-        return view.epoch
+        while True:
+            view = self.membership.poll_commit()
+            if not (view is not None and view.epoch == self._ctrl_epoch
+                    and set(view.survivors) == self._healthy):
+                view = self.membership.agree(sorted(self._healthy))
+                self._healthy = set(view.survivors)
+                self._ctrl_epoch = view.epoch
+            try:
+                self.membership.fence(view.epoch)
+            except StaleEpochError:
+                newer = self.membership.poll_commit()
+                logger.warning("membership epoch %d superseded before "
+                               "re-mesh (committed: %s) — retrying the "
+                               "agreement", view.epoch,
+                               newer.epoch if newer else None)
+                if newer is not None:
+                    self._healthy = set(newer.survivors)
+                    self._ctrl_epoch = newer.epoch
+                continue
+            return view.epoch
 
     def _drain_preemptions(self) -> None:
         if self.preemption is None or not self.preemption.pending:
@@ -293,7 +310,7 @@ class ServeController:
             if ev.kind == "lose":
                 victims = self.fault_plan.pick_victims(
                     sorted(self._healthy), ev.count, step)
-                self._healthy -= set(victims)
+                self._healthy = self._healthy - set(victims)
                 logger.warning("decode step %d: injected loss of "
                                "devices %s", step, victims)
                 raise DeviceLoss(victims)
@@ -305,7 +322,7 @@ class ServeController:
                     logger.warning("decode step %d: gain with nothing "
                                    "lost — ignored", step)
                     continue
-                self._healthy |= set(back)
+                self._healthy = self._healthy | set(back)
                 logger.warning("decode step %d: devices %s returned",
                                step, back)
                 self._recover(step, kind="grow")

@@ -95,6 +95,67 @@ def test_parse_peers():
         "127.0.0.1:9001": ("127.0.0.1", 9001),
         "10.0.0.2:9002": ("10.0.0.2", 9002)}
     assert cp.parse_peers("") == {}
+    # name=host:port decouples the member id from the dialed endpoint
+    assert cp.parse_peers("a=10.0.0.1:9001, 10.0.0.2:9002") == {
+        "a": ("10.0.0.1", 9001),
+        "10.0.0.2:9002": ("10.0.0.2", 9002)}
+
+
+def test_tcp_member_id_decoupled_from_bind_address():
+    """The multi-host regression: the advertised member id must be
+    honored verbatim (never derived from the bind address) — a peer's
+    ``_on_message`` drops messages from unknown ids, so a loopback-
+    derived id on a real deployment would declare every peer dead.  Two
+    members advertised as "alpha"/"beta" but bound to loopback must
+    still find each other and commit one (survivor set, epoch)."""
+    ta = cp.TcpTransport("alpha", port=0, bind_host="127.0.0.1")
+    tb = cp.TcpTransport("beta", port=0, bind_host="127.0.0.1",
+                         peers={"alpha": ("127.0.0.1", ta.port)})
+    ta._peers["beta"] = ("127.0.0.1", tb.port)   # late wiring: test only
+    assert ta.member == "alpha" and tb.member == "beta"
+    views = {"alpha": [0, 1, 2], "beta": [1, 2, 3]}
+    ms = {}
+    for name, t in (("alpha", ta), ("beta", tb)):
+        ms[name] = cp.Membership(t, peers=("alpha", "beta"), config=FAST)
+        ms[name].bind_view(lambda name=name: views[name])
+        ms[name].start()
+    try:
+        out = _vote_all(ms, views)
+        assert out["alpha"] == out["beta"]
+        assert out["alpha"].survivors == (1, 2)
+        assert out["alpha"].members == ("alpha", "beta")
+    finally:
+        for m in ms.values():
+            m.close()
+
+
+def test_tcp_slow_peer_does_not_stall_sends_to_others(monkeypatch):
+    """Connection state is per-peer: a peer blocking in its connect
+    timeout must not delay heartbeats/votes to healthy peers (that
+    jitter would land exactly during partial failures)."""
+    a = cp.TcpTransport(port=0)
+    b = cp.TcpTransport(port=0, peers={a.member: ("127.0.0.1", a.port),
+                                       "dead": ("127.0.0.1", 1)})
+    real = cp.socket.create_connection
+    def connect(addr, timeout=None):
+        if addr == ("127.0.0.1", 1):
+            time.sleep(0.6)
+            raise OSError("unreachable")
+        return real(addr, timeout=timeout)
+    monkeypatch.setattr(cp.socket, "create_connection", connect)
+    try:
+        t = threading.Thread(target=b.send, args=("dead", {"kind": "hb"}))
+        t.start()
+        time.sleep(0.1)                  # the dead dial is now blocking
+        t0 = time.monotonic()
+        b.send(a.member, {"kind": "hb", "src": b.member})
+        assert time.monotonic() - t0 < 0.3   # did not wait for the dial
+        got = a.recv(timeout=2.0)
+        assert got == {"kind": "hb", "src": b.member}
+        t.join()
+    finally:
+        a.close()
+        b.close()
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +335,49 @@ def test_fence_raises_on_stale_and_uncommitted_epochs():
         m.fence(v1.epoch)                            # superseded
     with pytest.raises(cp.StaleEpochError):
         m.fence(v2.epoch + 1)                        # from the future
+
+
+def _racy_membership():
+    """agree() hands back epoch 1, but a concurrent vote commits epoch 2
+    before the fence — the multi-failure race _sync_membership must
+    absorb by adopting the newer committed view and retrying."""
+    class Racy:
+        def __init__(self):
+            self.v1 = cp.MembershipView(1, (0, 1, 2), ("a", "b"))
+            self.v2 = cp.MembershipView(2, (0, 1), ("a", "b"))
+            self.committed = None
+            self.agreed = []
+        def poll_commit(self):
+            return self.committed
+        def agree(self, view):
+            self.agreed.append(tuple(view))
+            if self.committed is None:
+                self.committed = self.v2     # the racing vote lands now
+                return self.v1               # ...but WE got epoch 1 back
+            return self.committed
+        def fence(self, epoch):
+            if self.committed is None or epoch != self.committed.epoch:
+                raise cp.StaleEpochError(f"epoch {epoch} superseded")
+            return self.committed
+    return Racy()
+
+
+@pytest.mark.parametrize("controller", ["elastic", "serve"])
+def test_sync_membership_retries_a_superseded_epoch(controller):
+    """A commit racing in between agree() and fence() must re-drive the
+    agreement at the newer epoch, not crash the run with
+    StaleEpochError (both controllers share the contract)."""
+    from types import SimpleNamespace
+    if controller == "elastic":
+        from repro.runtime.controller import ElasticController as cls
+    else:
+        from repro.serve.controller import ServeController as cls
+    ctl = SimpleNamespace(membership=_racy_membership(),
+                          _healthy={0, 1, 2, 3}, _ctrl_epoch=0)
+    epoch = cls._sync_membership(ctl)
+    assert epoch == 2                        # settled on the NEWER epoch
+    assert ctl._ctrl_epoch == 2 and ctl._healthy == {0, 1}
+    assert ctl.membership.agreed == [(0, 1, 2, 3)]   # no re-vote needed
 
 
 def test_quorum_loss_raises_instead_of_minority_commit():
